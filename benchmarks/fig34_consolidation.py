@@ -1,0 +1,62 @@
+"""Paper Figures 3-4: (a) multi-workload throughput surfaces vs (N, FS) at
+RS = 64KB and 256KB on M1 with the predicted TDPs (Eqn 2) overlaid;
+(b) additive-model validation (Eqn 3 prediction vs simulator ground truth)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    M1,
+    Workload,
+    corun_throughput_grid,
+    predict_degradations,
+    predict_tdp_n,
+    simulate_corun,
+)
+from repro.core.contention import profile_pairwise_fast
+from repro.core.units import KB, MB
+from repro.core.workload import FS_GRID
+
+
+def run(emit):
+    fs_grid = [f for f in FS_GRID if f <= 8 * MB]
+    n_grid = list(range(1, 9))
+
+    for rs in (64 * KB, 256 * KB):
+        t0 = time.perf_counter()
+        grid = corun_throughput_grid(M1, rs, fs_grid, n_grid)
+        dt = (time.perf_counter() - t0) * 1e6 / grid.size
+        # locate the observed cliff per N and compare with Eqn-2 prediction
+        hits, preds = [], []
+        for ni, n in enumerate(n_grid):
+            drop = grid[ni] / grid[ni][0]
+            cliff = next((fs_grid[j] for j in range(len(fs_grid)) if drop[j] < 0.5), None)
+            if cliff is not None and n > 1:
+                # predicted critical FS from Eqn (1): alpha*C/n - rs, alpha=tolerance
+                pred = M1.llc_tolerance * M1.llc_bytes / n - rs
+                hits.append(cliff)
+                preds.append(pred)
+        if hits:
+            ratio = float(np.mean(np.asarray(hits) / np.asarray(preds)))
+        else:
+            ratio = float("nan")
+        emit(f"fig34a/tdp_surface/rs={int(rs/KB)}KB", dt,
+             f"cliffs_found={len(hits)};observed_over_predicted={ratio:.2f}")
+
+    # (b) model validation: Eqn-3 prediction vs actual for N = 2..5
+    D = profile_pairwise_fast(M1)
+    t0 = time.perf_counter()
+    errs = []
+    for rs in (64 * KB, 256 * KB):
+        for fs in (256 * KB, 512 * KB, 1 * MB):
+            for n in (2, 3, 4, 5):
+                ws = [Workload(fs=fs, rs=rs)] * n
+                pred = predict_degradations(D, ws)
+                act = np.asarray(simulate_corun(M1, ws).degradations)
+                if act.max() < 0.5:  # the paper validates in the useful regime
+                    errs.append(np.abs(pred - act).max())
+    dt = (time.perf_counter() - t0) * 1e6 / max(len(errs), 1)
+    emit("fig34b/additive_model_validation", dt,
+         f"cases={len(errs)};max_abs_err={max(errs):.4f};mean_abs_err={np.mean(errs):.4f}")

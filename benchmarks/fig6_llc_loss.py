@@ -1,0 +1,26 @@
+"""Paper Figure 6: the effect of losing the LLC on throughput -- degradation
+exceeds 50% for every RS > 8KB (the basis of criterion 2)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import M1, M2, Workload
+from repro.core.simulator import throughput_after_cache
+from repro.core.units import KB, MB
+from repro.core.workload import RS_GRID
+
+
+def run(emit):
+    for server in (M1, M2):
+        t0 = time.perf_counter()
+        rows = []
+        for rs in RS_GRID:
+            w = Workload(fs=2 * MB, rs=rs)
+            keep = throughput_after_cache(server, w, False)
+            lose = throughput_after_cache(server, w, True)
+            rows.append((rs, 1 - lose / keep))
+        dt = (time.perf_counter() - t0) * 1e6 / len(rows)
+        above = [rs for rs, d in rows if d > 0.5]
+        threshold = min(above) / KB if above else float("inf")
+        emit(f"fig6/{server.name}", dt,
+             f"deg_at_512KB={rows[-1][1]:.3f};first_RS_above_50pct={threshold:.0f}KB")

@@ -1,0 +1,41 @@
+"""Shared setup for the paper-reproduction benchmarks: Table I servers,
+Table III initial states + arrival sequences, profiled D matrices."""
+from __future__ import annotations
+
+import functools
+
+from repro.core import (
+    PAPER_CLUSTER,
+    ClusterState,
+    parse_workloads,
+    profile_pairwise_fast,
+    snap_to_grid,
+)
+
+INITIAL = {
+    0: "(32KB, 64KB), (4KB, 16KB), (16KB, 32MB)",
+    1: "(32KB, 64MB), (512KB, 2MB), (128KB, 512KB)",
+    2: "(256KB, 1MB), (4KB, 2MB), (32KB, 8MB)",
+    3: "(2KB, 32KB), (512KB, 64MB), (8KB, 4MB)",
+}
+SEQUENCES = [
+    "(16KB, 64KB), (32KB, 1MB), (64KB, 64MB), (32KB, 2MB), (8KB, 64MB)",
+    "(4KB, 16KB), (2KB, 16MB), (2KB, 8KB), (32KB, 256KB), (16KB, 64MB)",
+    "(256KB, 2MB), (8KB, 3MB), (32KB, 64MB), (4KB, 256MB), (8KB, 32MB)",
+]
+
+
+@functools.lru_cache(maxsize=None)
+def d_matrices():
+    return tuple(profile_pairwise_fast(s) for s in PAPER_CLUSTER)
+
+
+def paper_state(alpha: float = 1.3) -> ClusterState:
+    state = ClusterState.empty(list(PAPER_CLUSTER), list(d_matrices()), alpha=alpha)
+    for i, txt in INITIAL.items():
+        state.assignments[i] = [snap_to_grid(w) for w in parse_workloads(txt)]
+    return state
+
+
+def sequences():
+    return [[snap_to_grid(w) for w in parse_workloads(s)] for s in SEQUENCES]

@@ -1,0 +1,40 @@
+"""Deliverable g: the roofline table, read from the dry-run artifacts
+(artifacts/dryrun/*.json). Reports the three terms, the dominant bottleneck,
+MODEL_FLOPS/HLO ratio and the roofline fraction per (arch x shape) cell."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from repro.launch.roofline import CellArtifact
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def run(emit):
+    if not ARTIFACTS.exists():
+        emit("roofline/missing", 0.0, "run `python -m repro.launch.dryrun --all` first")
+        return
+    t0 = time.perf_counter()
+    count = 0
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if "skip" in rec:
+            emit(f"roofline/{rec['cell']}", 0.0, rec["skip"])
+            continue
+        art = CellArtifact(**rec)
+        if art.mesh != "single":
+            continue  # the roofline table is single-pod (multi-pod proves sharding)
+        t = art.terms()
+        count += 1
+        emit(
+            f"roofline/{art.cell}",
+            (time.perf_counter() - t0) * 1e6 / max(count, 1),
+            f"compute={t['compute_s']*1e3:.2f}ms;memory={t['memory_s']*1e3:.2f}ms;"
+            f"collective={t['collective_s']*1e3:.2f}ms;bottleneck={art.bottleneck()};"
+            f"useful_flops={art.useful_flops_ratio():.3f};"
+            f"roofline_frac={art.roofline_fraction():.4f};"
+            f"mem_per_dev={art.peak_memory_per_device/2**30:.2f}GiB;"
+            f"fits={art.extras.get('fits_hbm')}",
+        )

@@ -1,0 +1,60 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §7).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9]
+
+Output format: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (
+    fig6_llc_loss,
+    fig9_greedy_vs_optimal,
+    fig12_single_workload,
+    fig34_consolidation,
+    roofline_table,
+    scale_scheduler,
+    table2_greedy_example,
+)
+
+MODULES = [
+    ("fig12", fig12_single_workload),
+    ("fig34", fig34_consolidation),
+    ("fig6", fig6_llc_loss),
+    ("table2", table2_greedy_example),
+    ("fig9", fig9_greedy_vs_optimal),
+    ("scale", scale_scheduler),
+    ("roofline", roofline_table),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run benches whose tag contains this")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+
+    def emit(name: str, us: float, derived: str):
+        print(f"{name},{us:.2f},{derived}")
+        sys.stdout.flush()
+
+    failures = []
+    for tag, mod in MODULES:
+        if args.only and args.only not in tag:
+            continue
+        try:
+            mod.run(emit)
+        except Exception as e:  # noqa: BLE001 -- report and continue
+            failures.append((tag, e))
+            traceback.print_exc()
+            emit(f"{tag}/ERROR", 0.0, repr(e)[:120])
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark modules failed: {[t for t, _ in failures]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Beyond-paper: scheduler throughput at fleet scale -- the pure-Python
+greedy vs the vectorized JAX greedy (jit + lax.scan) vs the Pallas scoring
+kernel (interpret mode on CPU; the derived column reports per-decision cost).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    M1,
+    M2,
+    ClusterState,
+    PackedCluster,
+    Workload,
+    counts_from_assignments,
+    greedy_sequence,
+    greedy_sequence_jax,
+    profile_pairwise_fast,
+    snap_to_grid,
+)
+from repro.core.workload import FS_GRID, RS_GRID
+
+
+def _random_workloads(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        snap_to_grid(Workload(fs=float(rng.choice(FS_GRID[:18])), rs=float(rng.choice(RS_GRID))))
+        for _ in range(n)
+    ]
+
+
+def run(emit):
+    servers = [M1, M2] * 8  # a 16-server rack
+    D = [profile_pairwise_fast(s) for s in servers[:2]] * 8
+    arrivals = _random_workloads(64)
+
+    # python greedy
+    state = ClusterState.empty(servers, D, alpha=1.3)
+    t0 = time.perf_counter()
+    placements, queued = greedy_sequence(state, arrivals)
+    py_us = (time.perf_counter() - t0) * 1e6 / len(arrivals)
+    emit("scale/greedy_python/16srv", py_us,
+         f"placed={sum(p is not None for p in placements)};queued={len(queued)}")
+
+    # beyond-paper: offline local-search refinement on top of the greedy
+    from repro.core.refine import local_search
+
+    t0 = time.perf_counter()
+    refined, n_moves = local_search(state, max_iters=20)
+    ref_us = (time.perf_counter() - t0) * 1e6
+    emit("scale/greedy+local_search/16srv", ref_us,
+         f"moves={n_moves};load_before={state.total_avg_load():.3f};"
+         f"load_after={refined.total_avg_load():.3f}")
+
+    # jax greedy (jit)
+    cluster = PackedCluster.build(servers, D, alpha=1.3)
+    counts0 = counts_from_assignments(cluster, [[] for _ in servers])
+    wtypes = jnp.asarray([__import__("repro.core", fromlist=["type_index"]).type_index(w)
+                          for w in arrivals])
+    greedy_sequence_jax(cluster, counts0, wtypes)[1].block_until_ready()  # compile
+    t0 = time.perf_counter()
+    _, pj = greedy_sequence_jax(cluster, counts0, wtypes)
+    pj.block_until_ready()
+    jx_us = (time.perf_counter() - t0) * 1e6 / len(arrivals)
+    placed = int((np.asarray(pj) >= 0).sum())
+    emit("scale/greedy_jax/16srv", jx_us,
+         f"placed={placed};speedup_vs_python={py_us / jx_us:.1f}x")

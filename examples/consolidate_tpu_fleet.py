@@ -1,0 +1,46 @@
+"""The paper's algorithm at TPU-fleet scale (DESIGN.md §2): pack (arch x
+shape) serving/training jobs onto pod slices using resource vectors from the
+multi-pod dry-run artifacts.
+
+    PYTHONPATH=src python examples/consolidate_tpu_fleet.py
+
+Falls back to representative synthetic profiles when artifacts/dryrun is
+absent (run `python -m repro.launch.dryrun --all` to use measured vectors).
+"""
+import json
+import pathlib
+
+from repro.core import FleetState, JobProfile, PodSpec, fleet_throughput_report, pack_jobs
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+jobs = []
+if ART.exists():
+    for f in sorted(ART.glob("*__decode_32k__single.json")) + sorted(
+            ART.glob("*__prefill_32k__single.json")):
+        rec = json.loads(f.read_text())
+        if "skip" in rec:
+            continue
+        jobs.append(JobProfile(
+            name=rec["cell"], flops=rec["flops"] * rec["chips"],
+            bytes_accessed=rec["bytes_accessed"] * rec["chips"],
+            collective_bytes=rec["collective_bytes"] * rec["chips"],
+            hbm_bytes=rec["peak_memory_per_device"], chips=rec["chips"],
+        ))
+if not jobs:
+    print("(no dry-run artifacts; using synthetic job profiles)")
+    jobs = [JobProfile(name=f"svc{i}", flops=3e15 * (1 + i % 3),
+                       bytes_accessed=4e14, collective_bytes=2e13,
+                       hbm_bytes=(2 + i % 4) * 2**30, chips=256)
+            for i in range(10)]
+
+fleet = FleetState.empty([PodSpec(name=f"pod{i}") for i in range(4)], model="additive")
+placements, fleet = pack_jobs(fleet, jobs)
+
+print(f"{len(jobs)} jobs -> 4 pods")
+for job, p in zip(jobs, placements):
+    print(f"  {job.name[:48]:48s} -> {'pod %d' % p if p is not None else 'QUEUED (criteria)'}")
+print("\nper-pod report:")
+for row in fleet_throughput_report(fleet):
+    print(f"  {row['pod']}: {row['job'][:40]:40s} degradation={row['degradation']:5.1%} "
+          f"eff={row['eff_steps_per_s']:.2f} steps/s (solo {row['solo_steps_per_s']:.2f})")

@@ -1,0 +1,52 @@
+"""Quickstart: the paper's consolidation pipeline end to end in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. profile pairwise degradations D_{i,j} on the Table-I servers (the 52_900-
+   run experiment of §VIII, vectorized);
+2. pack an arriving workload sequence with the greedy of Fig 8;
+3. verify the two §V criteria hold and compare against brute-force optimal.
+"""
+from repro.core import (
+    PAPER_CLUSTER,
+    ClusterState,
+    average_min_throughput_simulated,
+    brute_force,
+    greedy_sequence,
+    parse_workloads,
+    profile_pairwise_fast,
+    snap_to_grid,
+)
+
+# 1. profile the testbed (simulator stands in for TestDFSIO runs)
+servers = list(PAPER_CLUSTER)
+D = [profile_pairwise_fast(s) for s in servers]
+print(f"profiled D matrices: {len(D)} servers x {D[0].shape} types")
+
+# 2. initial state + arrivals (paper Table III, sequence 1)
+state = ClusterState.empty(servers, D, alpha=1.3)
+initial = [
+    "(32KB, 64KB), (4KB, 16KB), (16KB, 32MB)",
+    "(32KB, 64MB), (512KB, 2MB), (128KB, 512KB)",
+    "(256KB, 1MB), (4KB, 2MB), (32KB, 8MB)",
+    "(2KB, 32KB), (512KB, 64MB), (8KB, 4MB)",
+]
+for i, txt in enumerate(initial):
+    state.assignments[i] = [snap_to_grid(w) for w in parse_workloads(txt)]
+
+arrivals = [snap_to_grid(w) for w in parse_workloads(
+    "(16KB, 64KB), (32KB, 1MB), (64KB, 64MB), (32KB, 2MB), (8KB, 64MB)")]
+placements, queued = greedy_sequence(state, arrivals)
+print(f"greedy placements: {placements}  queued: {len(queued)}")
+
+# 3. criteria + optimality
+for i, server in enumerate(servers):
+    c = state.check(i)
+    print(f"  {server.name}: cache_in_use={c.cache_in_use:5.1%} "
+          f"max_degradation={c.max_degradation:5.1%} ok={c.ok}")
+print(f"avg min throughput (simulated): {average_min_throughput_simulated(state):.3f}")
+
+opt_cost, opt_assign = brute_force(
+    ClusterState.empty(servers, D, alpha=1.3), arrivals, allow_queue=True)
+greedy_cost = state.total_avg_load() + len(queued)
+print(f"greedy total load {greedy_cost:.3f} vs fresh-cluster optimal {opt_cost:.3f}")

@@ -1,0 +1,9 @@
+"""Serving example: batched prefill+decode for a small model, gated by the
+paper's consolidation admission (criteria of §V on the pod fleet).
+
+    PYTHONPATH=src python examples/serve_with_admission.py
+"""
+from repro.launch.serve import main as serve
+
+serve(["--arch", "tinyllama-1.1b", "--smoke",
+       "--requests", "4", "--prompt-len", "32", "--gen", "16"])

@@ -1,0 +1,21 @@
+"""End-to-end training example: a reduced llama-family model through the full
+substrate stack (chunk-store pipeline -> pjit train step -> checkpoints),
+with a mid-run simulated failure + restart to demonstrate fault tolerance.
+
+    PYTHONPATH=src python examples/train_end_to_end.py
+"""
+import tempfile
+
+from repro.launch.train import main as train
+
+with tempfile.TemporaryDirectory() as ckpt:
+    print("=== phase 1: train 40 steps, checkpoint every 20 ===")
+    train(["--arch", "tinyllama-1.1b", "--smoke", "--steps", "40",
+           "--batch", "4", "--seq", "64", "--lr", "3e-3",
+           "--ckpt", ckpt, "--ckpt-every", "20"])
+
+    print("\n=== phase 2: 'crash' after step 40; restart resumes and runs to 60 ===")
+    losses = train(["--arch", "tinyllama-1.1b", "--smoke", "--steps", "60",
+                    "--batch", "4", "--seq", "64", "--lr", "3e-3",
+                    "--ckpt", ckpt, "--ckpt-every", "20"])
+    print(f"\nresumed run executed {len(losses)} steps (expected 20)")

@@ -1,0 +1,2 @@
+from .base import SHAPES, MeshConfig, ModelConfig, RunConfig, batch_axes, sharding_rules
+from .registry import ARCHS, SMOKES, cells, get_config

@@ -1,0 +1,209 @@
+"""Config system: model / parallelism / run configs and the sharding rules.
+
+Every assigned architecture gets a ``configs/<id>.py`` exporting ``CONFIG``
+(the exact published configuration) and ``SMOKE`` (a reduced same-family
+config for CPU smoke tests). ``configs.registry`` maps ``--arch`` ids to
+them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax.numpy as jnp
+
+# --- input shapes assigned to the LM family (all 10 archs) --------------------
+#   name          seq_len   global_batch  step kind
+SHAPES: Mapping[str, dict] = {
+    "train_4k": dict(seq_len=4_096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32_768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32_768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524_288, global_batch=1, kind="decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    act: str = "swiglu"  # swiglu | gelu
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 500_000.0
+    sliding_window: int = 0  # 0 = full attention
+
+    # MoE
+    moe_experts: int = 0
+    moe_topk: int = 0
+    moe_dff: int = 0  # per-expert hidden size
+    moe_every: int = 1  # MoE FFN on layers where (layer % moe_every == moe_every-1)
+    moe_capacity_factor: float = 1.25
+
+    # hybrid (Jamba): attention on layers where (layer % attn_every == attn_offset)
+    attn_every: int = 1
+    attn_offset: int = 0
+    mamba_dstate: int = 16
+    mamba_dconv: int = 4
+    mamba_expand: int = 2
+
+    # rwkv6
+    rwkv_head_size: int = 64
+
+    # encoder-decoder (whisper): encoder consumes precomputed frame embeddings
+    enc_layers: int = 0
+    enc_seq: int = 1_500
+
+    # vlm (internvl): precomputed patch embeddings prepended to the text stream
+    vis_tokens: int = 0
+
+    # numerics / memory policy
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    fsdp: bool = False  # shard params/opt-state over the data axis too (ZeRO-3ish)
+    remat: str = "layer"  # none | layer | full
+    attn_chunk: int = 1024  # query-chunk for the flash-style jnp attention
+    use_pallas: str = "never"  # never | interpret  (TPU target: 'tpu')
+    optimizer: str = "adamw"  # adamw | adamw8bit | adafactor
+    # scan_layers=True compiles one layer body (production).  The roofline
+    # cost-extrapolation compiles (launch/dryrun.py) set it False at L=1,2
+    # because XLA cost_analysis counts while-loop bodies exactly once.
+    scan_layers: bool = True
+
+    # --- beyond-paper performance knobs (EXPERIMENTS.md §Perf) -------------
+    # layout='tp' is the baseline (TP over 'model'); 'dp' shards the batch
+    # over BOTH mesh axes with FSDP params -- the right layout for small
+    # models where TP activation collectives dominate (tinyllama hillclimb).
+    layout: str = "tp"
+    # expert_fsdp=False keeps expert weights resident per TP shard instead of
+    # FSDP-gathering them every layer (kimi hillclimb: the gather re-streams
+    # 125GB/device/pass at 1T params).
+    expert_fsdp: bool = True
+    # combine dtype for the EP psum ('f32' is the conservative baseline).
+    moe_combine_dtype: str = "f32"
+    # int8 KV cache with per-token/head scales (llama decode hillclimb).
+    kv_cache_dtype: str = "bf16"
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Archs that may run the long_500k shape (SSM / hybrid / linear-attn)."""
+        return self.family in ("ssm", "hybrid")
+
+    # The production mesh fixes TP = 16 (DESIGN.md §5); head counts that do
+    # not divide it get sequence-sharded attention / time-sharded KV caches.
+    TP_HINT = 16
+
+    @property
+    def attn_shard(self) -> str:
+        """'heads' when query heads divide TP, else 'seq' (shard_map over seq)."""
+        return "heads" if self.n_heads % self.TP_HINT == 0 else "seq"
+
+    @property
+    def kv_cache_time_sharded(self) -> bool:
+        """Shard the KV cache over time (flash-decoding style partial softmax
+        under GSPMD) when kv heads do not divide TP."""
+        return self.n_kv_heads % self.TP_HINT != 0
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # every assigned arch has an autoregressive decoder path
+
+    def active_params_per_token_factor(self) -> float:
+        """MoE: fraction of expert params active per token (for MODEL_FLOPS)."""
+        if self.moe_experts:
+            return self.moe_topk / self.moe_experts
+        return 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+    pods: int = 2
+    data: int = 16
+    model: int = 16
+
+    @property
+    def n_devices(self) -> int:
+        return (self.pods if self.multi_pod else 1) * self.data * self.model
+
+    @property
+    def dp(self) -> int:
+        return (self.pods if self.multi_pod else 1) * self.data
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: str  # key into SHAPES
+    mesh: MeshConfig = MeshConfig()
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    grad_clip: float = 1.0
+    microbatches: int = 1  # gradient-accumulation microbatches per step
+    grad_compression: str = "none"  # none | bf16 | int8 (all-reduce payload)
+
+    @property
+    def shape_info(self) -> dict:
+        return SHAPES[self.shape]
+
+
+# --- logical-axis -> mesh-axis rules (see models/params.py docstring) ----------
+
+def sharding_rules(cfg: ModelConfig, mesh: MeshConfig) -> dict[str, Any]:
+    """Resolve logical parameter/activation axes onto the production mesh.
+
+    TP ('model') shards heads / mlp hidden / vocab / experts.  Under FSDP the
+    residual-stream dimension of the weights is additionally sharded over the
+    data axes so fp32 master params + optimizer state scale with the fleet
+    (ZeRO-3 for params, ZeRO-1 falls out for optimizer state since it shares
+    the param sharding).
+    """
+    data_axes = ("pod", "data") if mesh.multi_pod else ("data",)
+    if cfg.layout == "dp":
+        # pure data parallelism over the whole mesh + FSDP params: no TP
+        # activation collectives at all -- the gradient reduction and the
+        # per-layer FSDP weight gather are the only traffic. Right for small
+        # models (see EXPERIMENTS.md §Perf / tinyllama).
+        all_axes = data_axes + ("model",)
+        return {
+            "layer": None,
+            "dmodel": all_axes,
+            "heads": None, "kv_heads": None, "mlp": None,
+            "vocab": None, "expert": None, "conv": None, "state": None,
+            "batch": all_axes,
+            "act_seq": None, "act_heads": None, "act_vocab": None,
+            "act_expert": None, "cache_time": None,
+        }
+    return {
+        "layer": None,
+        "dmodel": data_axes if cfg.fsdp else None,
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "expert_dmodel": data_axes if (cfg.fsdp and cfg.expert_fsdp) else None,
+        "conv": None,
+        "state": None,
+        # activation axes
+        "batch": data_axes,
+        "act_seq": "model",  # sequence-sharded residual stream (SP)
+        "act_heads": "model",
+        "act_vocab": "model",
+        "act_expert": "model",
+        "cache_time": "model",  # time-sharded KV cache (kv_heads < TP archs)
+    }
+
+
+def batch_axes(mesh: MeshConfig):
+    return ("pod", "data") if mesh.multi_pod else ("data",)

@@ -1,0 +1,80 @@
+"""Core library: the paper's workload-consolidation contribution.
+
+Public API (stable):
+  Workload, parse_workloads, grid_types        -- §III characterization
+  ServerSpec, M1, M2, PAPER_CLUSTER            -- Table I testbed
+  solo_throughput, solo_throughput_grid        -- §III model (Fig 1-2)
+  simulate_corun, competing_cache_bytes        -- §IV ground truth
+  predict_tdp_hit, profile_pairwise*, predict_degradations  -- Eqns 1-3
+  check_consolidation, DEGRADATION_LIMIT       -- §V criteria (Eqns 4-5)
+  ClusterState, greedy_place, greedy_sequence, brute_force  -- §VI-VII
+  PackedCluster, greedy_sequence_jax, brute_force_jax       -- JAX fast path
+  OnlineScheduler                              -- §V queueing runtime
+  JobProfile, PodSpec, FleetState, pack_jobs   -- TPU-fleet adaptation
+"""
+from .binpack import (
+    ClusterState,
+    average_min_throughput,
+    average_min_throughput_simulated,
+    best_fit_cache,
+    brute_force,
+    first_fit,
+    greedy_place,
+    greedy_sequence,
+    run_allocator,
+)
+from .calibrate import calibrate_alpha, pick_alpha, sweep_alpha
+from .refine import local_search
+from .binpack_jax import (
+    QUEUED,
+    PackedCluster,
+    brute_force_jax,
+    counts_from_assignments,
+    evaluate_assignment,
+    greedy_sequence_jax,
+    greedy_step,
+    server_loads,
+)
+from .cluster import (
+    FleetState,
+    JobProfile,
+    PodSpec,
+    additive_degradations,
+    fleet_throughput_report,
+    pack_jobs,
+    pair_degradation,
+    roofline_degradations,
+)
+from .contention import (
+    additive_degradation,
+    predict_degradations,
+    predict_tdp_hit,
+    predict_tdp_n,
+    profile_pairwise,
+    profile_pairwise_fast,
+    tdp_lhs,
+    tdp_lhs_naive,
+)
+from .criteria import DEGRADATION_LIMIT, AdmissionCheck, check_consolidation
+from .scheduler import OnlineScheduler, ScheduleResult
+from .server import M1, M2, PAPER_CLUSTER, TPU_V5E_HOST, TPU_V5E_POD256, ServerSpec
+from .simulator import (
+    CoRunResult,
+    cache_overflow,
+    competing_cache_bytes,
+    corun_throughput_grid,
+    makespan_consolidated,
+    makespan_sequential,
+    simulate_corun,
+)
+from .throughput import solo_runtime, solo_throughput, solo_throughput_grid
+from .workload import (
+    FS_GRID,
+    RS_GRID,
+    Workload,
+    characterize,
+    grid_types,
+    parse_workloads,
+    snap_to_grid,
+    type_index,
+)

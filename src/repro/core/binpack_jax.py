@@ -1,0 +1,231 @@
+"""JAX implementation of the paper's consolidation algorithm (C7, jit-able).
+
+This is the production-path allocator: the greedy of Fig 8 expressed as pure
+array ops so it (a) scores every server in parallel, (b) scans an arrival
+sequence under ``jax.lax.scan``, (c) runs on-device, and (d) can be handed a
+batched candidate evaluation to the Pallas kernel in
+``repro.kernels.consolidation`` for large fleets.
+
+State encoding
+--------------
+Workloads live on the paper's profiling grid of T types (230 = 10 RS x 23 FS).
+A cluster of m servers is
+
+  counts  : f32[m, T]   -- number of resident workloads of each type per server
+  D       : f32[m, T, T]-- profiled pairwise degradation per server, D[s, i, j]
+                           = degradation type-i causes on type-j on server s
+  rs, fs  : f32[T]      -- grid coordinates (bytes)
+  llc     : f32[m]      -- alpha_s * CacheSize_s   (criterion-2 budget)
+  resident: f32[m, T]   -- 1.0 where fs_t <= CacheSize_s (Eqn 2's CS set)
+
+The additive model (Eqn 3) for a type-t workload on server s with counts c:
+  D_pred[s, t] = (c @ D[s])[t] - D[s, t, t]        (exclude its own pair-self)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .server import ServerSpec
+from .workload import FS_GRID, RS_GRID, Workload, grid_types, type_index
+
+QUEUED = -1  # sentinel placement: no feasible server (criterion-1 queue)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedCluster:
+    """Immutable device-side cluster description (see module docstring)."""
+
+    D: jax.Array  # f32[m, T, T]
+    rs: jax.Array  # f32[T]
+    fs: jax.Array  # f32[T]
+    llc_budget: jax.Array  # f32[m] = alpha_s * CacheSize_s
+    resident: jax.Array  # f32[m, T]
+    degradation_limit: float = 0.5
+
+    @classmethod
+    def build(
+        cls,
+        servers: list[ServerSpec],
+        D: list[np.ndarray] | np.ndarray,
+        alpha: float | list[float] = 1.3,
+    ) -> "PackedCluster":
+        m = len(servers)
+        if isinstance(D, np.ndarray):
+            D = [D] * m
+        if isinstance(alpha, (int, float)):
+            alpha = [float(alpha)] * m
+        rs = jnp.asarray(RS_GRID, jnp.float32)
+        fs = jnp.asarray(FS_GRID, jnp.float32)
+        T = rs.shape[0] * fs.shape[0]
+        rs_t = jnp.repeat(rs, fs.shape[0])
+        fs_t = jnp.tile(fs, rs.shape[0])
+        llc = jnp.asarray([a * s.llc_bytes for a, s in zip(alpha, servers)], jnp.float32)
+        resident = (fs_t[None, :] <= jnp.asarray([s.llc_bytes for s in servers], jnp.float32)[:, None]).astype(jnp.float32)
+        return cls(
+            D=jnp.asarray(np.stack([np.asarray(d, np.float32) for d in D])),
+            rs=rs_t,
+            fs=fs_t,
+            llc_budget=llc,
+            resident=resident,
+        )
+
+    @property
+    def m(self) -> int:
+        return self.D.shape[0]
+
+    @property
+    def T(self) -> int:
+        return self.D.shape[1]
+
+
+jax.tree_util.register_pytree_node(
+    PackedCluster,
+    lambda c: ((c.D, c.rs, c.fs, c.llc_budget, c.resident), (c.degradation_limit,)),
+    lambda aux, ch: PackedCluster(*ch, degradation_limit=aux[0]),
+)
+
+
+def counts_from_assignments(cluster: PackedCluster, assignments: list[list[Workload]]) -> jax.Array:
+    c = np.zeros((cluster.m, cluster.T), np.float32)
+    for s, ws in enumerate(assignments):
+        for w in ws:
+            c[s, type_index(w)] += 1.0
+    return jnp.asarray(c)
+
+
+# --- per-server loads, fully vectorized ----------------------------------------
+
+def server_loads(cluster: PackedCluster, counts: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(cache_in_use[m], max_degradation[m]) for the current counts.
+
+    cache_in_use is criterion 2's LHS over its budget; max_degradation is
+    criterion 1's Max(D_y) from the additive model over resident workloads.
+    """
+    comp = counts @ cluster.rs + (counts * cluster.resident) @ cluster.fs  # [m]
+    cache = comp / cluster.llc_budget
+
+    col = jnp.einsum("mt,mtu->mu", counts, cluster.D)  # [m, T] = c @ D
+    d_pred = col - jnp.diagonal(cluster.D, axis1=1, axis2=2)  # exclude self-pair
+    d_pred = jnp.clip(d_pred, 0.0, 1.0)
+    present = counts > 0
+    max_d = jnp.max(jnp.where(present, d_pred, -jnp.inf), axis=1)
+    max_d = jnp.where(jnp.any(present, axis=1), max_d, 0.0)
+    return cache, max_d
+
+
+def avg_loads(cluster: PackedCluster, counts: jax.Array) -> jax.Array:
+    cache, max_d = server_loads(cluster, counts)
+    return 0.5 * (cache + max_d)
+
+
+# --- the greedy step (Fig 8), one arrival ---------------------------------------
+
+@partial(jax.jit, static_argnames=("objective",))
+def greedy_step(
+    cluster: PackedCluster, counts: jax.Array, wtype: jax.Array, objective: str = "sum_avg"
+) -> tuple[jax.Array, jax.Array]:
+    """Place one arriving workload of grid type ``wtype``.
+
+    Returns (new_counts, placement) where placement == QUEUED when no server
+    satisfies both criteria. All m candidate placements are scored in one
+    vectorized evaluation.
+    """
+    onehot = jax.nn.one_hot(wtype, cluster.T, dtype=counts.dtype)  # [T]
+    # counts if W were placed on server s: counts with row s incremented.
+    trial = counts[None, :, :] + jnp.eye(cluster.m, dtype=counts.dtype)[:, :, None] * onehot[None, None, :]
+    # trial[s] is the whole cluster counts under hypothesis "place on s".
+    cache_t, maxd_t = jax.vmap(lambda c: server_loads(cluster, c))(trial)  # [m, m] each
+    s_idx = jnp.arange(cluster.m)
+    cache_after = cache_t[s_idx, s_idx]  # loads of the modified server only
+    maxd_after = maxd_t[s_idx, s_idx]
+
+    feasible = (maxd_after < cluster.degradation_limit) & (cache_after <= 1.0)
+
+    avg_after = 0.5 * (cache_after + maxd_after)
+    if objective == "sum_avg":  # Table II semantics: minimize the load increase
+        avg_before = avg_loads(cluster, counts)
+        score = avg_after - avg_before
+    else:  # literal Fig 8: minimize the post-allocation average
+        score = avg_after
+    score = jnp.where(feasible, score, jnp.inf)
+    best = jnp.argmin(score)
+    placed = jnp.isfinite(score[best])
+    placement = jnp.where(placed, best, QUEUED)
+    new_counts = jnp.where(
+        placed,
+        counts.at[best].add(onehot),
+        counts,
+    )
+    return new_counts, placement
+
+
+@partial(jax.jit, static_argnames=("objective",))
+def greedy_sequence_jax(
+    cluster: PackedCluster, counts: jax.Array, wtypes: jax.Array, objective: str = "sum_avg"
+) -> tuple[jax.Array, jax.Array]:
+    """Allocate a whole arrival sequence with ``lax.scan`` (the §VIII experiment)."""
+
+    def step(c, t):
+        c2, p = greedy_step(cluster, c, t, objective)
+        return c2, p
+
+    final, placements = jax.lax.scan(step, counts, wtypes)
+    return final, placements
+
+
+# --- vectorized brute force ------------------------------------------------------
+
+@jax.jit
+def evaluate_assignment(
+    cluster: PackedCluster, counts0: jax.Array, wtypes: jax.Array, assign: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Cost + feasibility of one complete assignment (QUEUED allowed).
+
+    Cost = sum of per-server average loads + 1.0 per queued workload (so a
+    feasible placement always beats queueing), matching ``binpack.brute_force``.
+    """
+    onehots = jax.nn.one_hot(wtypes, cluster.T, dtype=counts0.dtype)  # [n, T]
+    placed = assign >= 0
+    scatter = jax.nn.one_hot(jnp.where(placed, assign, 0), cluster.m, dtype=counts0.dtype)
+    scatter = scatter * placed[:, None]
+    counts = counts0 + jnp.einsum("nm,nt->mt", scatter, onehots)
+    cache, maxd = server_loads(cluster, counts)
+    ok = jnp.all((maxd < cluster.degradation_limit) & (cache <= 1.0))
+    cost = jnp.sum(0.5 * (cache + maxd)) + jnp.sum(~placed)
+    return jnp.where(ok, cost, jnp.inf), ok
+
+
+def brute_force_jax(
+    cluster: PackedCluster,
+    counts0: jax.Array,
+    wtypes: jax.Array,
+    allow_queue: bool = True,
+    batch: int = 4096,
+) -> tuple[float, np.ndarray]:
+    """Exhaustive optimum via vmapped evaluation of all (m[+1])^n assignments."""
+    n = int(wtypes.shape[0])
+    base = cluster.m + (1 if allow_queue else 0)
+    total = base**n
+
+    digits = np.arange(total)
+    combos = np.stack([(digits // base**k) % base for k in range(n)], axis=1)
+    if allow_queue:
+        combos = np.where(combos == cluster.m, QUEUED, combos)
+
+    eval_many = jax.jit(jax.vmap(evaluate_assignment, in_axes=(None, None, None, 0)))
+    best_cost, best_assign = np.inf, None
+    for start in range(0, total, batch):
+        chunk = jnp.asarray(combos[start : start + batch], jnp.int32)
+        costs, _ = eval_many(cluster, counts0, wtypes, chunk)
+        costs = np.asarray(costs)
+        i = int(costs.argmin())
+        if costs[i] < best_cost:
+            best_cost, best_assign = float(costs[i]), combos[start + i]
+    if not np.isfinite(best_cost):
+        raise RuntimeError("brute force (jax) found no feasible assignment")
+    return best_cost, np.asarray(best_assign)

@@ -1,0 +1,185 @@
+"""Contention models: TDP prediction (Eqns 1-2) and the additive
+mutual-degradation model (Eqn 3) with its pairwise-profiling pipeline (C3+C4).
+
+The paper's methodology, reproduced here:
+
+  * §IV.A predicts the throughput-degradation point (TDP) with Eqn (2):
+      CacheSize = sum_i RS_i + sum_{i in CS} FS_i,  CS = {i | FS_i <= CacheSize}
+  * §IV.B profiles D_{i,j} -- the degradation workload i causes on j -- by
+    running every *pair* of grid workload types: (10x23)^2 = 52_900 runs per
+    server. The additive model D_j = sum_{i != j} D_{i,j} (Eqn 3) then
+    predicts N-way co-run degradation from pairs only.
+
+Profiling here runs against the simulator (our testbed stand-in); on a real
+deployment the same ``profile_pairwise`` is pointed at TestDFSIO-style
+measurements (the interface takes any callable measuring a pair).
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .server import ServerSpec
+from .simulator import competing_cache_bytes, simulate_corun
+from .workload import FS_GRID, RS_GRID, Workload, grid_types, type_index
+
+
+# --- TDP prediction (Eqns 1-2) -----------------------------------------------
+
+def tdp_lhs_naive(workloads: Sequence[Workload]) -> float:
+    """Eqn (1): sum_i (RS_i + FS_i) -- valid only when all FS <= CacheSize."""
+    return float(sum(w.rs + w.fs for w in workloads))
+
+
+def tdp_lhs(server: ServerSpec, workloads: Sequence[Workload]) -> float:
+    """Eqn (2) LHS: competing data, excluding FS of workloads larger than LLC."""
+    return competing_cache_bytes(server, workloads)
+
+
+def predict_tdp_hit(server: ServerSpec, workloads: Sequence[Workload], alpha: float = 1.0) -> bool:
+    """Predict whether this co-run set is past its TDP (Eqn 2 vs alpha*CacheSize)."""
+    return tdp_lhs(server, workloads) > alpha * server.llc_bytes
+
+
+def predict_tdp_n(server: ServerSpec, rs: float, fs: float, alpha: float = 1.0) -> float:
+    """For N identical (RS, FS) workloads, the critical N where TDP occurs.
+
+    From Eqn (1): N * (RS + FS) = alpha * CacheSize  (the paper's worked
+    example: N=4, RS=256KB, FS=1280KB -> 4*(1536KB) = 6MB on M1).
+    """
+    per = rs + (fs if fs <= server.llc_bytes else 0.0)
+    return alpha * server.llc_bytes / per
+
+
+# --- Pairwise-degradation profiling (§IV.B, §VIII) -----------------------------
+
+PairMeasure = Callable[[Workload, Workload], float]
+
+
+def measure_pair_simulated(server: ServerSpec) -> PairMeasure:
+    """D_{i,j} measured on the simulator: degradation of j when co-run with i.
+
+    NOTE: the pair co-run includes the cache outcome of *the pair only*; the
+    additive model then extrapolates to N-way sets. This mirrors the paper's
+    physical profiling exactly (they, too, can only observe pair effects).
+    """
+
+    def measure(w_i: Workload, w_j: Workload) -> float:
+        res = simulate_corun(server, [w_i, w_j])
+        return res.degradations[1]
+
+    return measure
+
+
+def profile_pairwise(
+    server: ServerSpec,
+    types: Sequence[Workload] | None = None,
+    measure: PairMeasure | None = None,
+) -> np.ndarray:
+    """The paper's 52_900-run profiling pass -> D matrix, D[i, j] = D_{i,j}.
+
+    D[i, j] is the degradation that a workload of type i causes on a
+    co-running workload of type j (both snapped to the profiling grid).
+    """
+    if types is None:
+        types = grid_types("read")
+    if measure is None:
+        measure = measure_pair_simulated(server)
+    n = len(types)
+    D = np.zeros((n, n))
+    for i, wi in enumerate(types):
+        for j, wj in enumerate(types):
+            D[i, j] = measure(wi, wj)
+    return D
+
+
+def profile_pairwise_fast(server: ServerSpec, types: Sequence[Workload] | None = None) -> np.ndarray:
+    """Vectorized (numpy) equivalent of :func:`profile_pairwise` on the simulator.
+
+    Runs the full 230x230 grid in milliseconds instead of 52_900 python-level
+    simulator calls. Used by benchmarks; validated against the scalar path in
+    tests (test_contention.py::test_fast_profile_matches_scalar).
+    """
+    from .simulator import _capacities, _demands, _sensitivity, throughput_after_cache
+    from .throughput import solo_throughput
+
+    if types is None:
+        types = grid_types("read")
+    rs = np.array([w.rs for w in types])
+    fs = np.array([w.fs for w in types])
+
+    solo = np.array([solo_throughput(server, w) for w in types])
+    base_lost = np.array([throughput_after_cache(server, w, True) for w in types])
+
+    # per-type demand/sensitivity vectors in both cache states
+    caps = _capacities(server)
+    res_names = ("mem", "disk", "cpu")
+
+    def stack(lost: bool):
+        base = base_lost if lost else solo
+        dem = np.zeros((len(types), 3))
+        sens = np.zeros((len(types), 3))
+        for t, w in enumerate(types):
+            d = _demands(server, w, base[t], lost)
+            s = _sensitivity(server, w, base[t], d)
+            dem[t] = [d[r] for r in res_names]
+            sens[t] = [s[r] for r in res_names]
+        return base, dem, sens
+
+    base_k, dem_k, sens_k = stack(False)
+    base_l, dem_l, sens_l = stack(True)
+    cap = np.array([caps[r] for r in res_names])
+
+    # pair cache outcome: competing bytes of {i, j} vs the physical tolerance
+    comp = (rs[:, None] + rs[None, :]
+            + np.where(fs <= server.llc_bytes, fs, 0.0)[:, None]
+            + np.where(fs <= server.llc_bytes, fs, 0.0)[None, :])
+    overflow = comp > server.llc_tolerance * server.llc_bytes  # [i, j]
+
+    ov = overflow[:, :, None]
+    dem_i = np.where(ov, dem_l[:, None, :], dem_k[:, None, :])  # [i, j, r]
+    dem_j = np.where(ov, dem_l[None, :, :], dem_k[None, :, :])  # [i, j, r]
+    sens_j = np.where(ov, sens_l[None, :, :], sens_k[None, :, :])  # [i, j, r]
+    base_j = np.where(overflow, base_l[None, :], base_k[None, :])  # [i, j]
+
+    from .simulator import _BASELINE
+
+    total = dem_i + dem_j
+    with np.errstate(divide="ignore", invalid="ignore"):
+        excess = np.where(total > 0, np.maximum(0.0, 1.0 - cap[None, None, :] / total), 0.0)
+    baseline = dem_i / (dem_i + _BASELINE * cap[None, None, :])
+    slow = 1.0 - (1.0 - excess) * (1.0 - baseline)
+    keep = np.prod(1.0 - sens_j * slow, axis=-1)
+    t_j = base_j * keep
+    return 1.0 - t_j / solo[None, :]
+
+
+# --- Additive model (Eqn 3) ----------------------------------------------------
+
+def additive_degradation(D: np.ndarray, members: Sequence[int]) -> np.ndarray:
+    """Eqn (3): predicted D_j = sum_{i != j} D[i, j] for each member j.
+
+    ``members`` are profiling-grid type indices of the co-located set
+    (duplicates allowed -- N identical workloads is the Fig 3-4 case).
+    """
+    idx = np.asarray(members, dtype=int)
+    if idx.size == 0:
+        return np.zeros(0)
+    sub = D[np.ix_(idx, idx)]
+    col_sum = sub.sum(axis=0)
+    self_term = np.diagonal(sub)
+    return col_sum - self_term
+
+
+def predict_degradations(
+    D: np.ndarray, workloads: Sequence[Workload]
+) -> np.ndarray:
+    """Additive-model degradation prediction for concrete workloads.
+
+    Workloads are snapped to the profiling grid for D-matrix lookup, exactly
+    as the paper's scheduler consults previously collected D_{x,y}s (Fig 8).
+    Predictions are clipped to [0, 1): a degradation can't exceed 100%.
+    """
+    members = [type_index(w) for w in workloads]
+    return np.clip(additive_degradation(D, members), 0.0, 0.999999)

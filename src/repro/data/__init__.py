@@ -1,0 +1,2 @@
+from .chunkstore import ChunkRef, ChunkStore, FileMeta
+from .pipeline import PipelineState, TokenPipeline, synthetic_store

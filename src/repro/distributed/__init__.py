@@ -1,0 +1,16 @@
+from .fault_tolerance import (
+    HeartbeatMonitor,
+    ReMeshPlan,
+    plan_elastic_remesh,
+    scale_batch_for_mesh,
+)
+from .serve_step import greedy_generate, make_serve_steps
+from .sharding import (
+    batch_specs,
+    cache_specs,
+    mesh_axis_sizes,
+    named,
+    opt_state_specs,
+    param_specs,
+)
+from .train_step import make_train_step

@@ -1,0 +1,42 @@
+"""Serving steps: prefill and decode with sharded caches + sampling."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models.api import Model
+
+
+def make_serve_steps(model: Model) -> tuple[Callable, Callable]:
+    def prefill_step(params, batch, cache):
+        logits, cache = model.prefill(params, batch, cache)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    def decode_step(params, cache, tokens, rng=None, temperature: float = 0.0):
+        logits, cache = model.decode_step(params, cache, tokens)
+        last = logits[:, -1, :].astype(jnp.float32)
+        if rng is None or temperature == 0.0:
+            next_tok = jnp.argmax(last, axis=-1)
+        else:
+            next_tok = jax.random.categorical(rng, last / temperature, axis=-1)
+        return next_tok.astype(jnp.int32), cache
+
+    return prefill_step, decode_step
+
+
+def greedy_generate(model: Model, params, batch, cache, steps: int):
+    """Simple autoregressive loop used by examples/serving driver."""
+    prefill_step, decode_step = make_serve_steps(model)
+    tok, cache = prefill_step(params, batch, cache)
+    toks = [tok]
+
+    def body(carry, _):
+        tok, cache = carry
+        nxt, cache = decode_step(params, cache, tok[:, None])
+        return (nxt, cache), nxt
+
+    (_, cache), rest = jax.lax.scan(body, (tok, cache), None, length=steps - 1)
+    return jnp.concatenate([tok[:, None], rest.T], axis=1), cache

@@ -1,0 +1,88 @@
+"""Sharding resolution: logical-axis rules -> NamedSharding pytrees for
+params, optimizer state, caches, and input batches."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..configs.base import MeshConfig, ModelConfig, batch_axes, sharding_rules
+from ..models.api import Model
+from ..models.params import abstract, partition_specs
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+
+def axis_sizes(mesh_cfg: MeshConfig) -> dict[str, int]:
+    d = {"data": mesh_cfg.data, "model": mesh_cfg.model}
+    if mesh_cfg.multi_pod:
+        d["pod"] = mesh_cfg.pods
+    return d
+
+
+def param_specs(model: Model, mesh_cfg: MeshConfig):
+    return partition_specs(
+        model.param_infos(), sharding_rules(model.cfg, mesh_cfg), axis_sizes(mesh_cfg)
+    )
+
+
+def cache_specs(model: Model, mesh_cfg: MeshConfig, batch: int, max_len: int):
+    return partition_specs(
+        model.cache_infos(batch, max_len),
+        sharding_rules(model.cfg, mesh_cfg),
+        axis_sizes(mesh_cfg),
+    )
+
+
+def batch_specs(model: Model, mesh_cfg: MeshConfig, input_specs: dict):
+    """PartitionSpecs for a model-input dict: leading dim is the batch
+    (replicated when the global batch does not divide the DP axes, e.g.
+    long_500k's batch of 1)."""
+    b = batch_axes(mesh_cfg)
+    dp = mesh_cfg.dp
+    out = {}
+    for k, v in input_specs.items():
+        lead = b if v.shape and v.shape[0] % dp == 0 else None
+        out[k] = PartitionSpec(lead, *([None] * (len(v.shape) - 1)))
+    return out
+
+
+def opt_state_specs(opt_init, params_abstract, p_specs):
+    """Optimizer-state specs: mirror the param spec where shapes match
+    (m/v of AdamW -> ZeRO-1 via the param sharding); for reduced-shape state
+    (Adafactor row factors) inherit the param spec as a *prefix* when the
+    state shape is a prefix of a param shape; replicate the rest (scalars,
+    column factors, quantization scales -- all small by construction)."""
+    state_shape = jax.eval_shape(opt_init, params_abstract)
+
+    flat_p, _ = jax.tree_util.tree_flatten(params_abstract)
+    flat_s = jax.tree_util.tree_flatten(p_specs,
+                                        is_leaf=lambda x: isinstance(x, PartitionSpec))[0]
+    by_shape: dict[tuple, PartitionSpec] = {}
+    prefixes: list[tuple[tuple, PartitionSpec]] = []
+    for p, s in zip(flat_p, flat_s):
+        by_shape.setdefault(tuple(p.shape), s)
+        prefixes.append((tuple(p.shape), s))
+
+    def spec_for(leaf):
+        shape = tuple(leaf.shape)
+        if shape in by_shape:
+            return by_shape[shape]
+        for pshape, pspec in prefixes:
+            if len(shape) < len(pshape) and pshape[: len(shape)] == shape:
+                return PartitionSpec(*list(pspec)[: len(shape)])
+        return PartitionSpec()
+
+    return jax.tree_util.tree_map(spec_for, state_shape)
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

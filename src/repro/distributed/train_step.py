@@ -1,0 +1,80 @@
+"""The pjit training step: loss -> grads -> optimizer, with microbatch
+gradient accumulation, remat (configured per-model), and compute/comm overlap.
+
+Overlap note (DESIGN.md §5): with microbatches > 1 the accumulation is a
+lax.scan whose per-iteration backward produces partial gradients; XLA's
+async collectives let the data-parallel reduction of microbatch k overlap
+the compute of microbatch k+1 (latency-hiding is the scheduler's job once
+the dependence structure permits it -- which this loop does).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import RunConfig
+from ..models.api import Model
+from ..optim import OptConfig, make_optimizer, warmup_cosine
+
+
+def _split_micro(batch: dict, k: int) -> dict:
+    def r(x):
+        b = x.shape[0]
+        assert b % k == 0, (b, k)
+        return x.reshape(k, b // k, *x.shape[1:])
+
+    return {key: r(v) for key, v in batch.items()}
+
+
+def make_train_step(model: Model, run: RunConfig) -> tuple[Callable, Callable]:
+    """Returns (init_fn(rng)->(params,opt_state), train_step_fn)."""
+    ocfg = OptConfig(weight_decay=run.weight_decay, grad_clip=run.grad_clip)
+    opt_init, opt_update = make_optimizer(model.cfg.optimizer, ocfg)
+
+    def init(rng):
+        from ..models.params import materialize
+
+        params = materialize(model.param_infos(), rng)
+        return params, opt_init(params)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, step):
+        lr = warmup_cosine(
+            step, peak_lr=run.learning_rate,
+            warmup_steps=run.warmup_steps, total_steps=run.total_steps,
+        )
+        if run.microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = _split_micro(batch, run.microbatches)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), _ = jax.lax.scan(acc, (g0, 0.0), micro)
+            k = float(run.microbatches)
+            grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+            loss = loss / k
+            metrics = {}
+
+        new_params, new_opt, stats = opt_update(params, grads, opt_state, lr, ocfg)
+        out = {"loss": loss, "lr": lr, **metrics, **stats}
+        return new_params, new_opt, out
+
+    return init, train_step

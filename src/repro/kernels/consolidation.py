@@ -1,0 +1,87 @@
+"""The paper's greedy-placement scoring loop as a Pallas TPU kernel.
+
+This is the consolidation scheduler's hot spot at fleet scale: for each of Q
+queued workloads, score all m servers by tentatively placing the workload
+(Fig 8 steps 2-3): cache_in_use' and Max(D_y)' under the additive model
+(Eqn 3). The Python/jnp paths (core/binpack*.py) evaluate one candidate at a
+time; this kernel batches Q x m candidate evaluations with the profiled
+D-matrix tile [T, T] resident in VMEM (T=230 -> 212KB fp32) while the
+candidate axis streams -- one D fetch per server for the whole queue.
+
+grid = (m, Q); per step: counts row [T], D tile [T, T], grid-constant rs/fs.
+out: cache_after [Q, m], maxd_after [Q, m] -- argmin over the feasible set
+happens outside (cheap [Q, m] reduction).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _score_kernel(counts_ref, d_ref, diag_ref, rsfs_ref, budget_ref, wtype_ref,
+                  cache_ref, maxd_ref):
+    counts = counts_ref[0].astype(jnp.float32)  # [T]
+    D = d_ref[0].astype(jnp.float32)  # [T, T]
+    diag = diag_ref[0].astype(jnp.float32)  # [T]
+    rs = rsfs_ref[0, 0]  # [T]
+    fs_res = rsfs_ref[0, 1]  # [T] fs * resident mask (0 where non-competing)
+    budget = budget_ref[0, 0]
+    t_new = wtype_ref[0, 0]
+
+    T = counts.shape[0]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (T,), 0) == t_new).astype(jnp.float32)
+    c = counts + onehot
+
+    comp = jnp.sum(c * rs) + jnp.sum(c * fs_res)
+    cache_ref[0, 0] = comp / budget
+
+    col = jax.lax.dot_general(c[None, :], D, (((1,), (0,)), ((), ())))[0]  # c @ D
+    d_pred = jnp.clip(col - diag, 0.0, 1.0)
+    present = c > 0
+    maxd_ref[0, 0] = jnp.max(jnp.where(present, d_pred, -jnp.inf))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def consolidation_scores(
+    counts: jax.Array,  # [m, T] resident workload counts per server
+    D: jax.Array,  # [m, T, T] profiled pairwise degradations
+    rs: jax.Array,  # [T] request sizes (bytes)
+    fs_resident: jax.Array,  # [m, T] fs * (fs <= llc) per server
+    llc_budget: jax.Array,  # [m] alpha * CacheSize
+    wtypes: jax.Array,  # [Q] candidate grid types (int32)
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    m, T = counts.shape
+    Q = wtypes.shape[0]
+    diag = jnp.diagonal(D, axis1=1, axis2=2)  # [m, T]
+    rsfs = jnp.stack([jnp.broadcast_to(rs, (m, T)), fs_resident], axis=1)  # [m, 2, T]
+    budget = llc_budget.reshape(m, 1).astype(jnp.float32)
+    wt = wtypes.reshape(Q, 1).astype(jnp.int32)
+
+    cache, maxd = pl.pallas_call(
+        _score_kernel,
+        grid=(m, Q),
+        in_specs=[
+            pl.BlockSpec((1, T), lambda s, q: (s, 0)),
+            pl.BlockSpec((1, T, T), lambda s, q: (s, 0, 0)),
+            pl.BlockSpec((1, T), lambda s, q: (s, 0)),
+            pl.BlockSpec((1, 2, T), lambda s, q: (s, 0, 0)),
+            pl.BlockSpec((1, 1), lambda s, q: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s, q: (q, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda s, q: (q, s)),
+            pl.BlockSpec((1, 1), lambda s, q: (q, s)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, m), jnp.float32),
+            jax.ShapeDtypeStruct((Q, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(counts.astype(jnp.float32), D.astype(jnp.float32), diag.astype(jnp.float32),
+      rsfs.astype(jnp.float32), budget, wt)
+    return cache, maxd

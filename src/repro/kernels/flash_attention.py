@@ -1,0 +1,134 @@
+"""Flash attention for TPU (pl.pallas_call + explicit BlockSpec VMEM tiling).
+
+Design (TPU-native, not a CUDA port):
+  * grid = (heads*batch, q_blocks, kv_blocks); the kv dimension is the
+    innermost, *sequential* grid axis, so the online-softmax running state
+    (m, l, acc) lives in VMEM scratch and persists across kv steps -- the
+    standard TPU flash schedule (sequential grid ≈ a fori loop the Mosaic
+    compiler pipelines, with HBM->VMEM block DMA double-buffered for us).
+  * BlockSpec tiles: q [1, bq, dh], k/v [1, bk, dh]. bq=bk=256 with dh<=128
+    keeps the working set (q + k + v + acc + 2 score tiles) well under 4MB
+    of VMEM and the matmul dims MXU-aligned (multiples of 128 where the
+    model's dh allows; dh=64/112 archs pay MXU padding, noted in DESIGN.md).
+  * causal masking is positional (q_offset supports decode/cache offsets);
+    fully-masked kv blocks are skipped via pl.when on the block index.
+
+Validated against kernels/ref.py::attention_ref in interpret mode (CPU), see
+tests/test_kernels_flash.py. The jnp production fallback is
+models/layers.py::chunked_attention.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,  # blocks: [1, bq, dh], [1, bk, dh], [1, bk, dh]
+    o_ref,  # [1, bq, dh]
+    m_scr, l_scr, acc_scr,  # VMEM scratch: [bq, 1], [bq, 1], [bq, dh]
+    *,
+    causal: bool,
+    sm_scale: float,
+    q_offset: int,
+    kv_blocks: int,
+    block_q: int,
+    block_k: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32)  # [bq, dh]
+        k = k_ref[0].astype(jnp.float32)  # [bk, dh]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale  # [bq, bk]
+        if causal:
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+        m_prev = m_scr[...]  # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)  # [bq, bk]
+        l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(p, v)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    if causal:
+        # skip kv blocks entirely above the diagonal
+        first_q = q_offset + qi * block_q
+        pl.when(ki * block_k <= first_q + block_q - 1)(compute)
+    else:
+        compute()
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, ...] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "q_offset", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # [N, Sq, dh]   (N = batch*heads, kv already GQA-expanded)
+    k: jax.Array,  # [N, Skv, dh]
+    v: jax.Array,  # [N, Skv, dh]
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    N, Sq, dh = q.shape
+    Skv = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, Skv, block_q, block_k)
+    grid = (N, Sq // block_q, Skv // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal,
+        sm_scale=1.0 / math.sqrt(dh),
+        q_offset=q_offset,
+        kv_blocks=grid[2],
+        block_q=block_q,
+        block_k=block_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda n, qi, ki: (n, qi, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda n, qi, ki: (n, ki, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda n, qi, ki: (n, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda n, qi, ki: (n, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running denom l
+            pltpu.VMEM((block_q, dh), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

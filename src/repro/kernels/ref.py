@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` of each kernel).
+
+These are the ground truth the kernels are validated against
+(tests/test_kernels_*.py sweep shapes/dtypes and assert_allclose).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal=True, q_offset=0):
+    """q: [N, Sq, dh]; k, v: [N, Skv, dh] -> [N, Sq, dh]. fp32 softmax."""
+    N, Sq, dh = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("nqd,ntd->nqt", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(dh)
+    if causal:
+        qp = q_offset + jnp.arange(Sq)[:, None]
+        kp = jnp.arange(Skv)[None, :]
+        s = jnp.where(qp >= kp, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("nqt,ntd->nqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_ref(r, k, v, wlog, u, s0):
+    """Sequential WKV6 recurrence (the definition). All [N, S, dh] + u [N, dh],
+    s0 [N, dh, dh] (key dim first). Returns (y [N, S, dh], sT)."""
+    N, S, dh = r.shape
+
+    def step(s, t):
+        rt, kt, vt, wt = r[:, t], k[:, t], v[:, t], wlog[:, t]
+        # y_t[j] = sum_i r[i] * (s[i,j] + u[i] k[i] v[j])
+        y = jnp.einsum("ni,nij->nj", rt, s) + jnp.einsum("ni,ni,ni,nj->nj", rt, u, kt, vt)
+        s = jnp.exp(wt)[:, :, None] * s + kt[:, :, None] * vt[:, None, :]
+        return s, y
+
+    s = s0.astype(jnp.float32)
+    ys = []
+    for t in range(S):  # python loop: this is an oracle, clarity over speed
+        s, y = step(s, t)
+        ys.append(y)
+    return jnp.stack(ys, axis=1), s
+
+
+def mamba_ref(da, dbu, c):
+    """Sequential selective-scan recurrence.
+    da, dbu: [B, S, E, N]; c: [B, S, N]. Returns (y [B, S, E], hT [B, E, N])."""
+    B, S, E, N = da.shape
+    h = jnp.zeros((B, E, N), jnp.float32)
+    ys = []
+    for t in range(S):
+        h = da[:, t] * h + dbu[:, t]
+        ys.append(jnp.einsum("ben,bn->be", h, c[:, t]))
+    return jnp.stack(ys, axis=1), h
+
+
+def consolidation_scores_ref(counts, D, rs, fs, llc_budget, resident, wtypes):
+    """Greedy candidate scoring (the paper's Fig-8 inner loop), per candidate.
+
+    counts [m, T]; D [m, T, T]; rs/fs [T]; llc_budget [m]; resident [m, T];
+    wtypes [Q]. Returns (cache_after [Q, m], maxd_after [Q, m]).
+    """
+    m, T = counts.shape
+    Q = wtypes.shape[0]
+    cache = np.zeros((Q, m))
+    maxd = np.zeros((Q, m))
+    counts = np.asarray(counts, np.float64)
+    D = np.asarray(D, np.float64)
+    for qi, t in enumerate(np.asarray(wtypes)):
+        for s in range(m):
+            c = counts[s].copy()
+            c[t] += 1
+            comp = (c * rs).sum() + (c * resident[s] * fs).sum()
+            cache[qi, s] = comp / llc_budget[s]
+            col = c @ D[s] - np.diagonal(D[s])
+            col = np.clip(col, 0.0, 1.0)
+            present = c > 0
+            maxd[qi, s] = col[present].max() if present.any() else 0.0
+    return jnp.asarray(cache, jnp.float32), jnp.asarray(maxd, jnp.float32)

@@ -1,0 +1,109 @@
+"""Chunked WKV6 recurrence as a Pallas TPU kernel.
+
+TPU adaptation of RWKV6's sequential recurrence: within a chunk of C tokens
+the output is an attention-like triangular matmul (MXU work); across chunks
+the per-head state S in R^[dh, dh] persists in VMEM scratch over the
+*sequential* chunk grid axis -- so the HBM traffic is one pass over r/k/v/w
+and the state never leaves VMEM (dh=64 -> 16KB fp32).
+
+grid = (N, S/C) with N = batch*heads. BlockSpec tiles [1, C, dh] for the four
+streams. C=32 keeps the [C, C, dh] decay tensor at 256KB fp32.
+
+Exactness: identical recurrence to ref.py::rwkv6_ref (log-space relative
+decays, fp32); validated in tests/test_kernels_rwkv.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref, s_scr, *, chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)  # [C, dh]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)  # log decay, < 0
+    u = u_ref[0].astype(jnp.float32)  # [dh]
+    s = s_scr[...]  # [dh, dh] (key-dim first)
+
+    C = r.shape[0]
+    cl = jnp.cumsum(w, axis=0)  # [C, dh]
+    cl_excl = cl - w
+
+    # inter-chunk: y_state[t] = sum_i r[t,i] exp(cl_excl[t,i]) s[i,j]
+    r_dec = r * jnp.exp(cl_excl)
+    y = jax.lax.dot(r_dec, s)  # [C, dh]
+
+    # intra-chunk: D[t,tau,i] = exp(cl_excl[t,i] - cl[tau,i]) for tau < t.
+    # mask in LOG domain: above-diagonal exponents are positive and would
+    # overflow exp() (inf would poison the contraction before the tri mask).
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    u_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    tri = u_idx < t_idx
+    dlog = cl_excl[:, None, :] - cl[None, :, :]  # [C, C, dh]
+    dmat = jnp.exp(jnp.where(tri[:, :, None], dlog, -1e30))
+    att = jnp.einsum("ti,tui,ui->tu", r, dmat, k)
+    y = y + jax.lax.dot(att, v)
+    # bonus diagonal (tau == t)
+    y = y + jnp.sum(r * u[None, :] * k, axis=1, keepdims=True) * v
+
+    # state update: s' = exp(cl[-1]) * s + sum_u exp(cl[-1]-cl[u]) k_u v_u^T
+    k_dec = k * jnp.exp(cl[-1:, :] - cl)
+    s_scr[...] = jnp.exp(cl[-1])[:, None] * s + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ()))
+    )
+    y_ref[0, ...] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == chunks - 1)
+    def _done():
+        sT_ref[0, ...] = s_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(
+    r: jax.Array,  # [N, S, dh]
+    k: jax.Array,
+    v: jax.Array,
+    wlog: jax.Array,  # [N, S, dh], log decay < 0
+    u: jax.Array,  # [N, dh] bonus
+    s0: jax.Array,  # [N, dh, dh] initial state
+    *,
+    chunk: int = 32,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    N, S, dh = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    grid = (N, S // chunk)
+    kernel = functools.partial(_wkv_kernel, chunks=grid[1])
+    stream = pl.BlockSpec((1, chunk, dh), lambda n, c: (n, c, 0))
+    y, sT = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            stream, stream, stream, stream,
+            pl.BlockSpec((1, dh), lambda n, c: (n, 0)),
+            pl.BlockSpec((1, dh, dh), lambda n, c: (n, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dh), lambda n, c: (n, c, 0)),
+            pl.BlockSpec((1, dh, dh), lambda n, c: (n, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, S, dh), jnp.float32),
+            jax.ShapeDtypeStruct((N, dh, dh), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, wlog, u, s0)
+    return y, sT

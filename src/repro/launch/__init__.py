@@ -1,0 +1,3 @@
+# Launchers: mesh.py (production mesh), dryrun.py (multi-pod compile checks),
+# train.py / serve.py (end-to-end drivers). Import nothing at package level:
+# dryrun.py must control XLA_FLAGS before any jax device initialization.

@@ -1,0 +1,3 @@
+"""Model zoo: all 10 assigned architectures as composable JAX modules."""
+from .api import CACHE_PAD, Model, build_model
+from .params import ParamInfo, abstract, count_params, materialize, partition_specs

@@ -1,0 +1,173 @@
+"""Uniform model API over the zoo families.
+
+``build_model(cfg)`` returns a :class:`Model` whose methods cover the three
+step kinds every (arch x shape) cell needs:
+
+  loss(params, batch)                 -- training objective (train_4k)
+  prefill(params, batch, cache)       -- fill a KV/state cache (prefill_32k)
+  decode_step(params, cache, tokens)  -- one new token (decode_32k / long_500k)
+
+plus declaration helpers (param_infos / cache_infos / input_specs) used by
+the launcher and the multi-pod dry-run (ShapeDtypeStructs only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, ModelConfig
+from . import encdec, hybrid, rwkv, transformer
+from .params import ParamInfo
+from .transformer import cross_entropy
+
+#: extra cache rows beyond the nominal context (decode writes at len)
+CACHE_PAD = 128
+
+
+def _apply_param_dtype(infos, cfg):
+    """Store big weight matrices in cfg.param_dtype (bf16 for the 1T kimi);
+    norms/biases/small vectors stay fp32 for numerical safety."""
+    def cast(i: ParamInfo) -> ParamInfo:
+        if i.init in ("normal", "embed") and len(i.shape) >= 2:
+            return dataclasses.replace(i, dtype=cfg.param_dtype)
+        return i
+
+    return jax.tree_util.tree_map(cast, infos, is_leaf=lambda x: isinstance(x, ParamInfo))
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    _infos: Callable[[], Any]
+    _forward: Callable[..., Any]  # (params, tokens, cache, extras, last_only)
+    _cache_infos: Callable[[int, int], Any]
+
+    # --- declarations -------------------------------------------------------
+    def param_infos(self):
+        return _apply_param_dtype(self._infos(), self.cfg)
+
+    def cache_infos(self, batch: int, max_len: int):
+        return self._cache_infos(batch, max_len + CACHE_PAD)
+
+    def input_specs(self, shape: str, kind: str | None = None) -> dict:
+        """ShapeDtypeStruct stand-ins for one assigned input shape."""
+        info = SHAPES[shape]
+        kind = kind or info["kind"]
+        B, S = info["global_batch"], info["seq_len"]
+        cfg = self.cfg
+        i32, emb = jnp.int32, cfg.compute_dtype
+        if kind == "train":
+            spec = {}
+            s_text = S
+            if cfg.family == "vlm":
+                s_text = S - cfg.vis_tokens
+                spec["vis_embeds"] = jax.ShapeDtypeStruct((B, cfg.vis_tokens, cfg.d_model), emb)
+            if cfg.family == "encdec":
+                spec["audio_embeds"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), emb)
+            spec["tokens"] = jax.ShapeDtypeStruct((B, s_text), i32)
+            spec["labels"] = jax.ShapeDtypeStruct((B, s_text), i32)
+            return spec
+        if kind == "prefill":
+            spec = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            if cfg.family == "vlm":
+                spec["tokens"] = jax.ShapeDtypeStruct((B, S - cfg.vis_tokens), i32)
+                spec["vis_embeds"] = jax.ShapeDtypeStruct((B, cfg.vis_tokens, cfg.d_model), emb)
+            if cfg.family == "encdec":
+                spec["audio_embeds"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), emb)
+            return spec
+        if kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+        raise ValueError(kind)
+
+    # --- steps -------------------------------------------------------------
+    def head_matrix(self, params):
+        if self.cfg.family in ("dense", "moe", "vlm") and self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    def loss(self, params, batch: dict):
+        """Training objective via final hidden states + seq-chunked CE
+        (the [B,S,V] logits never materialize whole; see
+        transformer.chunked_cross_entropy)."""
+        extras = {k: v for k, v in batch.items() if k not in ("tokens", "labels")}
+        hidden, _ = self._forward(
+            params, batch["tokens"], None, extras, False, return_hidden=True
+        )
+        if self.cfg.family == "vlm" and "vis_embeds" in batch:
+            hidden = hidden[:, batch["vis_embeds"].shape[1]:, :]
+        return transformer.chunked_cross_entropy(
+            hidden, self.head_matrix(params), batch["labels"], self.cfg.vocab, self.cfg
+        )
+
+    def prefill(self, params, batch: dict, cache):
+        extras = {k: v for k, v in batch.items() if k != "tokens"}
+        tokens = batch["tokens"]
+        if self.cfg.family == "encdec":
+            enc_out = encdec.encode(params, self.cfg, batch["audio_embeds"])
+            cache = encdec.fill_cross_kv(params, self.cfg, cache, enc_out)
+            logits, cache = encdec.decode(
+                params, self.cfg, tokens, cache=cache, last_only=True
+            )
+            return logits, cache
+        logits, cache = self._forward(params, tokens, cache, extras, True)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        logits, cache = self._forward(params, tokens, cache, {}, True)
+        return logits, cache
+
+
+def _fw_transformer(cfg):
+    def fw(params, tokens, cache, extras, last_only, return_hidden=False):
+        return transformer.forward(
+            params, cfg, tokens,
+            prefix_embeds=extras.get("vis_embeds"), cache=cache,
+            last_only=last_only, return_hidden=return_hidden,
+        )
+    return fw
+
+
+def _fw_rwkv(cfg):
+    def fw(params, tokens, cache, extras, last_only, return_hidden=False):
+        return rwkv.forward(params, cfg, tokens, cache=cache, last_only=last_only,
+                            return_hidden=return_hidden)
+    return fw
+
+
+def _fw_hybrid(cfg):
+    def fw(params, tokens, cache, extras, last_only, return_hidden=False):
+        return hybrid.forward(params, cfg, tokens, cache=cache, last_only=last_only,
+                              return_hidden=return_hidden)
+    return fw
+
+
+def _fw_encdec(cfg):
+    def fw(params, tokens, cache, extras, last_only, return_hidden=False):
+        if cache is None:  # teacher-forcing training path
+            return encdec.forward(
+                params, cfg, tokens, audio_embeds=extras["audio_embeds"],
+                last_only=last_only, return_hidden=return_hidden,
+            )
+        return encdec.decode(params, cfg, tokens, cache=cache, last_only=last_only,
+                             return_hidden=return_hidden)
+    return fw
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return Model(cfg, lambda: transformer.lm_infos(cfg), _fw_transformer(cfg),
+                     lambda b, m: transformer.cache_infos(cfg, b, m))
+    if fam == "ssm":
+        return Model(cfg, lambda: rwkv.lm_infos(cfg), _fw_rwkv(cfg),
+                     lambda b, m: rwkv.cache_infos(cfg, b, m))
+    if fam == "hybrid":
+        return Model(cfg, lambda: hybrid.lm_infos(cfg), _fw_hybrid(cfg),
+                     lambda b, m: hybrid.cache_infos(cfg, b, m))
+    if fam == "encdec":
+        return Model(cfg, lambda: encdec.lm_infos(cfg), _fw_encdec(cfg),
+                     lambda b, m: encdec.cache_infos(cfg, b, m))
+    raise ValueError(f"unknown family {fam!r}")

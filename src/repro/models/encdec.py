@@ -1,0 +1,185 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+Assigned arch: whisper-medium (24 enc + 24 dec layers, d_model=1024).
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings [B, enc_seq, D]. The encoder runs
+bidirectional attention over them with learned positions; the decoder is a
+causal LM with cross-attention whose cross-K/V are computed once at prefill
+and carried in the cache.
+
+Deviation (documented): real Whisper uses learned decoder positions capped
+at 448; the assigned decode shapes reach 32k tokens, so the decoder uses
+RoPE instead of a 32k-row learned table.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .params import ParamInfo, stack_layers
+from .transformer import cross_entropy
+
+
+def enc_layer_infos(cfg) -> dict:
+    return {
+        "ln1": L.norm_infos(cfg),
+        "attn": L.attention_infos(cfg),
+        "ln2": L.norm_infos(cfg),
+        "mlp": L.mlp_infos(cfg),
+    }
+
+
+def dec_layer_infos(cfg) -> dict:
+    return {
+        "ln1": L.norm_infos(cfg),
+        "self_attn": L.attention_infos(cfg),
+        "ln_x": L.norm_infos(cfg),
+        "cross_attn": L.attention_infos(cfg),
+        "ln2": L.norm_infos(cfg),
+        "mlp": L.mlp_infos(cfg),
+    }
+
+
+def lm_infos(cfg) -> dict:
+    vp = L.padded_vocab(cfg.vocab)
+    return {
+        "embed": ParamInfo((vp, cfg.d_model), ("vocab", "dmodel"), "embed", scale=0.02),
+        "enc_pos": ParamInfo((cfg.enc_seq, cfg.d_model), (None, "dmodel"), "small"),
+        "enc_layers": stack_layers(cfg.enc_layers, enc_layer_infos(cfg)),
+        "enc_ln_f": L.norm_infos(cfg),
+        "dec_layers": stack_layers(cfg.n_layers, dec_layer_infos(cfg)),
+        "ln_f": L.norm_infos(cfg),
+        "lm_head": ParamInfo((cfg.d_model, vp), ("dmodel", "vocab")),
+    }
+
+
+def cache_infos(cfg, batch: int, max_len: int) -> dict:
+    Hkv, dh = cfg.n_kv_heads, cfg.d_head
+    from .transformer import kv_cache_axes
+    kv = ParamInfo((cfg.n_layers, batch, max_len, Hkv, dh),
+                   kv_cache_axes(cfg), "zeros", dtype=jnp.bfloat16)
+    xkv = ParamInfo((cfg.n_layers, batch, cfg.enc_seq, Hkv, dh),
+                    ("layer", "batch", None, "kv_heads", None), "zeros", dtype=jnp.bfloat16)
+    return {"k": kv, "v": kv, "xk": xkv, "xv": xkv,
+            "len": ParamInfo((), (), "zeros", dtype=jnp.int32)}
+
+
+def encode(params: dict, cfg, audio_embeds: jax.Array) -> jax.Array:
+    """Bidirectional encoder over precomputed frame embeddings [B, T_enc, D]."""
+    dt = cfg.compute_dtype
+    x = audio_embeds.astype(dt) + params["enc_pos"].astype(dt)[None]
+    x = L.shard(x, "batch", None, None)
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, lp):
+        a, _ = L.attention_apply(
+            lp["attn"], L.norm_apply(lp["ln1"], h, cfg), cfg,
+            positions=positions, causal=False, rope_on=False,
+        )
+        h = h + a
+        h = h + L.mlp_apply(lp["mlp"], L.norm_apply(lp["ln2"], h, cfg), cfg)
+        return h, None
+
+    if cfg.remat == "layer":
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    else:
+        for i in range(cfg.enc_layers):
+            x, _ = body(x, jax.tree_util.tree_map(lambda a: a[i], params["enc_layers"]))
+    return L.norm_apply(params["enc_ln_f"], x, cfg)
+
+
+def _dec_layer(p: dict, x: jax.Array, cfg, *, positions, cache, enc_kv):
+    h = L.norm_apply(p["ln1"], x, cfg)
+    a, new_cache = L.attention_apply(p["self_attn"], h, cfg, positions=positions, cache=cache)
+    x = x + a
+    h = L.norm_apply(p["ln_x"], x, cfg)
+    x = x + L.cross_attention_apply(p["cross_attn"], h, cfg, enc_kv)
+    h = L.norm_apply(p["ln2"], x, cfg)
+    x = x + L.mlp_apply(p["mlp"], h, cfg)
+    return x, new_cache
+
+
+def decode(params: dict, cfg, tokens: jax.Array, *, enc_out: jax.Array | None = None,
+           cache: dict | None = None, last_only: bool = False, return_hidden: bool = False):
+    """Decoder pass. Training: pass enc_out, cache=None. Serving: cache holds
+    the (precomputed) cross-K/V; enc_out is only needed at prefill time."""
+    dt = cfg.compute_dtype
+    x = L.shard(L.sharded_embed(params["embed"], tokens, cfg), "batch", None, None)
+    S = x.shape[1]
+    offset = cache["len"] if cache is not None else 0
+    positions = offset + jnp.arange(S)
+
+    if cache is None:
+        assert enc_out is not None
+
+        def body(h, lp):
+            ekv = L.encoder_kv(lp["cross_attn"], enc_out, cfg)
+            h2, _ = _dec_layer(lp, h, cfg, positions=positions, cache=None, enc_kv=ekv)
+            return h2, None
+
+        if cfg.remat == "layer":
+            body = jax.checkpoint(body)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        else:
+            for i in range(cfg.n_layers):
+                x, _ = body(x, jax.tree_util.tree_map(lambda a: a[i], params["dec_layers"]))
+        new_cache = None
+    else:
+
+        def body(h, xs):
+            lp, ck, cv, xk, xv = xs
+            h2, nc = _dec_layer(
+                lp, h, cfg, positions=positions,
+                cache={"k": ck, "v": cv, "len": cache["len"]},
+                enc_kv=(xk.astype(dt), xv.astype(dt)),
+            )
+            return h2, (nc["k"], nc["v"])
+
+        xs = (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+        if cfg.scan_layers:
+            x, (nk, nv) = jax.lax.scan(body, x, xs)
+        else:
+            acc = []
+            for i in range(cfg.n_layers):
+                x, o = body(x, jax.tree_util.tree_map(lambda a: a[i], xs))
+                acc.append(o)
+            nk, nv = jnp.stack([a[0] for a in acc]), jnp.stack([a[1] for a in acc])
+        new_cache = dict(cache, k=nk, v=nv, len=cache["len"] + S)
+
+    x = L.norm_apply(params["ln_f"], x, cfg)
+    if last_only:
+        x = x[:, -1:, :]
+    if return_hidden:
+        return x, new_cache
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(dt))
+    logits = L.mask_padded_logits(logits, cfg.vocab)
+    return L.shard(logits, "batch", None, "act_vocab"), new_cache
+
+
+def fill_cross_kv(params: dict, cfg, cache: dict, enc_out: jax.Array) -> dict:
+    """Populate the cache's cross-K/V from the encoder output (prefill step)."""
+
+    def per_layer(lp):
+        k, v = L.encoder_kv(lp["cross_attn"], enc_out, cfg)
+        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+    if cfg.scan_layers:
+        xk, xv = jax.lax.map(per_layer, params["dec_layers"])
+    else:
+        outs = [per_layer(jax.tree_util.tree_map(lambda a: a[i], params["dec_layers"]))
+                for i in range(cfg.n_layers)]
+        xk = jnp.stack([o[0] for o in outs])
+        xv = jnp.stack([o[1] for o in outs])
+    return dict(cache, xk=xk, xv=xv)
+
+
+def forward(params: dict, cfg, tokens: jax.Array, *, audio_embeds: jax.Array,
+            cache: dict | None = None, last_only: bool = False, return_hidden: bool = False):
+    """Teacher-forcing path: encode then decode in one step (train shape)."""
+    enc_out = encode(params, cfg, audio_embeds)
+    return decode(params, cfg, tokens, enc_out=enc_out, cache=cache,
+                  last_only=last_only, return_hidden=return_hidden)

@@ -1,0 +1,129 @@
+"""Mamba (S6) selective-SSM block, used by the Jamba hybrid (arXiv:2403.19887).
+
+The selective scan is sequential over time with a small carried state
+[B, d_inner, d_state]; matmul-heavy projections (in/out/x/dt) sit outside the
+scan and dominate FLOPs (>99% -- the scan body is elementwise), so the
+lax.scan time loop is the right production form and the cost-extrapolation
+undercount of the scan body is negligible (documented in EXPERIMENTS.md).
+The Pallas kernel (kernels/mamba_scan.py) is the TPU-optimized chunked form.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .params import ParamInfo
+
+
+def dims(cfg) -> tuple[int, int, int]:
+    d_inner = cfg.mamba_expand * cfg.d_model
+    dt_rank = math.ceil(cfg.d_model / 16)
+    return d_inner, dt_rank, cfg.mamba_dstate
+
+
+def layer_infos(cfg) -> dict:
+    D = cfg.d_model
+    d_inner, dt_rank, d_state = dims(cfg)
+    K = cfg.mamba_dconv
+    return {
+        "in_proj": ParamInfo((D, 2, d_inner), ("dmodel", None, "mlp")),
+        "conv_w": ParamInfo((K, d_inner), ("conv", "mlp"), "small"),
+        "conv_b": ParamInfo((d_inner,), ("mlp",), "zeros"),
+        "x_proj": ParamInfo((d_inner, dt_rank + 2 * d_state), ("mlp", None)),
+        "dt_proj": ParamInfo((dt_rank, d_inner), (None, "mlp")),
+        "dt_bias": ParamInfo((d_inner,), ("mlp",), "small", scale=0.5),
+        "a_log": ParamInfo((d_inner, d_state), ("mlp", "state"), "small", scale=0.5),
+        "d_skip": ParamInfo((d_inner,), ("mlp",), "ones"),
+        "out_proj": ParamInfo((d_inner, D), ("mlp", "dmodel")),
+    }
+
+
+def state_infos(cfg, batch: int) -> dict:
+    d_inner, _, d_state = dims(cfg)
+    return {
+        "h": ParamInfo((batch, d_inner, d_state), ("batch", "mlp", None), "zeros"),
+        "conv": ParamInfo(
+            (batch, cfg.mamba_dconv - 1, d_inner), ("batch", None, "mlp"), "zeros",
+            dtype=jnp.bfloat16,
+        ),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array, prev: jax.Array | None):
+    """Depthwise causal conv over time. u: [B,S,E]; w: [K,E]. Returns (y, tail)."""
+    K = w.shape[0]
+    pad = (
+        jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+        if prev is None
+        else prev.astype(u.dtype)
+    )
+    up = jnp.concatenate([pad, u], axis=1)  # [B, S+K-1, E]
+    y = sum(up[:, i : i + u.shape[1], :] * w[i][None, None] for i in range(K)) + b[None, None]
+    return y, up[:, -(K - 1) :, :]
+
+
+def apply(p: dict, x: jax.Array, cfg, state: dict | None):
+    """Mamba block. x: [B,S,D]; state: {'h': [B,E,N] f32, 'conv': [B,K-1,E]} or None."""
+    B, S, D = x.shape
+    d_inner, dt_rank, d_state = dims(cfg)
+    dt = cfg.compute_dtype
+
+    uz = jnp.einsum("bsd,dce->bsce", x, p["in_proj"].astype(dt))
+    uz = L.shard(uz, "batch", None, None, "act_heads")
+    u, z = uz[..., 0, :], uz[..., 1, :]
+
+    prev_conv = state["conv"] if state is not None else None
+    u, conv_tail = _causal_conv(u, p["conv_w"].astype(dt), p["conv_b"].astype(dt), prev_conv)
+    u = jax.nn.silu(u)
+
+    xdbc = jnp.einsum("bse,er->bsr", u, p["x_proj"].astype(dt))
+    dt_in, Bc, Cc = jnp.split(xdbc, [dt_rank, dt_rank + d_state], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_in, p["dt_proj"].astype(dt)).astype(jnp.float32)
+        + p["dt_bias"][None, None]
+    )  # [B,S,E] fp32
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))  # [E,N]
+
+    h0 = (
+        state["h"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((B, d_inner, d_state), jnp.float32)
+    )
+
+    # Two-level chunked selective scan. The [B,S,E,N] decay/input tensors are
+    # NEVER materialized over the full sequence (at jamba-52b scale that is
+    # >2GiB/device/layer and was the dominant temp buffer): each chunk
+    # computes da/dbu on the fly from [B,c,E]-sized xs, and jax.checkpoint on
+    # the chunk body bounds the backward save to one chunk + the per-chunk
+    # carries (S/c states instead of S).
+    c = 256 if S % 256 == 0 else S  # one chunk for short/odd sequences
+    n = S // c
+    uf = u.astype(jnp.float32)
+    deltaf = delta  # [B,S,E] fp32
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+
+    def chunk_body(h, xs):
+        d_c, u_c, b_c, c_c = xs  # [B,c,E], [B,c,E], [B,c,N], [B,c,N]
+        da_c = jnp.exp(d_c[..., None] * A[None, None])  # [B,c,E,N]
+        dbu_c = (d_c * u_c)[..., None] * b_c[:, :, None, :]
+
+        def step(hh, t):
+            hh = da_c[:, t] * hh + dbu_c[:, t]
+            return hh, jnp.einsum("ben,bn->be", hh, c_c[:, t])
+
+        h, ys = jax.lax.scan(step, h, jnp.arange(c))
+        return h, ys  # ys: [c, B, E]
+
+    split = lambda x: x.reshape(B, n, c, *x.shape[2:]).transpose(1, 0, 2, *range(3, x.ndim + 1))
+    xs = (split(deltaf), split(uf), split(Bf), split(Cf))
+    hT, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, xs)
+    y = ys.reshape(n, c, B, d_inner).transpose(2, 0, 1, 3).reshape(B, S, d_inner).astype(dt)
+    y = y + u * p["d_skip"].astype(dt)[None, None]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt))
+    new_state = {"h": hT, "conv": conv_tail.astype(jnp.bfloat16)}
+    return L.shard(out, "batch", None, None), new_state

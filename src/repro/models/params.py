@@ -1,0 +1,151 @@
+"""Parameter declaration system: one source of truth for shapes, sharding and init.
+
+A model declares its parameters as a pytree of :class:`ParamInfo`; from that
+single declaration we derive
+  * ``materialize``   -- actual initialized arrays (smoke tests, examples),
+  * ``abstract``      -- ShapeDtypeStructs (the multi-pod dry-run never allocates),
+  * ``partition_specs`` -- jax.sharding.PartitionSpec pytree via logical-axis rules.
+
+Logical axes used across the zoo (resolved by ``configs.base.sharding_rules``):
+  'dmodel'       residual-stream features        -> None (or 'data' under FSDP)
+  'heads'        attention query heads           -> 'model'
+  'kv_heads'     attention kv heads              -> 'model' (replicated up to TP)
+  'mlp'          feed-forward hidden             -> 'model'
+  'vocab'        embedding rows / logits         -> 'model'
+  'expert'       MoE expert dimension            -> 'model'  (expert parallelism)
+  'conv','state',... small dims                  -> None
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamInfo:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis names, same length as shape
+    init: str = "normal"  # normal | zeros | ones | embed | small
+    scale: float | None = None  # overrides fan-in scaling when set
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"axes {self.axes} do not match shape {self.shape}")
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    return shape[0] if len(shape) > 1 else max(1, shape[0])
+
+
+def _init_one(key: jax.Array, info: ParamInfo) -> jax.Array:
+    if info.init == "zeros":
+        return jnp.zeros(info.shape, info.dtype)
+    if info.init == "ones":
+        return jnp.ones(info.shape, info.dtype)
+    if info.init == "const":
+        return jnp.full(info.shape, info.scale, info.dtype)
+    scale = info.scale
+    if info.init == "embed":
+        scale = 1.0 if scale is None else scale
+    elif info.init == "small":
+        scale = 0.02 if scale is None else scale
+    else:  # normal: truncated-normal, 1/sqrt(fan_in)
+        scale = (1.0 / math.sqrt(_fan_in(info.shape))) if scale is None else scale
+    return (jax.random.truncated_normal(key, -2.0, 2.0, info.shape, jnp.float32) * scale).astype(info.dtype)
+
+
+def is_info(x) -> bool:
+    return isinstance(x, ParamInfo)
+
+
+def materialize(tree, rng: jax.Array):
+    """Initialize every ParamInfo leaf with a split of ``rng``."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_info)
+    keys = jax.random.split(rng, len(leaves))
+    arrs = [_init_one(k, info) for k, info in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def abstract(tree):
+    """ShapeDtypeStruct pytree -- used by the dry-run (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda i: jax.ShapeDtypeStruct(i.shape, i.dtype), tree, is_leaf=is_info
+    )
+
+
+def _axes_product(axes, sizes: Mapping[str, int]) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return sizes.get(axes, 1)
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def _as_tuple(axes):
+    if axes is None:
+        return ()
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def partition_specs(tree, rules: Mapping[str, Any], axis_sizes: Mapping[str, int] | None = None):
+    """Resolve logical axes -> PartitionSpec via ``rules`` (name -> mesh axis).
+
+    With ``axis_sizes`` (mesh axis -> size), enforce pjit's divisibility
+    requirement per dimension:
+      * a mesh axis that does not divide its dimension is dropped
+        (e.g. kv_heads=4 on model=16 -> replicated);
+      * if that drops 'model' from a large weight entirely, fall back to
+        sharding the 'dmodel' (contraction) dimension over 'model' -- memory
+        still scales with TP at the cost of a partial-sum all-reduce, the
+        classic contraction-parallel layout (DESIGN.md §5).
+    """
+
+    def spec(info: ParamInfo) -> PartitionSpec:
+        resolved = [rules.get(a) if a is not None else None for a in info.axes]
+        if axis_sizes is None:
+            return PartitionSpec(*resolved)
+        out = []
+        for dim, axes in zip(info.shape, resolved):
+            n = _axes_product(axes, axis_sizes)
+            out.append(axes if (n > 1 and dim % n == 0) else
+                       (axes if n == 1 else None))
+        uses_model = any("model" in _as_tuple(a) for a in out)
+        big = int(np.prod(info.shape)) >= (1 << 20)
+        if not uses_model and big and "model" in axis_sizes:
+            for i, (dim, logical) in enumerate(zip(info.shape, info.axes)):
+                if logical != "dmodel":
+                    continue
+                combined = _as_tuple(out[i]) + ("model",)
+                if dim % _axes_product(combined, axis_sizes) == 0:
+                    out[i] = combined if len(combined) > 1 else combined[0]
+                    break
+        return PartitionSpec(*out)
+
+    return jax.tree_util.tree_map(spec, tree, is_leaf=is_info)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_info)
+    return int(sum(int(np.prod(i.shape)) for i in leaves))
+
+
+def stack_layers(n: int, info_tree):
+    """Prepend a layer axis to every ParamInfo (for lax.scan over layers).
+
+    The layer axis is logical axis 'layer' (never sharded -> scanned).
+    """
+    return jax.tree_util.tree_map(
+        lambda i: ParamInfo((n, *i.shape), ("layer", *i.axes), i.init, i.scale, i.dtype),
+        info_tree,
+        is_leaf=is_info,
+    )

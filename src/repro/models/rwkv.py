@@ -1,0 +1,267 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+per-channel decay. Assigned arch: rwkv6-7b (32L, d_model=4096, d_ff=14336).
+
+TPU adaptation: the WKV6 recurrence is computed in *chunked* form -- within a
+chunk of C tokens the contribution is an attention-like [C, C, dh] einsum
+(MXU-friendly), across chunks a lax.scan carries the per-head state
+S in R^[dh_k, dh_v]. This is exact (log-space relative decays, fp32), and it
+is the same blocking the Pallas kernel (kernels/rwkv6_scan.py) implements
+with explicit VMEM tiles.
+
+Recurrence per head (k-dim i, v-dim j):
+    y_t[j] = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] k_t[i] v_t[j])
+    S_t    = diag(w_t) S_{t-1} + k_t v_t^T,   w_t = exp(-exp(wlog_t)) in (0,1)
+with w_t data-dependent (token-shift mix + LoRA), the Finch signature.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .params import ParamInfo, stack_layers
+
+WKV_CHUNK = 32  # intra-chunk length for the exact chunked recurrence
+
+
+def _mix_infos(cfg, n: int) -> ParamInfo:
+    return ParamInfo((n, cfg.d_model), (None, "dmodel"), "small")
+
+
+def layer_infos(cfg) -> dict:
+    D = cfg.d_model
+    H = D // cfg.rwkv_head_size
+    dh = cfg.rwkv_head_size
+    F = cfg.d_ff
+    lora = 64
+    return {
+        "ln1": L.norm_infos(cfg),
+        "ln2": L.norm_infos(cfg),
+        "time": {
+            "mix": _mix_infos(cfg, 5),  # mu_r, mu_k, mu_v, mu_g, mu_w
+            "wr": ParamInfo((D, H, dh), ("dmodel", "heads", None)),
+            "wk": ParamInfo((D, H, dh), ("dmodel", "heads", None)),
+            "wv": ParamInfo((D, H, dh), ("dmodel", "heads", None)),
+            "wg": ParamInfo((D, H, dh), ("dmodel", "heads", None)),
+            "w_base": ParamInfo((H, dh), ("heads", None), "const", scale=-2.0),
+            "w_lora_a": ParamInfo((D, lora), ("dmodel", None), "small"),
+            "w_lora_b": ParamInfo((lora, H, dh), (None, "heads", None), "zeros"),
+            "bonus": ParamInfo((H, dh), ("heads", None), "small"),
+            "gn_scale": ParamInfo((H, dh), ("heads", None), "ones"),
+            "wo": ParamInfo((H, dh, D), ("heads", None, "dmodel")),
+        },
+        "channel": {
+            "mix": _mix_infos(cfg, 2),  # mu_k, mu_r
+            "wk": ParamInfo((D, F), ("dmodel", "mlp")),
+            "wv": ParamInfo((F, D), ("mlp", "dmodel")),
+            "wr": ParamInfo((D, D), ("dmodel", None)),
+        },
+    }
+
+
+def lm_infos(cfg) -> dict:
+    vp = L.padded_vocab(cfg.vocab)
+    return {
+        "embed": ParamInfo((vp, cfg.d_model), ("vocab", "dmodel"), "embed", scale=0.02),
+        "layers": stack_layers(cfg.n_layers, layer_infos(cfg)),
+        "ln_f": L.norm_infos(cfg),
+        "lm_head": ParamInfo((cfg.d_model, vp), ("dmodel", "vocab")),
+    }
+
+
+def cache_infos(cfg, batch: int, max_len: int) -> dict:
+    D = cfg.d_model
+    H, dh = D // cfg.rwkv_head_size, cfg.rwkv_head_size
+    return {
+        "wkv": ParamInfo((cfg.n_layers, batch, H, dh, dh), ("layer", "batch", "kv_heads", None, None), "zeros"),
+        "shift_t": ParamInfo((cfg.n_layers, batch, D), ("layer", "batch", None), "zeros", dtype=jnp.bfloat16),
+        "shift_c": ParamInfo((cfg.n_layers, batch, D), ("layer", "batch", None), "zeros", dtype=jnp.bfloat16),
+        "len": ParamInfo((), (), "zeros", dtype=jnp.int32),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """x_{t-1} stream: shift right by one; position 0 gets `prev` (or zeros)."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :].astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def wkv_chunked(r, k, v, wlog, u, s0):
+    """Exact chunked WKV6. r,k,v: [B,S,H,dh]; wlog: [B,S,H,dh] (log decay <0);
+    u: [H,dh]; s0: [B,H,dh,dh]. Returns (y [B,S,H,dh], sT)."""
+    B, S, H, dh = r.shape
+    C = min(WKV_CHUNK, S)
+    n = -(-S // C)
+    pad = n * C - S
+    if pad:  # pad the tail: k=r=v=0 adds nothing, wlog=0 (decay 1) keeps state
+        z = jnp.zeros((B, pad, H, dh))
+        r = jnp.concatenate([r, z.astype(r.dtype)], axis=1)
+        k = jnp.concatenate([k, z.astype(k.dtype)], axis=1)
+        v = jnp.concatenate([v, z.astype(v.dtype)], axis=1)
+        wlog = jnp.concatenate([wlog, z.astype(wlog.dtype)], axis=1)
+        S = n * C
+    rs = r.reshape(B, n, C, H, dh).astype(jnp.float32)
+    ks = k.reshape(B, n, C, H, dh).astype(jnp.float32)
+    vs = v.reshape(B, n, C, H, dh).astype(jnp.float32)
+    ws = wlog.reshape(B, n, C, H, dh).astype(jnp.float32)
+
+    tri_lo = jnp.tril(jnp.ones((C, C), bool), -1)  # tau < t
+
+    def chunk(s, xs):
+        rc, kc, vc, wc = xs  # [B,C,H,dh]
+        cl = jnp.cumsum(wc, axis=1)  # cumulative log decay, [B,C,H,dh]
+        # decay from chunk start to *before* t (exclusive): cl_excl[t] = cl[t] - wc[t]
+        cl_excl = cl - wc
+        # inter-chunk: y_state[t] = sum_i r[t,i] * exp(cl_excl[t,i]) * s[i,j]
+        r_dec = rc * jnp.exp(cl_excl)
+        y_state = jnp.einsum("bchi,bhij->bchj", r_dec, s)
+        # intra-chunk: D[t,u,i] = exp(cl_excl[t,i] - cl[u,i]) for u < t ; bonus at u == t
+        # Mask in LOG domain: exponents above the diagonal are positive and
+        # exp() would overflow to inf -- where(mask, inf, 0) then NaNs the
+        # backward pass (inf * 0 cotangent).
+        dlog = cl_excl[:, :, None] - cl[:, None, :, :]  # [B,C,C,H,dh]
+        dmat = jnp.exp(jnp.where(tri_lo[None, :, :, None, None], dlog, -1e30))
+        att = jnp.einsum("bthi,btuhi,buhi->btuh", rc, dmat, kc)
+        y_intra = jnp.einsum("btuh,buhj->bthj", att, vc)
+        y_bonus = jnp.einsum("bthi,hi,bthi->bth", rc, u.astype(jnp.float32), kc)[..., None] * vc
+        # state update: s' = exp(cl[-1]) * s + sum_u exp(cl[-1] - cl[u]) k_u v_u^T
+        k_dec = kc * jnp.exp(cl[:, -1:, :, :] - cl)
+        s_new = jnp.exp(cl[:, -1])[:, :, :, None] * s + jnp.einsum("buhi,buhj->bhij", k_dec, vc)
+        return s_new, y_state + y_intra + y_bonus
+
+    xs = (rs.transpose(1, 0, 2, 3, 4), ks.transpose(1, 0, 2, 3, 4),
+          vs.transpose(1, 0, 2, 3, 4), ws.transpose(1, 0, 2, 3, 4))
+    sT, ys = jax.lax.scan(chunk, s0.astype(jnp.float32), xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+    return y[:, : r.shape[1] - pad], sT
+
+
+def time_mix(p: dict, x: jax.Array, cfg, state: dict | None):
+    """RWKV6 time-mixing block. state: {'wkv': [B,H,dh,dh], 'shift': [B,D]} or None."""
+    D = cfg.d_model
+    H, dh = D // cfg.rwkv_head_size, cfg.rwkv_head_size
+    dt = cfg.compute_dtype
+    B, S, _ = x.shape
+
+    prev = state["shift"] if state is not None else None
+    xp = _token_shift(x, prev)
+    mix = p["mix"].astype(dt)  # [5, D]
+    xr, xk, xv, xg, xw = (x + mix[i][None, None] * (xp - x) for i in range(5))
+
+    r = jnp.einsum("bsd,dhk->bshk", xr, p["wr"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", xk, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", xv, p["wv"].astype(dt))
+    g = jnp.einsum("bsd,dhk->bshk", xg, p["wg"].astype(dt))
+    r = L.shard(r, "batch", None, "act_heads", None)
+    k = L.shard(k, "batch", None, "act_heads", None)
+    v = L.shard(v, "batch", None, "act_heads", None)
+
+    # data-dependent decay (the Finch signature): base + LoRA(xw)
+    wlora = jnp.einsum("bsd,dl,lhk->bshk", xw.astype(jnp.float32), p["w_lora_a"], p["w_lora_b"])
+    wlog = -jnp.exp(p["w_base"].astype(jnp.float32)[None, None] + wlora)  # < 0
+
+    s0 = (state["wkv"] if state is not None
+          else jnp.zeros((B, H, dh, dh), jnp.float32))
+    y, sT = wkv_chunked(r, k, v, wlog, p["bonus"], s0)
+
+    # per-head group-norm then gate
+    yf = y.astype(jnp.float32)
+    var = (yf**2).mean(-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * p["gn_scale"][None, None]
+    y = (yf.astype(dt) * jax.nn.silu(g))
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(dt))
+    new_state = {"wkv": sT, "shift": x[:, -1, :]}
+    return L.shard(out, "batch", None, None), new_state
+
+
+def channel_mix(p: dict, x: jax.Array, cfg, state: dict | None):
+    dt = cfg.compute_dtype
+    prev = state["shift"] if state is not None else None
+    xp = _token_shift(x, prev)
+    mix = p["mix"].astype(dt)
+    xk = x + mix[0][None, None] * (xp - x)
+    xr = x + mix[1][None, None] * (xp - x)
+    hidden = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(dt))
+    hidden = L.shard(hidden, "batch", None, "act_heads")
+    hidden = jnp.square(jax.nn.relu(hidden))
+    out = jnp.einsum("bsf,fd->bsd", hidden, p["wv"].astype(dt))
+    gate = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt)))
+    return gate * out, {"shift": x[:, -1, :]}
+
+
+def _layer_apply(p: dict, x: jax.Array, cfg, state: dict | None):
+    st_t = None if state is None else {"wkv": state["wkv"], "shift": state["shift_t"]}
+    h, new_t = time_mix(p["time"], L.norm_apply(p["ln1"], x, cfg), cfg, st_t)
+    x = x + h
+    st_c = None if state is None else {"shift": state["shift_c"]}
+    h, new_c = channel_mix(p["channel"], L.norm_apply(p["ln2"], x, cfg), cfg, st_c)
+    x = x + h
+    new_state = {"wkv": new_t["wkv"], "shift_t": new_t["shift"], "shift_c": new_c["shift"]}
+    return x, new_state
+
+
+def forward(params: dict, cfg, tokens: jax.Array, *, cache: dict | None = None,
+            prefix_embeds=None, last_only: bool = False, return_hidden: bool = False):
+    dt = cfg.compute_dtype
+    x = L.sharded_embed(params["embed"], tokens, cfg)
+    x = L.shard(x, "batch", None, None)
+
+    if cache is None:
+
+        def body(h, lp):
+            h2, _ = _layer_apply(lp, h, cfg, None)
+            return h2, None
+
+        if cfg.remat == "layer":
+            body = jax.checkpoint(body)
+        if cfg.scan_layers:
+            # two-level (sqrt-L) checkpointing: the recurrence needs the full
+            # sequence per layer so the residual cannot be seq-sharded like
+            # the transformer family; instead only every G-th carry is saved
+            # and groups are recomputed during the backward pass.
+            G = 8 if cfg.n_layers % 8 == 0 else 1
+            if G > 1 and cfg.remat == "layer":
+                grouped = jax.tree_util.tree_map(
+                    lambda a: a.reshape(cfg.n_layers // G, G, *a.shape[1:]),
+                    params["layers"],
+                )
+
+                def outer(h, lp_group):
+                    h2, _ = jax.lax.scan(body, h, lp_group)
+                    return h2, None
+
+                x, _ = jax.lax.scan(jax.checkpoint(outer), x, grouped)
+            else:
+                x, _ = jax.lax.scan(body, x, params["layers"])
+        else:
+            for i in range(cfg.n_layers):
+                x, _ = body(x, jax.tree_util.tree_map(lambda a: a[i], params["layers"]))
+        new_cache = None
+    else:
+
+        def body(h, xs):
+            lp, wkv, st, sc = xs
+            h2, ns = _layer_apply(lp, h, cfg, {"wkv": wkv, "shift_t": st, "shift_c": sc})
+            return h2, (ns["wkv"], ns["shift_t"].astype(jnp.bfloat16), ns["shift_c"].astype(jnp.bfloat16))
+
+        xs = (params["layers"], cache["wkv"], cache["shift_t"], cache["shift_c"])
+        if cfg.scan_layers:
+            x, (nw, nt, nc_) = jax.lax.scan(body, x, xs)
+        else:
+            acc = []
+            for i in range(cfg.n_layers):
+                x, out = body(x, jax.tree_util.tree_map(lambda a: a[i], xs))
+                acc.append(out)
+            nw = jnp.stack([a[0] for a in acc])
+            nt = jnp.stack([a[1] for a in acc])
+            nc_ = jnp.stack([a[2] for a in acc])
+        new_cache = {"wkv": nw, "shift_t": nt, "shift_c": nc_, "len": cache["len"] + tokens.shape[1]}
+
+    x = L.norm_apply(params["ln_f"], x, cfg)
+    if last_only:
+        x = x[:, -1:, :]
+    if return_hidden:
+        return x, new_cache
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(dt))
+    logits = L.mask_padded_logits(logits, cfg.vocab)
+    return L.shard(logits, "batch", None, "act_vocab"), new_cache

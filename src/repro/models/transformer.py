@@ -1,0 +1,243 @@
+"""Decoder-only transformer LM: dense (llama/qwen/starcoder/tinyllama),
+MoE (moonshot/kimi), and VLM-backbone (internvl) families.
+
+Layers are stacked with ``jax.lax.scan`` over a leading layer axis so an
+80-layer model compiles one layer body (critical for 512-device dry-run
+compile times). Per-layer KV caches are stacked the same way and scanned
+jointly with the layer parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .params import ParamInfo, stack_layers
+
+
+def _is_moe_layer(cfg, _layer: int) -> bool:
+    return cfg.moe_experts > 0  # uniform pattern for transformer families
+
+
+def layer_infos(cfg) -> dict:
+    d = {
+        "ln1": L.norm_infos(cfg),
+        "attn": L.attention_infos(cfg),
+        "ln2": L.norm_infos(cfg),
+    }
+    if cfg.moe_experts:
+        d["moe"] = L.moe_infos(cfg)
+    else:
+        d["mlp"] = L.mlp_infos(cfg)
+    return d
+
+
+def lm_infos(cfg) -> dict:
+    vp = L.padded_vocab(cfg.vocab)
+    d = {
+        "embed": ParamInfo((vp, cfg.d_model), ("vocab", "dmodel"), "embed", scale=0.02),
+        "layers": stack_layers(cfg.n_layers, layer_infos(cfg)),
+        "ln_f": L.norm_infos(cfg),
+    }
+    if not cfg.tie_embeddings:
+        d["lm_head"] = ParamInfo((cfg.d_model, vp), ("dmodel", "vocab"))
+    return d
+
+
+def kv_cache_axes(cfg) -> tuple:
+    if cfg.kv_cache_time_sharded:
+        return ("layer", "batch", "cache_time", None, None)
+    return ("layer", "batch", None, "kv_heads", None)
+
+
+def cache_infos(cfg, batch: int, max_len: int) -> dict:
+    Hkv, dh = cfg.n_kv_heads, cfg.d_head
+    kv_dtype = jnp.int8 if cfg.kv_cache_dtype == "int8" else jnp.bfloat16
+    kv = ParamInfo(
+        (cfg.n_layers, batch, max_len, Hkv, dh),
+        kv_cache_axes(cfg),
+        "zeros",
+        dtype=kv_dtype,
+    )
+    d = {"k": kv, "v": kv, "len": ParamInfo((), (), "zeros", dtype=jnp.int32)}
+    if cfg.kv_cache_dtype == "int8":
+        sc = ParamInfo((cfg.n_layers, batch, max_len, Hkv), kv_cache_axes(cfg)[:-1],
+                       "zeros", dtype=jnp.bfloat16)
+        d.update(k_scale=sc, v_scale=sc)
+    return d
+
+
+def _layer_apply(p: dict, x: jax.Array, cfg, *, positions, cache, group: str):
+    h = L.norm_apply(p["ln1"], x, cfg)
+    a, new_cache = L.attention_apply(
+        p["attn"], h, cfg, positions=positions, cache=cache, window=cfg.sliding_window
+    )
+    x = L.shard(x + a, "batch", "act_seq", None)
+    h = L.norm_apply(p["ln2"], x, cfg)
+    if cfg.moe_experts:
+        f = L.moe_apply(p["moe"], h, cfg, group=group)
+    else:
+        f = L.mlp_apply(p["mlp"], h, cfg)
+    return L.shard(x + f, "batch", "act_seq", None), new_cache
+
+
+def _embed(params: dict, cfg, tokens: jax.Array, prefix_embeds: jax.Array | None):
+    dt = cfg.compute_dtype
+    x = L.sharded_embed(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dt), x], axis=1)
+    # sequence-parallel residual stream (Megatron-SP): the scan carry -- and
+    # therefore the per-layer saved activation under remat -- is sharded over
+    # 'model' on the seq dim; TP blocks all-gather internally as needed.
+    return L.shard(x, "batch", "act_seq", None)
+
+
+def _unembed(params: dict, cfg, x: jax.Array) -> jax.Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.compute_dtype))
+    logits = L.mask_padded_logits(logits, cfg.vocab)
+    return L.shard(logits, "batch", None, "act_vocab")
+
+
+def forward(
+    params: dict,
+    cfg,
+    tokens: jax.Array,  # [B, S]
+    *,
+    prefix_embeds: jax.Array | None = None,  # [B, P, D] (vlm patch embeddings)
+    cache: dict | None = None,
+    last_only: bool = False,
+    return_hidden: bool = False,
+) -> tuple[jax.Array, dict | None]:
+    """Run the LM. With ``cache`` the call appends S tokens at cache['len'].
+
+    Returns (logits, new_cache). Decode is this with S == 1.
+    """
+    x = _embed(params, cfg, tokens, prefix_embeds)
+    S = x.shape[1]
+    offset = cache["len"] if cache is not None else 0
+    positions = offset + jnp.arange(S)
+    group = "batch" if S == 1 else "seq"
+
+    if cache is None:
+
+        def body(h, lp):
+            h2, _ = _layer_apply(lp, h, cfg, positions=positions, cache=None, group=group)
+            return h2, None
+
+        if cfg.remat == "layer":
+            body = jax.checkpoint(body)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["layers"])
+        else:
+            for i in range(cfg.n_layers):
+                x, _ = body(x, jax.tree_util.tree_map(lambda a: a[i], params["layers"]))
+        new_cache = None
+    else:
+        layer_cache = {k: v for k, v in cache.items() if k != "len"}
+
+        def body(h, xs):
+            lp, lc = xs
+            h2, nc = _layer_apply(
+                lp, h, cfg,
+                positions=positions,
+                cache=dict(lc, len=cache["len"]),
+                group=group,
+            )
+            del nc["len"]
+            return h2, nc
+
+        if cfg.scan_layers:
+            x, new_lc = jax.lax.scan(body, x, (params["layers"], layer_cache))
+        else:
+            outs = []
+            for i in range(cfg.n_layers):
+                sl = lambda a: a[i]
+                x, nc = body(
+                    x,
+                    (jax.tree_util.tree_map(sl, params["layers"]),
+                     jax.tree_util.tree_map(sl, layer_cache)),
+                )
+                outs.append(nc)
+            new_lc = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+        new_cache = dict(new_lc, len=cache["len"] + S)
+
+    x = L.norm_apply(params["ln_f"], x, cfg)
+    if last_only:
+        x = x[:, -1:, :]
+    if return_hidden:
+        return x, new_cache
+    return _unembed(params, cfg, x), new_cache
+
+
+# --- losses ------------------------------------------------------------------------
+
+def chunked_cross_entropy(
+    x: jax.Array,  # [B, S, D] final hidden states
+    head: jax.Array,  # [D, Vp]
+    labels: jax.Array,  # [B, S]
+    true_vocab: int,
+    cfg,
+    n_chunks: int = 8,
+    z_weight: float = 1e-4,
+):
+    """Unembed + CE scanned over sequence chunks with rematerialization.
+
+    The [B, S, V] logits (and their fp32 CE intermediates) never materialize
+    whole -- at qwen/kimi scale that is multiple GiB per device even sharded.
+    Exact: per-chunk token sums are accumulated and normalized once.
+    """
+    B, S, D = x.shape
+    if S % n_chunks != 0:
+        n_chunks = 1
+    c = S // n_chunks
+    xs = x.reshape(B, n_chunks, c, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n_chunks, c).transpose(1, 0, 2)
+    hd = head.astype(cfg.compute_dtype)
+
+    def body(carry, inp):
+        ce_sum, z_sum = carry
+        xc, lc = inp
+        logits = jnp.einsum("bsd,dv->bsv", xc, hd)
+        logits = L.mask_padded_logits(logits, true_vocab)
+        logits = L.shard(logits, "batch", None, "act_vocab")
+        lg = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, lc[..., None], axis=-1)[..., 0]
+        ce_sum = ce_sum + jnp.sum(lse - gold)
+        z_sum = z_sum + z_weight * jnp.sum(lse**2)
+        return (ce_sum, z_sum), None
+
+    (ce_sum, z_sum), _ = jax.lax.scan(jax.checkpoint(body), (0.0, 0.0), (xs, ls))
+    n = B * S
+    return ce_sum / n + z_sum / n, {"ce": ce_sum / n, "zloss": z_sum / n}
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, z_weight: float = 1e-4):
+    """Stable softmax cross-entropy in fp32 with z-loss; mean over tokens."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    ce = lse - gold
+    z = z_weight * (lse**2)
+    return ce.mean() + z.mean(), {"ce": ce.mean(), "zloss": z.mean()}
+
+
+def loss_fn(params: dict, cfg, batch: dict):
+    """batch: tokens [B,S], labels [B,S], optional vis_embeds [B,P,D]."""
+    prefix = batch.get("vis_embeds")
+    logits, _ = forward(params, cfg, batch["tokens"], prefix_embeds=prefix)
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1] :, :]  # loss on text positions only
+    loss, metrics = cross_entropy(logits, batch["labels"])
+    if cfg.moe_experts:  # router load-balancing on the embedded input
+        x = _embed(params, cfg, batch["tokens"], prefix)
+        # one router probe per scanned layer is overkill; probe layer 0
+        p0 = jax.tree_util.tree_map(lambda a: a[0], params["layers"])
+        aux = L.aux_load_balance_loss(p0["moe"], x, cfg)
+        loss = loss + 0.01 * aux
+        metrics["aux"] = aux
+    return loss, metrics

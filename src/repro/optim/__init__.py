@@ -1,0 +1,14 @@
+from .adamw import (
+    OptConfig,
+    adafactor_init,
+    adafactor_update,
+    adamw8bit_init,
+    adamw8bit_update,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    make_optimizer,
+)
+from .grad_utils import bucket_by_size, compressed_psum_mean
+from .schedules import constant, warmup_cosine

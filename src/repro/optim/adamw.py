@@ -1,0 +1,227 @@
+"""Optimizers built from scratch: AdamW, 8-bit AdamW, Adafactor.
+
+All three share one functional interface:
+    state = init(params)
+    new_params, new_state, stats = update(params, grads, state, lr, cfg)
+
+Memory policy (why three):
+  * adamw     -- fp32 m/v; the default for <=10B-param archs.
+  * adamw8bit -- int8 block-quantized m/v with per-block scales (beyond-paper
+                 distributed-optimization trick: 4x optimizer-state HBM cut,
+                 the quantization error is re-absorbed each step because the
+                 quantized state is the accumulator).
+  * adafactor -- factored second moment (rank-1) for the 1T-param kimi-k2;
+                 state is O(rows+cols) instead of O(rows*cols).
+
+Optimizer state inherits each parameter's sharding (ZeRO-1 falls out of the
+param partition specs; under FSDP configs the state is sharded over data too).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    block: int = 256  # 8-bit quantization block size
+    # adafactor
+    eps2: float = 1e-30
+    clip_threshold: float = 1.0
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_scale(grads, max_norm: float):
+    """Global-norm clip as a lazy scalar: never materializes an fp32 grad
+    tree (at 1T params that tree is 16GB/device). Callers fold the scale
+    into their per-leaf fused update expressions."""
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return scale, gn
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    scale, gn = clip_scale(grads, max_norm)
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+# --- plain AdamW ---------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, lr, cfg: OptConfig):
+    scale, gn = clip_scale(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale  # fused into the elementwise update
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m2 / b1c
+        vh = v2 / b2c
+        d = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * d).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gn}
+
+
+# --- 8-bit AdamW ------------------------------------------------------------------
+
+def _q8(x: jax.Array, block: int):
+    """Block-wise symmetric int8 quantization of a flat fp32 array."""
+    n = x.size
+    pad = (-n) % block
+    xf = jnp.pad(x.reshape(-1), (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(xf), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dq8(q: jax.Array, scale: jax.Array, shape, block: int):
+    xf = q.astype(jnp.float32) * scale
+    return xf.reshape(-1)[: int(jnp.prod(jnp.asarray(shape)))].reshape(shape)
+
+
+def adamw8bit_init(params, block: int = 256):
+    def q(p):
+        qq, s = _q8(jnp.zeros(p.shape, jnp.float32), block)
+        return {"q": qq, "s": s}
+
+    return {
+        "m": jax.tree_util.tree_map(q, params),
+        "v": jax.tree_util.tree_map(q, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw8bit_update(params, grads, state, lr, cfg: OptConfig):
+    scale, gn = clip_scale(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mq, vq):
+        g = g.astype(jnp.float32) * scale
+        m = _dq8(mq["q"], mq["s"], p.shape, cfg.block)
+        v = _dq8(vq["q"], vq["s"], p.shape, cfg.block)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m2 / b1c
+        vh = jnp.maximum(v2, 0.0) / b2c
+        d = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = (p.astype(jnp.float32) - lr * d).astype(p.dtype)
+        q_m, s_m = _q8(m2, cfg.block)
+        q_v, s_v = _q8(v2, cfg.block)
+        return p2, {"q": q_m, "s": s_m}, {"q": q_v, "s": s_v}
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    return (
+        tdef.unflatten([o[0] for o in out]),
+        {"m": tdef.unflatten([o[1] for o in out]),
+         "v": tdef.unflatten([o[2] for o in out]),
+         "step": step},
+        {"grad_norm": gn},
+    )
+
+
+# --- Adafactor ----------------------------------------------------------------------
+
+def adafactor_init(params):
+    """Factored second moment: row factor over shape[:-1] (inherits the param
+    sharding as a prefix -> stays sharded under FSDP/EP), column factor over
+    the last dim only (tiny, replicated). Rank-1 reconstruction."""
+
+    def per(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"state": jax.tree_util.tree_map(per, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params, grads, state, lr, cfg: OptConfig):
+    scale, gn = clip_scale(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(p, g, s):
+        g = g.astype(jnp.float32) * scale
+        g2 = g * g + cfg.eps2
+        if p.ndim >= 2:
+            lead = tuple(range(p.ndim - 1))
+            vr = decay * s["vr"] + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * s["vc"] + (1 - decay) * g2.mean(axis=lead)
+            denom = jnp.maximum(vr.mean(), cfg.eps2)
+            vhat = vr[..., None] * vc / denom
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            vhat = decay * s["v"] + (1 - decay) * g2
+            new_s = {"v": vhat}
+        # relative update clipping (Adafactor's RMS clip), computed as a
+        # scalar from g/vhat directly so the fp32 update tensor never
+        # materializes (it is re-fused into the final elementwise pass).
+        rms = jnp.sqrt(jnp.mean(g2 / (vhat + cfg.eps2)) + 1e-30)
+        denom = jnp.maximum(1.0, rms / cfg.clip_threshold)
+        u = g / jnp.sqrt(vhat + cfg.eps2) / denom
+        d = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * d).astype(p.dtype), new_s
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(state["state"])
+    out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    return (
+        tdef.unflatten([o[0] for o in out]),
+        {"state": tdef.unflatten([o[1] for o in out]), "step": step},
+        {"grad_norm": gn},
+    )
+
+
+# --- dispatch --------------------------------------------------------------------------
+
+def make_optimizer(name: str, cfg: OptConfig):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adamw8bit":
+        return (lambda p: adamw8bit_init(p, cfg.block)), adamw8bit_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(f"unknown optimizer {name!r}")

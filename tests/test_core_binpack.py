@@ -1,0 +1,181 @@
+"""2-D bin packing: the greedy (Fig 8 / Table II), brute force, and the JAX
+fast path -- paper §VI-§VIII."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    DEGRADATION_LIMIT,
+    M1,
+    M2,
+    PAPER_CLUSTER,
+    ClusterState,
+    PackedCluster,
+    Workload,
+    brute_force,
+    brute_force_jax,
+    check_consolidation,
+    counts_from_assignments,
+    first_fit,
+    greedy_place,
+    greedy_sequence,
+    greedy_sequence_jax,
+    parse_workloads,
+    profile_pairwise_fast,
+    run_allocator,
+    snap_to_grid,
+    type_index,
+)
+from repro.core.units import KB, MB
+
+# Paper Table III, verbatim.
+INITIAL = {
+    0: "(32KB, 64KB), (4KB, 16KB), (16KB, 32MB)",
+    1: "(32KB, 64MB), (512KB, 2MB), (128KB, 512KB)",
+    2: "(256KB, 1MB), (4KB, 2MB), (32KB, 8MB)",
+    3: "(2KB, 32KB), (512KB, 64MB), (8KB, 4MB)",
+}
+SEQUENCES = [
+    "(16KB, 64KB), (32KB, 1MB), (64KB, 64MB), (32KB, 2MB), (8KB, 64MB)",
+    "(4KB, 16KB), (2KB, 16MB), (2KB, 8KB), (32KB, 256KB), (16KB, 64MB)",
+    "(256KB, 2MB), (8KB, 3MB), (32KB, 64MB), (4KB, 256MB), (8KB, 32MB)",
+]
+
+_D_CACHE = {}
+
+
+def paper_state(alpha=1.3) -> ClusterState:
+    servers = list(PAPER_CLUSTER)
+    if "D" not in _D_CACHE:
+        _D_CACHE["D"] = [profile_pairwise_fast(s) for s in servers]
+    state = ClusterState.empty(servers, _D_CACHE["D"], alpha=alpha)
+    for i, txt in INITIAL.items():
+        state.assignments[i] = [snap_to_grid(w) for w in parse_workloads(txt)]
+    return state
+
+
+def test_initial_state_feasible():
+    assert paper_state().feasible()
+
+
+@pytest.mark.parametrize("seq", SEQUENCES)
+def test_greedy_never_violates_criteria(seq):
+    state = paper_state()
+    arrivals = [snap_to_grid(w) for w in parse_workloads(seq)]
+    greedy_sequence(state, arrivals)
+    for i in range(len(state.servers)):
+        c = state.check(i)
+        assert c.ok, (i, c)
+        assert c.max_degradation < DEGRADATION_LIMIT
+        assert c.cache_in_use <= 1.0
+
+
+@pytest.mark.parametrize("seq", SEQUENCES)
+def test_greedy_near_optimal(seq):
+    """Fig 9 / §VIII: 'our greedy approach is able to achieve near optimal
+    solution in all experimented cases' -- within 10% of brute force."""
+    arrivals = [snap_to_grid(w) for w in parse_workloads(seq)]
+    state = paper_state()
+    opt_cost, _ = brute_force(paper_state(), arrivals)
+    placements, queued = greedy_sequence(state, arrivals)
+    greedy_cost = state.total_avg_load() + len(queued)
+    assert greedy_cost <= opt_cost * 1.10 + 1e-9
+
+
+def test_table2_semantics_prefers_smaller_increase():
+    """Table II: the greedy minimizes the *increase* in average load, which
+    can prefer the more-loaded server (B) over the lighter one (A)."""
+    state = paper_state()
+    w = snap_to_grid(Workload(fs=1 * MB, rs=32 * KB))
+    before = [state.check(i).avg_load for i in range(4)]
+    placed = greedy_place(state, w, objective="sum_avg")
+    assert placed is not None
+    after = state.check(placed).avg_load
+    # the chosen server minimizes (after - before) among feasible servers
+    deltas = []
+    for i in range(4):
+        trial = paper_state()
+        trial.assignments[i].append(w)
+        c = trial.check(i)
+        if c.ok:
+            deltas.append((c.avg_load - before[i], i))
+    assert placed == min(deltas)[1]
+
+
+def test_queueing_when_no_server_fits():
+    """§V criterion 1: the workload queues when no server satisfies both rules."""
+    servers = [M1]
+    D = profile_pairwise_fast(M1)
+    state = ClusterState.empty(servers, D, alpha=1.0)
+    heavy = snap_to_grid(Workload(fs=64 * MB, rs=512 * KB))
+    placements, queued = greedy_sequence(state, [heavy] * 6)
+    assert len(queued) >= 1  # mutual degradation > 50% forces queueing
+    assert state.feasible()
+
+
+def test_jax_greedy_matches_python():
+    for seq in SEQUENCES:
+        arrivals = [snap_to_grid(w) for w in parse_workloads(seq)]
+        state = paper_state()
+        py_placements, _ = greedy_sequence(state, arrivals)
+
+        cluster = PackedCluster.build(list(PAPER_CLUSTER), _D_CACHE["D"], alpha=1.3)
+        counts = counts_from_assignments(cluster, paper_state().assignments)
+        wtypes = jnp.asarray([type_index(w) for w in arrivals])
+        _, jx = greedy_sequence_jax(cluster, counts, wtypes)
+        jx = [int(v) if v >= 0 else None for v in np.asarray(jx)]
+        assert jx == py_placements
+
+
+def test_jax_brute_force_matches_python():
+    arrivals = [snap_to_grid(w) for w in parse_workloads(SEQUENCES[0])]
+    cost_py, assign_py = brute_force(paper_state(), arrivals)
+    cluster = PackedCluster.build(list(PAPER_CLUSTER), _D_CACHE["D"], alpha=1.3)
+    counts = counts_from_assignments(cluster, paper_state().assignments)
+    wtypes = jnp.asarray([type_index(w) for w in arrivals])
+    cost_jx, assign_jx = brute_force_jax(cluster, counts, wtypes)
+    assert cost_jx == pytest.approx(cost_py, rel=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.sampled_from([2 * KB, 16 * KB, 128 * KB, 512 * KB]),
+            st.sampled_from([64 * KB, 1 * MB, 8 * MB, 64 * MB]),
+        ),
+        min_size=1,
+        max_size=6,
+    )
+)
+def test_property_greedy_state_always_feasible(pairs):
+    """Invariant: whatever arrives, the greedy never leaves the cluster in a
+    criteria-violating state (it queues instead)."""
+    state = paper_state()
+    arrivals = [snap_to_grid(Workload(fs=fs, rs=rs)) for rs, fs in pairs]
+    greedy_sequence(state, arrivals)
+    assert state.feasible()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.sampled_from([2 * KB, 16 * KB, 128 * KB]),
+            st.sampled_from([64 * KB, 1 * MB, 8 * MB]),
+        ),
+        min_size=1,
+        max_size=4,
+    )
+)
+def test_property_first_fit_no_better_than_greedy_objective(pairs):
+    """The 2-D objective matters: greedy's total average load never exceeds
+    first-fit's by more than the queue differential."""
+    arrivals = [snap_to_grid(Workload(fs=fs, rs=rs)) for rs, fs in pairs]
+    g = paper_state()
+    gp, gq = greedy_sequence(g, arrivals)
+    f_placements, f = run_allocator(paper_state(), arrivals, first_fit)
+    fq = sum(1 for p in f_placements if p is None)
+    assert g.total_avg_load() + len(gq) <= f.total_avg_load() + fq + 1e-9

@@ -1,0 +1,29 @@
+"""Alpha calibration (paper §V: actual TDP 7.76MB vs calculated 6MB -> ~1.3)."""
+import pytest
+
+from repro.core import M1, M2, PAPER_CLUSTER, parse_workloads, profile_pairwise_fast, snap_to_grid
+from repro.core.calibrate import calibrate_alpha, pick_alpha, sweep_alpha
+
+
+@pytest.mark.parametrize("server", [M1, M2])
+def test_calibrated_alpha_recovers_physical_tolerance(server):
+    """The procedure must recover the hardware's llc_tolerance (~1.29) from
+    *observations only* -- within the N-granularity of the cliff search."""
+    alpha = calibrate_alpha(server)
+    assert server.llc_tolerance <= alpha <= server.llc_tolerance * 1.35
+
+
+def test_alpha_sweep_prefers_balanced_setting():
+    """Fig 9: the balanced alpha beats the conservative 1.0 (which queues
+    admissible work) AND the aggressive 1.5 (which blows past the physical
+    TDP). Cache-pressured scenario: one M1, a stream of LLC-resident
+    workloads at 1.25MB competing bytes each -- alpha=1.0 admits 4/8,
+    alpha~=1.3 admits 6 safely (7.5MB < 7.76MB tolerance), alpha=1.5 admits
+    7 (8.75MB) and triggers the >50% cliff."""
+    D = [profile_pairwise_fast(M1)]
+    arrivals = [snap_to_grid(w) for w in parse_workloads("(256KB, 1MB), " * 8)]
+    sweep = sweep_alpha([M1], D, [[]], arrivals, alphas=(1.0, 1.25, 1.5))
+    best = pick_alpha(sweep)
+    assert best == 1.25, sweep
+    assert sweep[1.25] > sweep[1.0]  # conservative queues too much
+    assert sweep[1.25] > sweep[1.5]  # aggressive loses the LLC

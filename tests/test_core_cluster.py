@@ -1,0 +1,75 @@
+"""TPU-fleet adaptation of the consolidation algorithm (core/cluster.py)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    FleetState,
+    JobProfile,
+    PodSpec,
+    additive_degradations,
+    fleet_throughput_report,
+    pack_jobs,
+    pair_degradation,
+    roofline_degradations,
+)
+from repro.core.cluster import HBM_BYTES
+
+
+def _job(name="j", flops=1e15, bytes_=2e14, coll=1e13, hbm=4 * 2**30):
+    return JobProfile(name=name, flops=flops, bytes_accessed=bytes_,
+                      collective_bytes=coll, hbm_bytes=hbm, chips=256)
+
+
+def test_step_time_is_max_of_terms():
+    j = _job()
+    t = j.step_time()
+    assert t == pytest.approx(max(
+        j.flops / (256 * 197e12), j.bytes_accessed / (256 * 819e9),
+        j.collective_bytes / (256 * 50e9)))
+
+
+def test_demands_sum_to_at_most_count():
+    d = _job().demands()
+    assert max(d.values()) == pytest.approx(1.0)  # the binding resource saturates
+    assert all(0 <= v <= 1 for v in d.values())
+
+
+def test_pack_respects_hbm_budget():
+    fleet = FleetState.empty([PodSpec(name="p0")])
+    big = _job(hbm=HBM_BYTES)  # 16GB/device x 256 devices = the whole budget
+    placements, fleet = pack_jobs(fleet, [big, big])
+    assert placements[0] == 0
+    assert placements[1] is None  # second job would exceed HBM -> queued
+
+
+def test_pack_respects_degradation_rule():
+    fleet = FleetState.empty([PodSpec(name="p0")], model="additive")
+    jobs = [_job(name=f"j{i}", hbm=2 * 2**30) for i in range(6)]
+    placements, fleet = pack_jobs(fleet, jobs)
+    d = fleet.degradations(0)
+    assert d.size == 0 or d.max() < 0.5
+    assert any(p is None for p in placements)  # compute-saturated jobs queue
+
+
+def test_roofline_model_detects_saturation():
+    jobs = [_job(), _job()]  # two fully compute-bound jobs
+    d = roofline_degradations(jobs)
+    assert np.all(d > 0.4)  # sharing one pipe at 2x demand -> ~50% each
+    assert np.all(roofline_degradations([_job()]) == 0.0)
+
+
+def test_additive_matches_pairwise_at_n2():
+    a, b = _job("a"), _job("b", flops=1e14)
+    d = additive_degradations([a, b])
+    assert d[1] == pytest.approx(pair_degradation(a, b))
+    assert d[0] == pytest.approx(pair_degradation(b, a))
+
+
+def test_report_shapes():
+    fleet = FleetState.empty([PodSpec(name="p0"), PodSpec(name="p1")])
+    jobs = [_job(name=f"j{i}", flops=2e13, hbm=2**30) for i in range(4)]
+    pack_jobs(fleet, jobs)
+    rows = fleet_throughput_report(fleet)
+    assert len(rows) == sum(len(a) for a in fleet.assignments)
+    for r in rows:
+        assert r["eff_steps_per_s"] <= r["solo_steps_per_s"] + 1e-9

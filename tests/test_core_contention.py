@@ -1,0 +1,108 @@
+"""TDP prediction (Eqns 1-2), pairwise profiling and the additive model
+(Eqn 3) -- paper §IV, Figures 3-4 and 6."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    M1,
+    Workload,
+    predict_degradations,
+    predict_tdp_n,
+    profile_pairwise,
+    profile_pairwise_fast,
+    simulate_corun,
+    tdp_lhs,
+    tdp_lhs_naive,
+)
+from repro.core.simulator import throughput_after_cache
+from repro.core.units import KB, MB
+from repro.core.workload import grid_types
+
+
+def test_tdp_worked_example():
+    """Paper §IV.A: N=4, RS=256KB, FS=1280KB -> 4 x 1536KB = 6MB = M1's LLC."""
+    assert predict_tdp_n(M1, 256 * KB, 1280 * KB) == pytest.approx(4.0)
+
+
+def test_eqn2_excludes_large_files():
+    """FS > CacheSize does not compete for the LLC (Eqn 2 vs Eqn 1)."""
+    small = Workload(fs=1 * MB, rs=64 * KB)
+    large = Workload(fs=64 * MB, rs=64 * KB)
+    assert tdp_lhs(M1, [small, large]) == pytest.approx(small.rs + small.fs + large.rs)
+    assert tdp_lhs_naive([small, large]) > tdp_lhs(M1, [small, large])
+
+
+def test_cliff_at_physical_tolerance():
+    """Fig 3-4a: moderate slope until the physical TDP (~1.29x LLC), sharp
+    drop after -- the basis for the paper's alpha ~= 1.3 calibration."""
+    w = Workload(fs=1280 * KB, rs=256 * KB)
+    degs = [simulate_corun(M1, [w] * n).degradations[0] for n in range(1, 8)]
+    # below the cliff: gentle (all < 10%); at the cliff: catastrophic (> 50%)
+    assert all(d < 0.10 for d in degs[:5])
+    assert degs[5] > 0.5  # N=6: 6 x 1536KB = 9MB > 7.76MB tolerance
+
+
+def test_fig6_cache_loss_over_50pct_for_rs_above_8k():
+    """Fig 6 / §V: losing the LLC costs > 50% throughput for RS > 8KB."""
+    for rs in (16 * KB, 64 * KB, 256 * KB, 512 * KB):
+        w = Workload(fs=2 * MB, rs=rs)
+        keep = throughput_after_cache(M1, w, False)
+        lose = throughput_after_cache(M1, w, True)
+        assert 1 - lose / keep > 0.5, rs
+    # and below 8KB the cliff is softer (overhead-dominated regime)
+    w = Workload(fs=2 * MB, rs=1 * KB)
+    assert 1 - throughput_after_cache(M1, w, True) / throughput_after_cache(M1, w, False) < 0.5
+
+
+def test_fast_profile_matches_scalar():
+    sub = [Workload(fs=f, rs=r) for r in (4 * KB, 64 * KB, 512 * KB)
+           for f in (256 * KB, 2 * MB, 16 * MB, 256 * MB)]
+    Ds = profile_pairwise(M1, sub)
+    Df = profile_pairwise_fast(M1, sub)
+    np.testing.assert_allclose(Ds, Df, atol=1e-12)
+
+
+def test_pairwise_is_exact_for_pairs():
+    """D_{i,j} is *defined* by pair runs, so the additive model is exact at N=2."""
+    D = profile_pairwise_fast(M1)
+    wi = Workload(fs=4 * MB, rs=64 * KB)
+    wj = Workload(fs=512 * KB, rs=16 * KB)
+    pred = predict_degradations(D, [wi, wj])
+    act = simulate_corun(M1, [wi, wj]).degradations
+    np.testing.assert_allclose(pred, act, atol=1e-9)
+
+
+def test_additive_model_reasonable_at_n3():
+    """Figures 3-4b: the additive model predicts N-way degradation with
+    'reasonable accuracy' (paper's own wording) -- we require <= 10pp error
+    in the pre-saturation regime."""
+    D = profile_pairwise_fast(M1)
+    for fs, rs in ((512 * KB, 64 * KB), (1 * MB, 32 * KB)):
+        ws = [Workload(fs=fs, rs=rs)] * 3
+        pred = predict_degradations(D, ws)
+        act = np.array(simulate_corun(M1, ws).degradations)
+        assert np.abs(pred - act).max() < 0.10
+
+
+def test_profiling_grid_size_matches_paper():
+    """§VIII: 10 RSs x 23 FSs = 230 types -> 52_900 pair experiments."""
+    types = grid_types()
+    assert len(types) == 230
+    assert len(types) ** 2 == 52_900
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 6),
+    rs=st.sampled_from([4 * KB, 64 * KB, 512 * KB]),
+    fs=st.sampled_from([256 * KB, 2 * MB, 32 * MB]),
+)
+def test_degradation_monotone_in_n(n, rs, fs):
+    """§IV.A: increasing N always increases degradation."""
+    w = Workload(fs=fs, rs=rs)
+    d_n = simulate_corun(M1, [w] * n).degradations[0]
+    d_n1 = simulate_corun(M1, [w] * (n + 1)).degradations[0]
+    assert d_n1 >= d_n - 1e-12
+    assert 0.0 <= d_n < 1.0

@@ -1,0 +1,69 @@
+"""Single-workload throughput model (paper §III, Figures 1-2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import M1, M2, Workload, solo_throughput, solo_throughput_grid
+from repro.core.throughput import level_of
+from repro.core.units import GB, KB, MB
+from repro.core.workload import FS_GRID, RS_GRID
+
+
+@pytest.mark.parametrize("server", [M1, M2])
+@pytest.mark.parametrize("op", ["read", "write"])
+def test_levels_partition_fs_axis(server, op):
+    """Fig 1-2: three throughput levels for write, two for read (§III.C)."""
+    seen = set()
+    for fs in FS_GRID:
+        seen.add(level_of(server, fs, op))
+    assert seen == ({1, 2, 3} if op == "write" else {1, 2})
+
+
+@pytest.mark.parametrize("server", [M1, M2])
+def test_level_boundaries_match_table1(server):
+    assert level_of(server, server.llc_bytes, "write") == 1
+    assert level_of(server, server.llc_bytes * 1.01, "write") == 2
+    spill = server.cache_spill_bytes
+    assert level_of(server, spill, "write") == 2
+    assert level_of(server, spill * 1.01, "write") == 3
+    # paper: the write level-3 boundary sits at file cache + disk cache
+    assert spill == server.file_cache_bytes + server.disk_cache_bytes
+
+
+@pytest.mark.parametrize("server", [M1, M2])
+@pytest.mark.parametrize("op", ["read", "write"])
+def test_throughput_monotone_in_rs(server, op):
+    """§III.C: 'throughput is always improved by increasing size of RS'."""
+    for fs in (64 * KB, 4 * MB, 64 * MB, 2 * GB):
+        ts = [solo_throughput(server, Workload(fs=fs, rs=rs, op=op)) for rs in RS_GRID]
+        assert all(b > a for a, b in zip(ts, ts[1:])), (fs, ts)
+
+
+@pytest.mark.parametrize("server", [M1, M2])
+def test_throughput_levels_ordered(server):
+    """Level-1 (LLC) > level-2 (file cache) > level-3 (disk) at equal RS."""
+    rs = 64 * KB
+    t1 = solo_throughput(server, Workload(fs=1 * MB, rs=rs, op="write"))
+    t2 = solo_throughput(server, Workload(fs=64 * MB, rs=rs, op="write"))
+    t3 = solo_throughput(server, Workload(fs=2 * GB, rs=rs, op="write"))
+    assert t1 > t2 > t3
+
+
+def test_grid_vectorization_matches_scalar():
+    grid = solo_throughput_grid(M1, RS_GRID, FS_GRID, "write")
+    for i, rs in enumerate(RS_GRID):
+        for j, fs in enumerate(FS_GRID):
+            scalar = solo_throughput(M1, Workload(fs=fs, rs=rs, op="write"))
+            assert grid[i, j] == pytest.approx(scalar, rel=1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rs=st.floats(1 * KB, 512 * KB),
+    fs=st.floats(1 * KB, 2 * GB),
+    op=st.sampled_from(["read", "write"]),
+)
+def test_throughput_positive_and_bounded(rs, fs, op):
+    t = solo_throughput(M1, Workload(fs=fs, rs=rs, op=op))
+    assert 0 < t <= max(M1.bw_l1_read, M1.bw_l1_write)

@@ -1,0 +1,58 @@
+"""Fault tolerance: heartbeats, the Eqn-4 straggler rule, elastic re-mesh."""
+import pytest
+
+from repro.configs.base import MeshConfig
+from repro.distributed.fault_tolerance import (
+    HeartbeatMonitor,
+    plan_elastic_remesh,
+    scale_batch_for_mesh,
+)
+
+
+def test_dead_host_detection():
+    mon = HeartbeatMonitor(n_hosts=4, timeout_s=10.0)
+    for h in range(4):
+        mon.heartbeat(h, now=0.0)
+    mon.heartbeat(0, now=50.0)
+    dead = mon.dead_hosts(now=55.0)
+    assert set(dead) == {1, 2, 3}
+
+
+def test_straggler_uses_paper_50pct_rule():
+    """A host is a straggler iff its step-time inflation D = O/(AR+O) >= 0.5,
+    i.e. it is >= 2x slower than the fleet median (criterion 1, Eqn 4)."""
+    mon = HeartbeatMonitor(n_hosts=4)
+    for h in range(3):
+        for t in range(10):
+            mon.heartbeat(h, now=t, step_time=1.0)
+    for t in range(10):
+        mon.heartbeat(3, now=t, step_time=1.9)  # 1.9x: below the 2x rule
+    assert mon.stragglers() == []
+    for t in range(10, 20):
+        mon.heartbeat(3, now=t, step_time=2.5)  # 2.5x: past it
+    assert mon.stragglers() == [3]
+
+
+def test_remesh_multi_pod_drops_pod():
+    mesh = MeshConfig(multi_pod=True, pods=2)
+    plan = plan_elastic_remesh(mesh, lost_hosts=[33], hosts_per_pod=32)
+    assert plan is not None
+    assert plan.new.multi_pod is False  # 2 pods - 1 = single-pod config
+    assert plan.new.n_devices == 256
+    assert plan.lost_fraction == pytest.approx(0.5)
+
+
+def test_remesh_single_pod_halves_data_axis():
+    mesh = MeshConfig()
+    plan = plan_elastic_remesh(mesh, lost_hosts=[3])
+    assert plan.new.data == 8 and plan.new.model == 16
+
+
+def test_remesh_noop_without_losses():
+    assert plan_elastic_remesh(MeshConfig(), []) is None
+
+
+def test_batch_scaling_policies():
+    old, new = MeshConfig(multi_pod=True, pods=2), MeshConfig()
+    assert scale_batch_for_mesh(256, old, new, keep_global=True) == 256
+    assert scale_batch_for_mesh(256, old, new, keep_global=False) == 128

@@ -1,0 +1,127 @@
+"""Pallas kernels vs their pure-jnp oracles (ref.py), interpret mode.
+
+Each kernel is swept over shapes/dtypes per the assignment:
+'sweep shapes/dtypes and assert_allclose against the ref.py pure-jnp oracle'.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import M1, PAPER_CLUSTER, PackedCluster, profile_pairwise_fast
+from repro.kernels import ops, ref
+
+
+def _gqa_ref(q, k, v, causal, q_offset=0):
+    B, Sq, H, dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    kx = jnp.repeat(k, G, axis=2).transpose(0, 2, 1, 3).reshape(B * H, -1, dh)
+    vx = jnp.repeat(v, G, axis=2).transpose(0, 2, 1, 3).reshape(B * H, -1, dh)
+    qx = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, dh)
+    out = ref.attention_ref(qx, kx, vx, causal=causal, q_offset=q_offset)
+    return out.reshape(B, H, Sq, dh).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize(
+    "B,Sq,Skv,H,Hkv,dh,causal",
+    [
+        (1, 64, 64, 2, 2, 32, True),
+        (2, 128, 128, 4, 2, 64, True),
+        (1, 64, 128, 2, 1, 32, False),  # cross-attention-like
+        (2, 1, 128, 4, 4, 32, True),  # decode: Sq=1
+    ],
+)
+def test_flash_attention_sweep(B, Sq, Skv, H, Hkv, dh, causal, dtype, tol):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, dh), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, dh), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, dh), dtype)
+    q_offset = Skv - Sq if causal else 0
+    out = ops.gqa_flash_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                  mode="interpret", block_q=32, block_k=32)
+    want = _gqa_ref(q, k, v, causal, q_offset)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,S,H,dh,chunk", [(1, 32, 1, 8, 8), (2, 64, 2, 16, 16), (1, 48, 2, 16, 16)])
+def test_rwkv6_scan_sweep(B, S, H, dh, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    r = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh))
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    wlog = -jnp.exp(jax.random.normal(ks[3], (B, S, H, dh)) * 0.5)
+    u = jax.random.normal(ks[4], (H, dh)) * 0.1
+    s0 = jnp.zeros((B, H, dh, dh))
+    y, sT = ops.rwkv6_wkv(r, k, v, wlog, u, s0, chunk=chunk, mode="interpret")
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    yr, sr = ref.rwkv6_ref(fold(r), fold(k), fold(v), fold(wlog),
+                           jnp.broadcast_to(u[None], (B, H, dh)).reshape(B * H, dh),
+                           s0.reshape(B * H, dh, dh))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr.reshape(B, H, S, dh).transpose(0, 2, 1, 3)),
+                               atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(sT.reshape(B * H, dh, dh)), np.asarray(sr),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_rwkv6_scan_nonzero_initial_state():
+    B, S, H, dh = 1, 32, 1, 8
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    r, k, v = (jax.random.normal(ks[i], (B, S, H, dh)) for i in range(3))
+    wlog = -jnp.exp(jax.random.normal(ks[3], (B, S, H, dh)) * 0.3)
+    u = jax.random.normal(ks[4], (H, dh)) * 0.1
+    s0 = jax.random.normal(ks[0], (B, H, dh, dh))
+    y, sT = ops.rwkv6_wkv(r, k, v, wlog, u, s0, chunk=8, mode="interpret")
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    yr, sr = ref.rwkv6_ref(fold(r), fold(k), fold(v), fold(wlog),
+                           u.reshape(B * H, dh), s0.reshape(B * H, dh, dh))
+    np.testing.assert_allclose(np.asarray(y[0, :, 0]), np.asarray(yr[0]), atol=5e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("B,S,E,N,chunk,eblock", [(1, 32, 16, 4, 8, 8), (2, 64, 32, 8, 16, 16)])
+def test_mamba_scan_sweep(B, S, E, N, chunk, eblock):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    da = jnp.exp(-jnp.abs(jax.random.normal(ks[0], (B, S, E, N))))
+    dbu = jax.random.normal(ks[1], (B, S, E, N)) * 0.1
+    c = jax.random.normal(ks[2], (B, S, N))
+    h0 = jnp.zeros((B, E, N))
+    y, hT = ops.mamba_ssm_scan(da, dbu, c, h0, chunk=chunk, eblock=eblock, mode="interpret")
+    yr, hr = ref.mamba_ref(da, dbu, c)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hr), atol=1e-5, rtol=1e-5)
+
+
+def test_consolidation_scores_vs_ref_and_model():
+    servers = list(PAPER_CLUSTER)[:2]
+    Ds = [profile_pairwise_fast(s) for s in servers]
+    cluster = PackedCluster.build(servers, Ds, alpha=1.3)
+    counts = jnp.zeros((2, cluster.T)).at[0, 5].add(2).at[1, 40].add(1)
+    wtypes = jnp.asarray([3, 77, 130, 229], jnp.int32)
+    fs_res = cluster.resident * cluster.fs[None]
+    cache, maxd = ops.greedy_scores(counts, cluster.D, cluster.rs, fs_res,
+                                    cluster.llc_budget, wtypes, mode="interpret")
+    cr, mr = ref.consolidation_scores_ref(
+        counts, cluster.D, np.asarray(cluster.rs), np.asarray(cluster.fs),
+        np.asarray(cluster.llc_budget), np.asarray(cluster.resident), wtypes)
+    np.testing.assert_allclose(np.asarray(cache), np.asarray(cr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(maxd), np.asarray(mr), atol=1e-5)
+
+
+def test_flash_attention_matches_model_layer():
+    """Kernel path == the production jnp chunked_attention (same math)."""
+    from repro.models.layers import chunked_attention
+
+    B, S, Hkv, G, dh = 1, 64, 2, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (B, S, Hkv, G, dh))
+    k = jax.random.normal(ks[1], (B, S, Hkv, dh))
+    v = jax.random.normal(ks[2], (B, S, Hkv, dh))
+    jnp_out = chunked_attention(q, k, v, causal=True, chunk=32)
+    kq = q.reshape(B, S, Hkv * G, dh)
+    kernel_out = ops.gqa_flash_attention(kq, k, v, causal=True, mode="interpret",
+                                         block_q=32, block_k=32)
+    np.testing.assert_allclose(
+        np.asarray(jnp_out.reshape(B, S, -1, dh), np.float32),
+        np.asarray(kernel_out, np.float32), atol=2e-5, rtol=2e-5)

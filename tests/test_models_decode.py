@@ -1,0 +1,89 @@
+"""Decode-with-cache must reproduce the full teacher-forcing forward exactly
+(validates KV caches, recurrent states, token-shift states, cross-KV)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKES
+from repro.models import build_model, materialize
+
+RNG = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("arch", sorted(SMOKES))
+def test_decode_matches_full_forward(arch):
+    cfg = SMOKES[arch]
+    if cfg.moe_experts:  # capacity truncation differs between groupings
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    model = build_model(cfg)
+    params = materialize(model.param_infos(), RNG)
+    B, S = 2, 33
+    tokens = jax.random.randint(RNG, (B, S), 0, cfg.vocab)
+    extras = {}
+    if cfg.family == "vlm":
+        extras["vis_embeds"] = jax.random.normal(RNG, (B, cfg.vis_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        extras["audio_embeds"] = jax.random.normal(RNG, (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+
+    full_logits, _ = model._forward(params, tokens, None, extras, False)
+    cache = materialize(model.cache_infos(B, S + 8), RNG)
+    _, cache = model.prefill(params, dict(extras, tokens=tokens[:, : S - 1]), cache)
+    dec_logits, _ = model.decode_step(params, cache, tokens[:, S - 1 : S])
+
+    a = np.asarray(full_logits[:, -1, :], np.float32)
+    b = np.asarray(dec_logits[:, 0, :], np.float32)
+    err = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+    assert err < 1e-3, f"{arch}: {err}"
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "rwkv6-7b", "jamba-v0.1-52b"])
+def test_incremental_decode_chain(arch):
+    """Prefill + N single-token decodes == one long forward at every step.
+
+    MoE archs need drop-free capacity (truncation differs between the
+    per-sequence and per-batch dispatch groupings); rwkv compares in fp32
+    (the chunked prefill and the per-token recurrence accumulate in
+    different orders, which bf16 amplifies)."""
+    cfg = SMOKES[arch]
+    if cfg.moe_experts:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    if cfg.family == "ssm":
+        cfg = dataclasses.replace(cfg, compute_dtype=jnp.float32)
+    model = build_model(cfg)
+    params = materialize(model.param_infos(), RNG)
+    B, S0, N = 1, 16, 4
+    tokens = jax.random.randint(RNG, (B, S0 + N), 0, cfg.vocab)
+
+    cache = materialize(model.cache_infos(B, S0 + N + 4), RNG)
+    _, cache = model.prefill(params, {"tokens": tokens[:, :S0]}, cache)
+    for t in range(N):
+        step_logits, cache = model.decode_step(params, cache, tokens[:, S0 + t : S0 + t + 1])
+        full_logits, _ = model._forward(params, tokens[:, : S0 + t + 1], None, {}, False)
+        a = np.asarray(full_logits[:, -1], np.float32)
+        b = np.asarray(step_logits[:, 0], np.float32)
+        err = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+        assert err < 1e-3, (arch, t, err)
+
+
+def test_sliding_window_attention_masks_old_tokens():
+    """Jamba's windowed attention: tokens beyond the window are invisible."""
+    cfg = dataclasses.replace(SMOKES["jamba-v0.1-52b"], sliding_window=8)
+    model = build_model(cfg)
+    params = materialize(model.param_infos(), RNG)
+    B, S = 1, 24
+    t1 = jax.random.randint(RNG, (B, S), 0, cfg.vocab)
+    # change tokens far outside the window of the last position
+    t2 = t1.at[:, 0:4].set((t1[:, 0:4] + 1) % cfg.vocab)
+    l1, _ = model._forward(params, t1, None, {}, False)
+    l2, _ = model._forward(params, t2, None, {}, False)
+    # NOTE: mamba layers still carry state across the whole prefix, so logits
+    # are not identical -- but the attention sublayer contribution of the
+    # changed tokens must be masked; verify the drift is smallvs a same-window change
+    near = t1.at[:, -4:-2].set((t1[:, -4:-2] + 1) % cfg.vocab)
+    l3, _ = model._forward(params, near, None, {}, False)
+    d_far = float(jnp.abs(l1[:, -1] - l2[:, -1]).max())
+    d_near = float(jnp.abs(l1[:, -1] - l3[:, -1]).max())
+    assert d_near > d_far

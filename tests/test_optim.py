@@ -1,0 +1,124 @@
+"""Optimizers, schedules, gradient utilities."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.optim import (
+    OptConfig,
+    adafactor_init,
+    adafactor_update,
+    adamw8bit_init,
+    adamw8bit_update,
+    adamw_init,
+    adamw_update,
+    bucket_by_size,
+    warmup_cosine,
+)
+from repro.optim.adamw import _dq8, _q8
+
+
+def _scalar_adamw_reference(p, g, m, v, step, lr, cfg):
+    """Textbook AdamW on scalars (the oracle)."""
+    m2 = cfg.b1 * m + (1 - cfg.b1) * g
+    v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+    mh = m2 / (1 - cfg.b1**step)
+    vh = v2 / (1 - cfg.b2**step)
+    return p - lr * (mh / (np.sqrt(vh) + cfg.eps) + cfg.weight_decay * p), m2, v2
+
+
+def test_adamw_matches_scalar_reference():
+    cfg = OptConfig(grad_clip=1e9)  # disable clipping for the comparison
+    params = {"w": jnp.asarray([0.5, -1.0, 2.0])}
+    grads = {"w": jnp.asarray([0.1, -0.2, 0.05])}
+    state = adamw_init(params)
+    lr = 1e-2
+    new_p, new_s, _ = adamw_update(params, grads, state, lr, cfg)
+    for i in range(3):
+        want, _, _ = _scalar_adamw_reference(
+            0.5 if i == 0 else (-1.0 if i == 1 else 2.0),
+            [0.1, -0.2, 0.05][i], 0.0, 0.0, 1, lr, cfg)
+        assert float(new_p["w"][i]) == pytest.approx(want, rel=1e-5)
+
+
+def test_adamw_clipping_bounds_update():
+    cfg = OptConfig(grad_clip=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    grads = {"w": jnp.full(4, 100.0)}
+    state = adamw_init(params)
+    new_p, _, stats = adamw_update(params, grads, state, 1.0, cfg)
+    assert float(stats["grad_norm"]) == pytest.approx(200.0)
+    # post-clip effective gradient has norm 1 -> first Adam step is ~ -lr
+    assert np.all(np.abs(np.asarray(new_p["w"])) <= 1.0 + 1e-5)
+
+
+def test_adamw8bit_tracks_fp32_adamw():
+    """Over a short trajectory the 8-bit optimizer follows fp32 AdamW: the
+    accumulated updates point the same way (cosine > 0.95) and the absolute
+    divergence stays within a few lr units (int8 v is coarse early on)."""
+    cfg = OptConfig(grad_clip=1e9, weight_decay=0.0)
+    rng = np.random.default_rng(0)
+    p0 = jnp.asarray(rng.normal(size=512).astype(np.float32))
+    params32, params8 = {"w": p0}, {"w": p0}
+    s32, s8 = adamw_init(params32), adamw8bit_init(params8)
+    lr = 1e-2
+    for t in range(5):
+        g = {"w": jnp.asarray(rng.normal(size=512).astype(np.float32) * 0.1)}
+        params32, s32, _ = adamw_update(params32, g, s32, lr, cfg)
+        params8, s8, _ = adamw8bit_update(params8, g, s8, lr, cfg)
+    d32 = np.asarray(params32["w"]) - np.asarray(p0)
+    d8 = np.asarray(params8["w"]) - np.asarray(p0)
+    cos = float(np.dot(d32, d8) / (np.linalg.norm(d32) * np.linalg.norm(d8)))
+    assert cos > 0.95
+    assert np.abs(d32 - d8).max() < 5 * lr
+
+
+def test_adafactor_state_is_factored():
+    params = {"w": jnp.zeros((64, 32, 16))}
+    state = adafactor_init(params)
+    assert state["state"]["w"]["vr"].shape == (64, 32)
+    assert state["state"]["w"]["vc"].shape == (16,)
+    g = {"w": jnp.ones((64, 32, 16))}
+    new_p, new_s, _ = adafactor_update(params, g, state, 1e-2, OptConfig())
+    assert np.all(np.isfinite(np.asarray(new_p["w"])))
+    assert float(jnp.abs(new_p["w"]).max()) > 0
+
+
+def test_adafactor_moves_toward_minimum():
+    cfg = OptConfig(weight_decay=0.0)
+    params = {"w": jnp.full((8, 8), 5.0)}
+    state = adafactor_init(params)
+    for _ in range(50):
+        g = {"w": 2 * params["w"]}  # d/dw ||w||^2
+        params, state, _ = adafactor_update(params, g, state, 0.1, cfg)
+    assert float(jnp.abs(params["w"]).mean()) < 2.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-100, 100), min_size=8, max_size=64))
+def test_q8_roundtrip_error_bounded(xs):
+    x = jnp.asarray(np.array(xs, np.float32))
+    q, s = _q8(x, block=16)
+    back = _dq8(q, s, x.shape, 16)
+    scale = max(abs(min(xs)), abs(max(xs)), 1e-12)
+    assert float(jnp.abs(back - x).max()) <= scale / 127.0 + 1e-6
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(s, peak_lr=1.0, warmup_steps=10, total_steps=100))
+           for s in range(100)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(1.0, abs=0.02)
+    assert np.argmax(lrs) == 10
+    assert lrs[-1] < 0.2  # decayed
+    assert lrs[-1] >= 0.099  # floor at final_frac * peak
+
+
+def test_bucket_by_size_preserves_all_leaves():
+    tree = {"a": jnp.zeros(1000), "b": jnp.zeros(2000), "c": jnp.zeros(10)}
+    buckets = bucket_by_size(tree, bucket_bytes=6000)
+    flat = [p for b in buckets for p in b]
+    assert len(flat) == 3
+    assert len(buckets) >= 2

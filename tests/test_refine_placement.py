@@ -1,0 +1,73 @@
+"""Beyond-paper: local-search refinement + consolidation-aware loader placement."""
+import numpy as np
+import pytest
+
+from repro.core import M1, M2, ClusterState, Workload, greedy_sequence, profile_pairwise_fast, snap_to_grid
+from repro.core.refine import local_search
+from repro.core.units import KB, MB
+from repro.data import synthetic_store
+from repro.data.placement import max_safe_ranks_per_host, place_loaders
+
+
+def test_local_search_never_worse_and_stays_feasible():
+    servers = [M1, M2]
+    D = [profile_pairwise_fast(s) for s in servers]
+    rng = np.random.default_rng(3)
+    state = ClusterState.empty(servers, D, alpha=1.3)
+    ws = [snap_to_grid(Workload(fs=float(rng.choice([256 * KB, 1 * MB, 4 * MB])),
+                                rs=float(rng.choice([16 * KB, 64 * KB, 256 * KB]))))
+          for _ in range(8)]
+    # deliberately bad assignment: everything that fits on server 0
+    for w in ws:
+        state.assignments[0].append(w)
+        if not state.check(0).ok:
+            state.assignments[0].pop()
+            state.assignments[1].append(w)
+    before = state.total_avg_load()
+    refined, n = local_search(state)
+    assert refined.total_avg_load() <= before + 1e-12
+    assert refined.feasible()
+
+
+def test_local_search_improves_unbalanced_packing():
+    servers = [M1, M1]
+    D = [profile_pairwise_fast(M1)] * 2
+    state = ClusterState.empty(servers, D, alpha=1.3)
+    w = snap_to_grid(Workload(fs=1 * MB, rs=64 * KB))
+    state.assignments[0] = [w, w, w]  # lopsided but feasible
+    before = state.total_avg_load()
+    refined, n = local_search(state)
+    assert n >= 1
+    assert refined.total_avg_load() < before
+    sizes = sorted(len(a) for a in refined.assignments)
+    assert sizes == [1, 2]  # rebalanced
+
+
+def test_loader_placement_respects_host_capacity():
+    store = synthetic_store(block_mb=64)
+    placements, state = place_loaders(store, n_ranks=12, hosts=[M1, M2])
+    assert state.feasible()
+    placed = [p for p in placements if p.host is not None]
+    queued = [p for p in placements if p.host is None]
+    assert len(placed) >= 2
+    # per-host safe capacity bounds what the greedy placed there
+    cap1 = max_safe_ranks_per_host(store, M1)
+    per_host = {h: sum(1 for p in placed if p.host == h) for h in (0, 1)}
+    assert per_host[0] <= cap1
+    # the 64MB-chunk loader streams past the LLC: capacity is bandwidth-bound
+    assert 1 <= cap1 <= 8
+
+
+def test_greedy_plus_refine_beats_greedy_alone_or_ties():
+    servers = [M1, M2, M1]
+    D = [profile_pairwise_fast(s) for s in servers[:2]] + [D0 := None]
+    D[2] = D[0]
+    rng = np.random.default_rng(11)
+    ws = [snap_to_grid(Workload(fs=float(rng.choice([512 * KB, 2 * MB, 16 * MB])),
+                                rs=float(rng.choice([8 * KB, 64 * KB, 512 * KB]))))
+          for _ in range(9)]
+    state = ClusterState.empty(servers, D, alpha=1.3)
+    _, queued = greedy_sequence(state, ws)
+    g = state.total_avg_load()
+    refined, _ = local_search(state)
+    assert refined.total_avg_load() <= g + 1e-12
