@@ -1,12 +1,16 @@
 """Benchmark harness: one module per paper table/figure (DESIGN.md §7).
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig9]
+    PYTHONPATH=src python -m benchmarks.run [--only fig9] [--out-dir .]
 
-Output format: name,us_per_call,derived
+Output format: ``name,us_per_call,derived`` on stdout, plus one
+``BENCH_<suite>.json`` per suite (records ``{name, value, unit, meta}``) so
+the performance trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import traceback
 
@@ -34,24 +38,35 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run benches whose tag contains this")
+    ap.add_argument("--out-dir", default=str(pathlib.Path(__file__).resolve().parents[1]),
+                    help="directory for BENCH_<suite>.json records")
     args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
 
     print("name,us_per_call,derived")
 
-    def emit(name: str, us: float, derived: str):
+    records: list[dict] = []
+
+    def emit(name: str, us: float, derived: str, unit: str = "us_per_call"):
         print(f"{name},{us:.2f},{derived}")
         sys.stdout.flush()
+        records.append({"name": name, "value": round(us, 3), "unit": unit,
+                        "meta": derived})
 
     failures = []
     for tag, mod in MODULES:
         if args.only and args.only not in tag:
             continue
+        records = []
         try:
             mod.run(emit)
         except Exception as e:  # noqa: BLE001 -- report and continue
             failures.append((tag, e))
             traceback.print_exc()
             emit(f"{tag}/ERROR", 0.0, repr(e)[:120])
+        path = out_dir / f"BENCH_{tag}.json"
+        path.write_text(json.dumps(records, indent=2) + "\n")
     if failures:
         raise SystemExit(f"{len(failures)} benchmark modules failed: {[t for t, _ in failures]}")
 

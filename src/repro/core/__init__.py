@@ -7,10 +7,17 @@ Public API (stable):
   simulate_corun, competing_cache_bytes        -- §IV ground truth
   predict_tdp_hit, profile_pairwise*, predict_degradations  -- Eqns 1-3
   check_consolidation, DEGRADATION_LIMIT       -- §V criteria (Eqns 4-5)
-  ClusterState, greedy_place, greedy_sequence, brute_force  -- §VI-VII
-  PackedCluster, greedy_sequence_jax, brute_force_jax       -- JAX fast path
-  OnlineScheduler                              -- §V queueing runtime
+  ConsolidationEngine, EngineResult            -- THE unified online runtime
+  score_candidates, make_scorer                -- shared Q x m scoring iface
+  PackedDynamics, run_trace, corun_rates       -- device engine internals
+  PackedCluster, greedy_sequence_jax, brute_force_jax, score_candidates_jnp
+                                               -- jitted allocation paths
+  ClusterState, greedy_place, greedy_sequence, brute_force, OnlineScheduler
+                                               -- numpy reference oracle
+  local_search, local_search_engine, local_search_jax -- offline refinement
   JobProfile, PodSpec, FleetState, pack_jobs   -- TPU-fleet adaptation
+
+See DESIGN.md §8 for the engine architecture and the backend matrix.
 """
 from .binpack import (
     ClusterState,
@@ -24,15 +31,17 @@ from .binpack import (
     run_allocator,
 )
 from .calibrate import calibrate_alpha, pick_alpha, sweep_alpha
-from .refine import local_search
+from .refine import local_search, local_search_engine
 from .binpack_jax import (
     QUEUED,
     PackedCluster,
     brute_force_jax,
     counts_from_assignments,
     evaluate_assignment,
+    greedy_choice,
     greedy_sequence_jax,
     greedy_step,
+    score_candidates_jnp,
     server_loads,
 )
 from .cluster import (
@@ -56,6 +65,8 @@ from .contention import (
     tdp_lhs_naive,
 )
 from .criteria import DEGRADATION_LIMIT, AdmissionCheck, check_consolidation
+from .engine import ConsolidationEngine, EngineResult, make_scorer, score_candidates
+from .engine_jax import PackedDynamics, corun_rates, local_search_jax, run_trace
 from .scheduler import OnlineScheduler, ScheduleResult
 from .server import M1, M2, PAPER_CLUSTER, TPU_V5E_HOST, TPU_V5E_POD256, ServerSpec
 from .simulator import (

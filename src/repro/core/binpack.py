@@ -12,6 +12,11 @@ Implemented allocators:
   * ``first_fit`` / ``best_fit_cache`` -- classical baselines (beyond paper,
     used to show the 2-D objective matters)
 
+NOTE: like ``core.scheduler``, this pure-Python float64 path is the
+*reference oracle* of the unified engine (DESIGN.md §8); the production
+allocation paths are ``binpack_jax`` (jitted greedy + shared candidate
+scorer) and ``core.engine.ConsolidationEngine`` (the online runtime).
+
 Objective: the paper's text ("minimizes the sum of the average loads ... on
 all physical servers after allocation") and its Table II walk-through pick
 the server whose *post-allocation* average-load increase is smallest -- note

@@ -123,6 +123,77 @@ def avg_loads(cluster: PackedCluster, counts: jax.Array) -> jax.Array:
     return 0.5 * (cache + max_d)
 
 
+# --- the shared candidate scorer (Fig 8 steps 2-4, batched) ---------------------
+
+def score_candidates_jnp(
+    cluster: PackedCluster, counts: jax.Array, wtypes: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """(cache_after [Q, m], maxd_after [Q, m]) for placing each candidate type.
+
+    The *shared scoring interface* of the consolidation engine: the same
+    (counts, D, rs/fs, budget) -> (cache', MaxD') contract is implemented by
+    the Pallas kernel (``kernels.consolidation.consolidation_scores``, fleet
+    scale), by this jnp fallback, and by the numpy reference oracle
+    (``kernels.ref.consolidation_scores_ref``). Incremental form: per-server
+    base sums are computed once and each candidate adds its own delta, so the
+    cost is O(Q * m * T) instead of O(Q * m^2 * T).
+    """
+    wtypes = jnp.atleast_1d(wtypes)
+    comp0 = counts @ cluster.rs + (counts * cluster.resident) @ cluster.fs  # [m]
+    delta = cluster.rs[wtypes][None, :] + cluster.resident[:, wtypes] * cluster.fs[wtypes][None, :]
+    cache_after = (comp0[:, None] + delta) / cluster.llc_budget[:, None]  # [m, Q]
+
+    col0 = jnp.einsum("mt,mtu->mu", counts, cluster.D)  # [m, T]
+    diag = jnp.diagonal(cluster.D, axis1=1, axis2=2)  # [m, T]
+    col_after = col0[:, None, :] + cluster.D[:, wtypes, :]  # [m, Q, T]
+    d_pred = jnp.clip(col_after - diag[:, None, :], 0.0, 1.0)
+    onehot = jax.nn.one_hot(wtypes, cluster.T, dtype=counts.dtype)  # [Q, T]
+    present = (counts[:, None, :] + onehot[None, :, :]) > 0
+    maxd_after = jnp.max(jnp.where(present, d_pred, -jnp.inf), axis=-1)  # [m, Q]
+    return cache_after.T, maxd_after.T
+
+
+def greedy_choice(
+    cluster: PackedCluster,
+    counts: jax.Array,
+    cache_after: jax.Array,  # [Q, m] from any scoring backend
+    maxd_after: jax.Array,  # [Q, m]
+    objective: str = "sum_avg",
+) -> tuple[jax.Array, jax.Array]:
+    """Fig 8 step 5 over pre-computed candidate scores.
+
+    Returns (server [Q], feasible_any [Q]); server == QUEUED where no server
+    passes both criteria. Shared by the greedy scan and the online engine.
+    """
+    feasible = (maxd_after < cluster.degradation_limit) & (cache_after <= 1.0)
+    avg_after = 0.5 * (cache_after + maxd_after)
+    if objective == "sum_avg":  # Table II semantics: minimize the load increase
+        score = avg_after - avg_loads(cluster, counts)[None, :]
+    else:  # literal Fig 8: minimize the post-allocation average
+        score = avg_after
+    score = jnp.where(feasible, score, jnp.inf)
+    best = argmin_with_margin(score)
+    ok = jnp.any(feasible, axis=1)
+    return jnp.where(ok, best, QUEUED), ok
+
+
+#: scores closer than this are treated as tied (lowest server index wins) --
+#: the f32 analogue of the Python greedy's ``score < best - 1e-12`` rule
+SCORE_MARGIN = 1e-6
+
+
+def argmin_with_margin(score: jax.Array, margin: float = SCORE_MARGIN) -> jax.Array:
+    """First index along axis 1 whose score is within ``margin`` of the min.
+
+    The pure-Python greedy keeps the earlier server unless a later one
+    improves by more than 1e-12; a plain f32 argmin instead resolves
+    sub-precision differences in arbitrary order. Preferring the first
+    near-minimal index reproduces the oracle's tie-breaking.
+    """
+    smin = jnp.min(score, axis=1, keepdims=True)
+    return jnp.argmax(score <= smin + margin, axis=1)
+
+
 # --- the greedy step (Fig 8), one arrival ---------------------------------------
 
 @partial(jax.jit, static_argnames=("objective",))
@@ -133,32 +204,15 @@ def greedy_step(
 
     Returns (new_counts, placement) where placement == QUEUED when no server
     satisfies both criteria. All m candidate placements are scored in one
-    vectorized evaluation.
+    vectorized evaluation through the shared scorer.
     """
+    cache_after, maxd_after = score_candidates_jnp(cluster, counts, wtype)  # [1, m]
+    placement, placed = greedy_choice(cluster, counts, cache_after, maxd_after, objective)
+    placement, placed = placement[0], placed[0]
     onehot = jax.nn.one_hot(wtype, cluster.T, dtype=counts.dtype)  # [T]
-    # counts if W were placed on server s: counts with row s incremented.
-    trial = counts[None, :, :] + jnp.eye(cluster.m, dtype=counts.dtype)[:, :, None] * onehot[None, None, :]
-    # trial[s] is the whole cluster counts under hypothesis "place on s".
-    cache_t, maxd_t = jax.vmap(lambda c: server_loads(cluster, c))(trial)  # [m, m] each
-    s_idx = jnp.arange(cluster.m)
-    cache_after = cache_t[s_idx, s_idx]  # loads of the modified server only
-    maxd_after = maxd_t[s_idx, s_idx]
-
-    feasible = (maxd_after < cluster.degradation_limit) & (cache_after <= 1.0)
-
-    avg_after = 0.5 * (cache_after + maxd_after)
-    if objective == "sum_avg":  # Table II semantics: minimize the load increase
-        avg_before = avg_loads(cluster, counts)
-        score = avg_after - avg_before
-    else:  # literal Fig 8: minimize the post-allocation average
-        score = avg_after
-    score = jnp.where(feasible, score, jnp.inf)
-    best = jnp.argmin(score)
-    placed = jnp.isfinite(score[best])
-    placement = jnp.where(placed, best, QUEUED)
     new_counts = jnp.where(
         placed,
-        counts.at[best].add(onehot),
+        counts.at[jnp.where(placed, placement, 0)].add(onehot),
         counts,
     )
     return new_counts, placement

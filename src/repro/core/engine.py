@@ -1,0 +1,260 @@
+"""ConsolidationEngine: one front-end over the consolidation runtime backends.
+
+The repo used to have three disconnected consolidation paths:
+
+  * ``core/binpack.py`` + ``core/scheduler.py`` -- pure-Python greedy and the
+    event-driven ``OnlineScheduler`` (heapq + numpy);
+  * ``core/binpack_jax.py`` -- the jitted greedy over arrival *sequences*,
+    with no notion of time, completions, or queue draining;
+  * ``kernels/consolidation.py`` -- the Pallas Q x m candidate scorer.
+
+This module unifies them. ``ConsolidationEngine`` exposes the paper's full
+online operating model (arrive -> score -> place-or-queue -> run -> complete
+-> drain, §V/§VIII) behind one API with two runtime backends:
+
+  backend='jax'    the device-resident ``engine_jax.run_trace`` scan;
+  backend='numpy'  the demoted pure-Python ``OnlineScheduler``, kept as the
+                   reference oracle the JAX engine is parity-tested against;
+  backend='auto'   numpy below ``AUTO_JAX_THRESHOLD`` arrivals (jit overhead
+                   dominates tiny traces), jax at scale.
+
+Candidate scoring is a *separate* axis: all runtime backends consume the same
+(counts, wtypes) -> (cache_after, maxd_after) scoring interface, provided by
+
+  scorer='jnp'     ``binpack_jax.score_candidates_jnp`` (default, any device);
+  scorer='pallas'  the Pallas kernel -- the fleet-scale Q x m path on TPU
+                   (interpret mode elsewhere);
+  scorer='numpy'   ``kernels.ref.consolidation_scores_ref`` -- host-side
+                   float64 reference for contract tests (not jit-able).
+
+See DESIGN.md §8 for the backend matrix and the architecture notes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .binpack import ClusterState, greedy_place
+from .binpack_jax import PackedCluster, score_candidates_jnp
+from .contention import profile_pairwise_fast
+from .engine_jax import QUEUED, PackedDynamics, Scorer, run_trace
+from .scheduler import OnlineScheduler
+from .server import ServerSpec
+from .workload import Workload, type_index
+
+Backend = Literal["auto", "jax", "numpy"]
+ScorerName = Literal["jnp", "pallas", "numpy"]
+
+#: below this many arrivals the oracle outruns a fresh jit compile
+AUTO_JAX_THRESHOLD = 32
+
+
+@functools.lru_cache(maxsize=None)
+def make_scorer(backend: ScorerName = "jnp", interpret: bool | None = None) -> Scorer:
+    """Resolve a scoring-backend name to the shared-interface callable.
+
+    Cached so the returned closure is identity-stable -- ``run_trace`` treats
+    the scorer as a static jit argument and would otherwise recompile per
+    call.
+    """
+    if backend == "jnp":
+        return score_candidates_jnp
+    if backend == "pallas":
+        from ..kernels.consolidation import consolidation_scores
+
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+
+        def pallas_scorer(cluster, counts, wtypes):
+            fs_res = cluster.resident * cluster.fs[None, :]
+            return consolidation_scores(
+                counts, cluster.D, cluster.rs, fs_res, cluster.llc_budget,
+                jnp.atleast_1d(wtypes), interpret=interpret)
+
+        return pallas_scorer
+    if backend == "numpy":
+        from ..kernels.ref import consolidation_scores_ref
+
+        def numpy_scorer(cluster, counts, wtypes):
+            return consolidation_scores_ref(
+                counts, cluster.D, np.asarray(cluster.rs), np.asarray(cluster.fs),
+                np.asarray(cluster.llc_budget), np.asarray(cluster.resident),
+                jnp.atleast_1d(wtypes))
+
+        return numpy_scorer
+    raise ValueError(f"unknown scorer backend {backend!r}")
+
+
+def score_candidates(
+    cluster: PackedCluster, counts, wtypes, backend: ScorerName = "jnp"
+) -> tuple[jax.Array, jax.Array]:
+    """The shared scoring interface, dispatched by backend name."""
+    return make_scorer(backend)(cluster, jnp.asarray(counts), jnp.asarray(wtypes))
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineResult:
+    """Backend-independent outcome of one arrival trace."""
+
+    placements: tuple[int | None, ...]  # final server per arrival (None = never ran)
+    was_queued: tuple[bool, ...]  # §V queue decision at arrival time
+    place_times: tuple[float, ...]  # -1 where never placed
+    finish_times: tuple[float, ...]  # +inf where never finished
+    makespan: float
+    max_observed_degradation: float
+    backend: str
+
+    @property
+    def queued_indices(self) -> tuple[int, ...]:
+        return tuple(i for i, q in enumerate(self.was_queued) if q)
+
+
+class ConsolidationEngine:
+    """The unified online consolidation runtime (see module docstring)."""
+
+    def __init__(
+        self,
+        servers: Sequence[ServerSpec],
+        D: Sequence[np.ndarray] | np.ndarray | None = None,
+        alpha: float | Sequence[float] = 1.3,
+        objective: str = "sum_avg",
+        backend: Backend = "auto",
+        scorer: ScorerName = "jnp",
+    ):
+        if scorer == "numpy":
+            # fail at construction, not at the trace length where 'auto'
+            # happens to pick the jax runtime: the host-side float64 scorer
+            # cannot run inside the jitted engine
+            raise ValueError(
+                "scorer='numpy' is the host-side float64 reference for "
+                "score_candidates(); the engine runtimes take scorer "
+                "'jnp' or 'pallas' (use backend='numpy' for the oracle)")
+        self.servers = tuple(servers)
+        if D is None:
+            # keyed by the frozen spec value, not its name: same-name variant
+            # specs (dataclasses.replace) must not share a profiling pass
+            cache: dict[ServerSpec, np.ndarray] = {}
+            for s in self.servers:  # identical specs share one profiling pass
+                if s not in cache:
+                    cache[s] = profile_pairwise_fast(s)
+            D = [cache[s] for s in self.servers]
+        elif isinstance(D, np.ndarray):
+            D = [D] * len(self.servers)
+        self.D = list(D)
+        self.alpha = alpha
+        self.objective = objective
+        self.backend = backend
+        self.scorer = scorer
+        self.cluster = PackedCluster.build(list(self.servers), self.D, alpha)
+        self._dyn: PackedDynamics | None = None
+
+    @property
+    def dyn(self) -> PackedDynamics:
+        """Ground-truth rate tables, built on first device-backend use."""
+        if self._dyn is None:
+            self._dyn = PackedDynamics.build(self.servers)
+        return self._dyn
+
+    # -- public API -------------------------------------------------------
+    def run(
+        self, arrivals: Sequence[tuple[float, Workload]], backend: Backend | None = None
+    ) -> EngineResult:
+        """Simulate arrivals [(time, workload)] to completion of all work.
+
+        Workloads are snapped to the profiling grid (as the paper's scheduler
+        snaps every candidate for its D-matrix lookup); ``data_total`` is
+        honoured per arrival. Raises ``RuntimeError`` on deadlock (a queued
+        workload no *empty* server can take), like the oracle.
+        """
+        if not arrivals:
+            return EngineResult((), (), (), (), 0.0, 0.0, "empty")
+        backend = backend or self.backend
+        if backend == "auto":
+            backend = "jax" if len(arrivals) >= AUTO_JAX_THRESHOLD else "numpy"
+        if backend == "jax":
+            return self._run_jax(arrivals)
+        if backend == "numpy":
+            return self._run_oracle(arrivals)
+        raise ValueError(f"unknown engine backend {backend!r}")
+
+    # -- device backend ---------------------------------------------------
+    def _run_jax(self, arrivals: Sequence[tuple[float, Workload]]) -> EngineResult:
+        n = len(arrivals)
+        times = np.asarray([t for t, _ in arrivals], np.float64)
+        order = np.argsort(times, kind="stable")
+        # normalize to the first arrival before the f32 cast: absolute
+        # epoch-scale timestamps would otherwise collapse below f32 resolution
+        t0 = float(times.min()) if n else 0.0
+        arr_time = jnp.asarray(times[order] - t0, jnp.float32)
+        arr_type = jnp.asarray([type_index(arrivals[i][1]) for i in order], jnp.int32)
+        arr_bytes = jnp.asarray([arrivals[i][1].data_total for i in order], jnp.float32)
+
+        # scorer='jnp' -> None: run_trace's incremental evaluation of the same
+        # contract (no per-step counts @ D re-reduction); other backends are
+        # routed through the generic interface.
+        scorer = None if self.scorer == "jnp" else make_scorer(self.scorer)
+        trace = run_trace(
+            self.cluster, self.dyn, arr_time, arr_type, arr_bytes,
+            objective=self.objective, scorer=scorer)
+        if bool(trace.deadlock):
+            raise RuntimeError("deadlock: queued workloads fit no empty server")
+
+        inv = np.empty(n, np.int64)
+        inv[order] = np.arange(n)
+        placement = np.asarray(trace.placement)[inv]
+        was_queued = np.asarray(trace.was_queued)[inv]
+        place_time = np.asarray(trace.place_time, np.float64)[inv]
+        finish_time = np.asarray(trace.finish_time, np.float64)[inv]
+        place_time = np.where(place_time >= 0.0, place_time + t0, place_time)
+        finish_time = np.where(np.isfinite(finish_time), finish_time + t0, finish_time)
+        return EngineResult(
+            placements=tuple(int(p) if p != QUEUED else None for p in placement),
+            was_queued=tuple(bool(q) for q in was_queued),
+            place_times=tuple(float(t) for t in place_time),
+            finish_times=tuple(float(t) for t in finish_time),
+            makespan=float(trace.makespan) + t0,
+            max_observed_degradation=float(trace.max_deg),
+            backend="jax",
+        )
+
+    # -- reference oracle -------------------------------------------------
+    def _run_oracle(self, arrivals: Sequence[tuple[float, Workload]]) -> EngineResult:
+        from .workload import snap_to_grid
+
+        state = ClusterState.empty(list(self.servers), self.D, self.alpha)
+        place = functools.partial(greedy_place, objective=self.objective)
+        sched = OnlineScheduler(state, place=place)
+        # distinct object identities per arrival so events map back uniquely
+        # (callers may legitimately pass the same Workload object many times)
+        copies = [(t, dataclasses.replace(snap_to_grid(w))) for t, w in arrivals]
+        result = sched.run(copies)
+
+        idx_of = {id(w): i for i, (_, w) in enumerate(copies)}
+        n = len(copies)
+        was_queued = [False] * n
+        place_time = [-1.0] * n
+        finish_time = [float("inf")] * n
+        for e in result.events:
+            i = idx_of.get(id(e.workload))
+            if i is None:
+                continue
+            if e.kind == "queue":
+                was_queued[i] = True
+            elif e.kind == "place":
+                place_time[i] = e.time
+            elif e.kind == "finish":
+                finish_time[i] = e.time
+        return EngineResult(
+            placements=tuple(result.placements[i] for i in range(n)),
+            was_queued=tuple(was_queued),
+            place_times=tuple(place_time),
+            finish_times=tuple(finish_time),
+            makespan=float(result.makespan),
+            max_observed_degradation=float(result.max_observed_degradation),
+            backend="numpy",
+        )

@@ -1,0 +1,514 @@
+"""Device-resident online consolidation engine (paper §V + §VIII as one scan).
+
+This is the array-native runtime half that ``binpack_jax`` lacks: the full
+arrive -> score -> place-or-queue -> run -> complete -> drain loop of the
+paper's operating model, expressed as fixed-shape array state stepped by a
+``jax.lax.while_loop`` (one micro-event per iteration, early exit when the
+trace completes) so an entire arrival trace -- including completions and the
+criterion-1 queue draining of §V -- runs jitted on device. The pure-Python
+``core.scheduler.OnlineScheduler`` is the numpy reference oracle this module
+is parity-tested against (tests/test_engine.py).
+
+State encoding (m servers, K run-slots per server, n arrivals, T grid types):
+
+  counts    : f32[m, T]  -- resident type counts (drives the Fig-8 scorer)
+  comp      : f32[m]     -- Eqn-2 competing bytes, maintained incrementally
+  col0      : f32[m, T]  -- additive-model column sums counts @ D (Eqn 3)
+  colog_*   : f32[m, T]  -- counts @ log(1 - d) under the keep/lost cache
+                            outcome (ground-truth co-run slowdown sums)
+  slot_type : i32[m, K]  -- grid type per run slot (-1 = free)
+  slot_rem  : f32[m, K]  -- remaining bytes per slot
+  slot_arr  : i32[m, K]  -- arrival index occupying the slot
+  queued    : bool[n]    -- criterion-1 queue; order == arrival order, which
+                            matches the oracle because workloads are enqueued
+                            in arrival order and never re-queued (a mask is
+                            therefore equivalent to a ring buffer here)
+
+The incremental sums make every event O(T) per server instead of O(T^2):
+placing/finishing a type-t workload on server s adds/subtracts one row of
+D[s] (model) and of log(1-d_s) (ground truth) -- the engine never re-reduces
+the full [m, T, T] tensors inside the scan.
+
+Each scan step consumes exactly one micro-event, picked by `lax.switch`:
+
+  DRAIN  -- after a completion (or when the cluster idles with a non-empty
+            queue), score *all* queued candidates against all servers in one
+            batched call to the scoring interface and place the first
+            (lowest arrival index) feasible one; repeat until none fits.
+            Correct single-placement-per-step semantics because adding a
+            workload never makes another candidate feasible (both criteria
+            are monotone in additions).
+  FINISH -- advance time to the earliest completion, free its slot, then
+            switch to DRAIN ("most probably upon completion of another
+            workload", §V).
+  ARRIVE -- advance time to the next arrival, run the Fig-8 greedy on it,
+            queue it if no server passes both criteria.
+
+Ground-truth rates (the oracle's ``simulate_corun``) are reproduced exactly
+for grid-typed workloads: pairwise slowdown factors compose multiplicatively,
+so with per-type counts c the log co-run slowdown of a type-t workload on
+server s is
+
+  log T_t / T_base,t = sum_u c_u * log(1 - d_s[u, t]) - log(1 - d_s[t, t])
+
+with the keep/lost variant of ``d_s`` (and of the base throughput) selected
+by the server's *physical* cache state (Eqn 2 vs llc_tolerance * CacheSize).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .binpack_jax import (
+    PackedCluster,
+    argmin_with_margin,
+    score_candidates_jnp,
+    server_loads,
+)
+from .contention import pair_slowdown_matrices, type_tables
+from .server import ServerSpec
+
+QUEUED = -1  # placement sentinel, same as binpack_jax
+
+#: scoring backend signature: (cluster, counts [m,T], wtypes [Q]) ->
+#: (cache_after [Q, m], maxd_after [Q, m])
+Scorer = Callable[[PackedCluster, jax.Array, jax.Array], tuple[jax.Array, jax.Array]]
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedDynamics:
+    """Per-type ground-truth rate tables (device-side ``simulate_corun``)."""
+
+    solo: jax.Array  # f32[m, T] solo throughput (bytes/s)
+    base_lost: jax.Array  # f32[m, T] throughput after losing the LLC
+    log_keep: jax.Array  # f32[m, T, T] log(1 - d_keep[i, j])
+    log_lost: jax.Array  # f32[m, T, T] log(1 - d_lost[i, j])
+    comp_bytes: jax.Array  # f32[m, T] per-type competing bytes (Eqn 2 terms)
+    tol_budget: jax.Array  # f32[m] llc_tolerance * CacheSize (physical TDP)
+
+    @classmethod
+    def build(cls, servers: Sequence[ServerSpec]) -> "PackedDynamics":
+        tables, logs = {}, {}
+        solo, lost, lkeep, llost, comp, tol = [], [], [], [], [], []
+        for s in servers:
+            # keyed by the frozen spec value (not name): identical specs share
+            # one pass, same-name variants do not; the default grid also hits
+            # contention.py's per-spec table cache
+            if s not in tables:
+                tables[s] = type_tables(s)
+                logs[s] = pair_slowdown_matrices(s)
+            tt, (d_keep, d_lost) = tables[s], logs[s]
+            solo.append(tt["solo"])
+            lost.append(tt["base_lost"])
+            lkeep.append(np.log1p(-np.clip(d_keep, 0.0, 1.0 - 1e-9)))
+            llost.append(np.log1p(-np.clip(d_lost, 0.0, 1.0 - 1e-9)))
+            comp.append(tt["comp_bytes"])
+            tol.append(s.llc_tolerance * s.llc_bytes)
+        f32 = lambda x: jnp.asarray(np.stack(x), jnp.float32)
+        return cls(f32(solo), f32(lost), f32(lkeep), f32(llost), f32(comp),
+                   jnp.asarray(tol, jnp.float32))
+
+
+jax.tree_util.register_pytree_node(
+    PackedDynamics,
+    lambda d: ((d.solo, d.base_lost, d.log_keep, d.log_lost, d.comp_bytes, d.tol_budget), None),
+    lambda aux, ch: PackedDynamics(*ch),
+)
+
+
+class EngineState(NamedTuple):
+    now: jax.Array  # f32 scalar simulation clock
+    ai: jax.Array  # i32 next-arrival pointer
+    counts: jax.Array  # f32[m, T]
+    comp: jax.Array  # f32[m] competing bytes (Eqn 2 LHS), incremental
+    col0: jax.Array  # f32[m, T] counts @ D, incremental
+    colog_keep: jax.Array  # f32[m, T] counts @ log(1-d_keep), incremental
+    colog_lost: jax.Array  # f32[m, T] counts @ log(1-d_lost), incremental
+    slot_type: jax.Array  # i32[m, K]
+    slot_rem: jax.Array  # f32[m, K]
+    slot_arr: jax.Array  # i32[m, K]
+    queued: jax.Array  # bool[n]
+    was_queued: jax.Array  # bool[n] -- the §V queue *decision* per arrival
+    placement: jax.Array  # i32[n] server index or QUEUED
+    place_time: jax.Array  # f32[n]
+    finish_time: jax.Array  # f32[n]
+    makespan: jax.Array  # f32 scalar (time of latest completion)
+    max_deg: jax.Array  # f32 scalar max *observed* (simulated) degradation
+    draining: jax.Array  # bool -- queue re-check pending
+    deadlock: jax.Array  # bool -- queued work that no empty server can take
+
+
+class EngineTrace(NamedTuple):
+    """Raw device-side result of :func:`run_trace` (arrival-sorted order)."""
+
+    placement: jax.Array  # i32[n]
+    was_queued: jax.Array  # bool[n]
+    place_time: jax.Array  # f32[n]
+    finish_time: jax.Array  # f32[n]
+    makespan: jax.Array  # f32
+    max_deg: jax.Array  # f32
+    deadlock: jax.Array  # bool
+
+
+def corun_rates(
+    cluster: PackedCluster, dyn: PackedDynamics, counts: jax.Array, slot_type: jax.Array
+) -> jax.Array:
+    """Ground-truth bytes/s per run slot under the current co-run sets [m, K].
+
+    Standalone (counts-based) form of the rate model the scan maintains
+    incrementally; exported for tests and one-off evaluations.
+    """
+    overflow = (counts * dyn.comp_bytes).sum(-1) > dyn.tol_budget  # [m] physical TDP
+    ck = jnp.einsum("mt,mtu->mu", counts, dyn.log_keep)
+    cl = jnp.einsum("mt,mtu->mu", counts, dyn.log_lost)
+    ldiag_keep = jnp.diagonal(dyn.log_keep, axis1=1, axis2=2)
+    ldiag_lost = jnp.diagonal(dyn.log_lost, axis1=1, axis2=2)
+    return _slot_rates(dyn, ldiag_keep, ldiag_lost, overflow, ck, cl, slot_type)
+
+
+def _slot_rates(dyn, ldiag_keep, ldiag_lost, overflow, colog_keep, colog_lost, slot_type):
+    """Per-slot rates from the maintained log-slowdown sums."""
+    colog = jnp.where(overflow[:, None], colog_lost, colog_keep)  # [m, T]
+    ldiag = jnp.where(overflow[:, None], ldiag_lost, ldiag_keep)  # [m, T]
+    base = jnp.where(overflow[:, None], dyn.base_lost, dyn.solo)  # [m, T]
+    t = jnp.clip(slot_type, 0)  # [m, K]
+    logslow = jnp.take_along_axis(colog - ldiag, t, axis=1)
+    return jnp.take_along_axis(base, t, axis=1) * jnp.exp(logslow)  # [m, K]
+
+
+@partial(jax.jit, static_argnames=("objective", "scorer", "n_steps"))
+def run_trace(
+    cluster: PackedCluster,
+    dyn: PackedDynamics,
+    arr_time: jax.Array,  # f32[n], non-decreasing
+    arr_type: jax.Array,  # i32[n] grid types
+    arr_bytes: jax.Array,  # f32[n] data_total per arrival
+    *,
+    objective: str = "sum_avg",
+    scorer: Scorer | None = None,
+    n_steps: int | None = None,
+) -> EngineTrace:
+    """Run one arrival trace to completion entirely on device.
+
+    Every iteration is one micro-event; 4n + 8 steps are provably enough (n
+    arrivals, <= n completions, <= n successful drain placements, and one
+    failed drain check per completion), the loop exits early once all work
+    has completed, and the whole loop jit-compiles once per (m, n) shape.
+
+    Placements and queue decisions reproduce the float64 oracle: canonical
+    per-server sum refreshes keep same-spec servers bitwise-tied, and
+    ``argmin_with_margin`` resolves sub-margin score/finish-time ties to the
+    lowest index exactly like the oracle's strict-improvement loops.
+
+    ``scorer=None`` uses the engine's incremental evaluation of the shared
+    scoring contract (O(Q m T) with no counts @ D re-reduction); passing an
+    explicit backend (e.g. the Pallas kernel via ``engine.make_scorer``)
+    routes every candidate batch through it instead.
+    """
+    n = int(arr_time.shape[0])
+    m, K = cluster.m, n
+    if n_steps is None:
+        n_steps = 4 * n + 8
+
+    diag = jnp.diagonal(cluster.D, axis1=1, axis2=2)  # [m, T]
+    comp_delta = cluster.rs[None, :] + cluster.resident * cluster.fs[None, :]  # [m, T]
+    ldiag_keep = jnp.diagonal(dyn.log_keep, axis1=1, axis2=2)  # [m, T]
+    ldiag_lost = jnp.diagonal(dyn.log_lost, axis1=1, axis2=2)  # [m, T]
+    T = cluster.T
+    # all per-server sum tables side by side: one dynamic slice + one matvec
+    # refreshes every maintained sum of the touched server (see apply_delta)
+    tables = jnp.concatenate(
+        [cluster.D, dyn.log_keep, dyn.log_lost, comp_delta[:, :, None]], axis=2
+    )  # [m, T, 3T + 1]
+
+    st0 = EngineState(
+        now=jnp.float32(0.0),
+        ai=jnp.int32(0),
+        counts=jnp.zeros((m, cluster.T), jnp.float32),
+        comp=jnp.zeros((m,), jnp.float32),
+        col0=jnp.zeros((m, cluster.T), jnp.float32),
+        colog_keep=jnp.zeros((m, cluster.T), jnp.float32),
+        colog_lost=jnp.zeros((m, cluster.T), jnp.float32),
+        slot_type=jnp.full((m, K), -1, jnp.int32),
+        slot_rem=jnp.zeros((m, K), jnp.float32),
+        slot_arr=jnp.full((m, K), -1, jnp.int32),
+        queued=jnp.zeros((n,), bool),
+        was_queued=jnp.zeros((n,), bool),
+        placement=jnp.full((n,), QUEUED, jnp.int32),
+        place_time=jnp.full((n,), -1.0, jnp.float32),
+        finish_time=jnp.full((n,), jnp.inf, jnp.float32),
+        makespan=jnp.float32(0.0),
+        max_deg=jnp.float32(0.0),
+        draining=jnp.asarray(False),
+        deadlock=jnp.asarray(False),
+    )
+
+    def score_fast(st, wtypes):
+        """Shared scoring contract from the maintained sums (no einsum)."""
+        delta = comp_delta[:, wtypes]  # [m, Q]
+        cache_after = (st.comp[:, None] + delta) / cluster.llc_budget[:, None]
+        col_after = st.col0[:, None, :] + cluster.D[:, wtypes, :]  # [m, Q, T]
+        d_pred = jnp.clip(col_after - diag[:, None, :], 0.0, 1.0)
+        onehot = jax.nn.one_hot(wtypes, cluster.T, dtype=st.counts.dtype)  # [Q, T]
+        present = (st.counts[:, None, :] + onehot[None, :, :]) > 0
+        maxd_after = jnp.max(jnp.where(present, d_pred, -jnp.inf), axis=-1)
+        return cache_after.T, maxd_after.T  # [Q, m] each
+
+    def loads_now(st):
+        """(cache [m], maxd [m]) of the current state from the maintained sums."""
+        cache = st.comp / cluster.llc_budget
+        d_pred = jnp.clip(st.col0 - diag, 0.0, 1.0)
+        present = st.counts > 0
+        maxd = jnp.max(jnp.where(present, d_pred, -jnp.inf), axis=1)
+        maxd = jnp.where(jnp.any(present, axis=1), maxd, 0.0)
+        return cache, maxd
+
+    def greedy_pick(st, wtypes):
+        """Scoring + Fig-8 argmin (Table II / Fig-8 objective) for a batch."""
+        wtypes = jnp.atleast_1d(wtypes)
+        if scorer is None:
+            cache_a, maxd_a = score_fast(st, wtypes)
+        else:
+            cache_a, maxd_a = scorer(cluster, st.counts, wtypes)
+        feasible = (maxd_a < cluster.degradation_limit) & (cache_a <= 1.0)
+        if objective == "sum_avg":  # Table II: minimize the load *increase*
+            cache_now, maxd_now = loads_now(st)
+            if scorer is None:
+                # the cache increase is known in closed form; using it directly
+                # avoids the f32 cancellation of (cache_after - cache_now)
+                dcache = (comp_delta[:, wtypes] / cluster.llc_budget[:, None]).T
+            else:
+                dcache = cache_a - cache_now[None, :]
+            score = 0.5 * (dcache + (maxd_a - maxd_now[None, :]))
+        else:  # literal Fig 8: minimize the post-allocation average
+            score = 0.5 * (cache_a + maxd_a)
+        score = jnp.where(feasible, score, jnp.inf)
+        best = argmin_with_margin(score)  # oracle tie-breaking (lowest index)
+        ok = jnp.any(feasible, axis=1)
+        return jnp.where(ok, best, QUEUED), ok
+
+    def apply_delta(st, server, wtype, sign):
+        """counts update + canonical refresh of the touched server's sums.
+
+        The sums are recomputed *from the counts row* (one [T] @ [T, T]
+        matvec per table, only for the modified server) rather than updated
+        incrementally: identical servers with identical co-run multisets then
+        hold bitwise-identical sums regardless of event history, so score
+        ties break by server index exactly like the float64 oracle's strict-
+        improvement loop, and nothing drifts over long traces. ``sign=0`` is
+        a no-op refresh (used when a conditional placement did not happen).
+        """
+        counts = st.counts.at[server, wtype].add(sign)
+        sums = counts[server] @ tables[server]  # [3T + 1]
+        return st._replace(
+            counts=counts,
+            comp=st.comp.at[server].set(sums[3 * T]),
+            col0=st.col0.at[server].set(sums[:T]),
+            colog_keep=st.colog_keep.at[server].set(sums[T:2 * T]),
+            colog_lost=st.colog_lost.at[server].set(sums[2 * T:3 * T]),
+        )
+
+    def place_if(st, found, idx, server, wtype, nbytes, t, queue_on_fail):
+        """Commit arrival ``idx`` to ``server`` when ``found``, else queue it.
+
+        Conditional writes are expressed as scatters whose index is pushed
+        out of bounds (and therefore dropped) on the untaken side -- much
+        cheaper inside the event loop than materializing and merging two
+        full states.
+        """
+        server = jnp.where(found, server, 0)
+        st = apply_delta(st, server, wtype, jnp.where(found, 1.0, 0.0))
+        free = st.slot_type[server] < 0  # [K]
+        k = jnp.where(found, jnp.argmax(free), K)  # K == n: a free slot exists
+        on_place = jnp.where(found, idx, n)  # n / K index -> scatter dropped
+        on_fail = jnp.where(found, n, idx) if queue_on_fail else n
+        return st._replace(
+            slot_type=st.slot_type.at[server, k].set(wtype),
+            slot_rem=st.slot_rem.at[server, k].set(nbytes),
+            slot_arr=st.slot_arr.at[server, k].set(idx),
+            queued=st.queued.at[on_place].set(False).at[on_fail].set(True),
+            was_queued=st.was_queued.at[on_fail].set(True),
+            placement=st.placement.at[on_place].set(server),
+            place_time=st.place_time.at[on_place].set(t),
+        )
+
+    def advance(st, rates, dt):
+        active = st.slot_type >= 0
+        rem = jnp.where(active, jnp.maximum(st.slot_rem - rates * dt, 0.0), st.slot_rem)
+        return st._replace(slot_rem=rem)
+
+    W = min(8, n)  # drain fast-path window (first W queued candidates)
+
+    def drain_branch(st, rates, tt):
+        del rates, tt
+        # Queue order == arrival order (workloads are never re-queued), so the
+        # first feasible *queued arrival index* is the item the oracle places.
+        pos = jnp.cumsum(st.queued.astype(jnp.int32))  # 1-based rank among queued
+        qlen = pos[-1]
+        # arrival indices of the first W queued items (n where fewer than W)
+        slot_of = jnp.where(st.queued & (pos <= W), pos - 1, W)
+        widx = jnp.full((W + 1,), n, jnp.int32).at[slot_of].min(
+            jnp.arange(n, dtype=jnp.int32))[:W]
+        in_window = widx < n
+        servers_w, ok_w = greedy_pick(st, arr_type[jnp.clip(widx, 0, n - 1)])
+        ok_w &= in_window
+        found_w = jnp.any(ok_w)
+        w_first = jnp.argmax(ok_w)
+        q_w, srv_w = widx[w_first], servers_w[w_first]
+
+        def full_scan(_):
+            # every window candidate failed but more are queued: score them all
+            servers, ok = greedy_pick(st, arr_type)  # [n]
+            cand = st.queued & ok
+            q = jnp.argmax(cand)
+            return q, servers[q], jnp.any(cand)
+
+        def window_hit(_):
+            return q_w, srv_w, found_w
+
+        q, server, found = jax.lax.cond(
+            ~found_w & (qlen > W), full_scan, window_hit, operand=None)
+
+        st = place_if(st, found, q, server, arr_type[q], arr_bytes[q], st.now,
+                      queue_on_fail=False)
+        no_active = ~jnp.any(st.slot_type >= 0)
+        dead = ~found & no_active & (st.ai >= n) & jnp.any(st.queued)
+        return st._replace(draining=found, deadlock=st.deadlock | dead)
+
+    def finish_branch(st, rates, tt):
+        # margin argmin: exactly-simultaneous completions (identical workloads
+        # on same-spec servers) must resolve lowest-server-first like the
+        # oracle's event loop; f32 noise would otherwise order them arbitrarily
+        flat = tt.reshape(-1)
+        t_min = jnp.min(flat)
+        k_flat = jnp.argmax(flat <= t_min * (1.0 + 1e-5))
+        s_fin, k_fin = k_flat // K, k_flat % K
+        t_fin = st.now + flat[k_flat]
+        st = advance(st, rates, t_fin - st.now)
+        idx = st.slot_arr[s_fin, k_fin]
+        wtype = st.slot_type[s_fin, k_fin]
+        st = apply_delta(st, s_fin, wtype, -1.0)
+        return st._replace(
+            now=t_fin,
+            makespan=t_fin,
+            slot_type=st.slot_type.at[s_fin, k_fin].set(-1),
+            slot_arr=st.slot_arr.at[s_fin, k_fin].set(-1),
+            finish_time=st.finish_time.at[idx].set(t_fin),
+            draining=jnp.any(st.queued),  # §V: completion may unblock the queue
+        )
+
+    def arrive_branch(st, rates, tt):
+        del tt
+        t_arr = arr_time[st.ai]
+        st = advance(st, rates, t_arr - st.now)._replace(now=t_arr)
+        wtype, nbytes = arr_type[st.ai], arr_bytes[st.ai]
+        servers, ok = greedy_pick(st, wtype[None])
+        st = place_if(st, ok[0], st.ai, servers[0], wtype, nbytes, t_arr,
+                      queue_on_fail=True)
+        return st._replace(ai=st.ai + 1)
+
+    def is_done(st):
+        return st.deadlock | (
+            (st.ai >= n) & ~jnp.any(st.slot_type >= 0) & ~jnp.any(st.queued))
+
+    def body(carry):
+        st, it = carry
+        overflow = st.comp > dyn.tol_budget
+        rates = _slot_rates(dyn, ldiag_keep, ldiag_lost, overflow,
+                            st.colog_keep, st.colog_lost, st.slot_type)
+        active = st.slot_type >= 0
+        # observed (ground-truth) degradation of the running set, for Fig-5 audits
+        solo = jnp.take_along_axis(dyn.solo, jnp.clip(st.slot_type, 0), axis=1)
+        deg = jnp.where(active, 1.0 - rates / solo, -jnp.inf)
+        st = st._replace(max_deg=jnp.maximum(st.max_deg, jnp.max(deg, initial=-jnp.inf)))
+
+        tt = jnp.where(active, st.slot_rem / rates, jnp.inf)
+        t_fin = st.now + jnp.min(tt)
+        t_arr = jnp.where(st.ai < n, arr_time[jnp.clip(st.ai, 0, n - 1)], jnp.inf)
+        any_active = jnp.any(active)
+        queue_any = jnp.any(st.queued)
+        drain = st.draining | (queue_any & ~any_active & (st.ai >= n))
+        branch = jnp.where(drain, 0, jnp.where(any_active & (t_fin <= t_arr), 1, 2))
+        st = jax.lax.switch(
+            branch, [drain_branch, finish_branch, arrive_branch], st, rates, tt)
+        return st, it + 1
+
+    def cond(carry):
+        st, it = carry
+        return (it < n_steps) & ~is_done(st)
+
+    st, _ = jax.lax.while_loop(cond, body, (st0, jnp.int32(0)))
+    return EngineTrace(st.placement, st.was_queued, st.place_time, st.finish_time,
+                       st.makespan, st.max_deg, st.deadlock)
+
+
+# --- array-native local search (core/refine.py's device backend) ----------------
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def local_search_jax(
+    cluster: PackedCluster, counts: jax.Array, max_iters: int = 100
+) -> tuple[jax.Array, jax.Array]:
+    """Best-improvement hill-climb over single-workload relocations.
+
+    The array counterpart of ``refine.local_search``'s relocation moves: every
+    (source server s, resident type t, target server u) move is scored in one
+    vectorized evaluation through the same incremental load algebra as the
+    shared scorer, and the steepest feasible descent step is applied until no
+    move improves the paper's global objective (sum of per-server average
+    loads). Returns (counts, n_moves).
+    """
+    m, T = counts.shape
+    diag = jnp.diagonal(cluster.D, axis1=1, axis2=2)  # [m, T]
+
+    def loads_after_removal(c):
+        """avg_load [m, T] of each server after removing one of each type.
+
+        (The *addition* side is exactly the shared scorer over all T types;
+        only removal needs its own algebra.)
+        """
+        comp0 = c @ cluster.rs + (c * cluster.resident) @ cluster.fs  # [m]
+        delta = cluster.rs[None, :] + cluster.resident * cluster.fs[None, :]  # [m, T]
+        cache = (comp0[:, None] - delta) / cluster.llc_budget[:, None]
+        col0 = jnp.einsum("mt,mtu->mu", c, cluster.D)  # [m, T]
+        col = col0[:, None, :] - cluster.D  # [m, T(moved), T]
+        d_pred = jnp.clip(col - diag[:, None, :], 0.0, 1.0)
+        present = (c[:, None, :] - jnp.eye(T, dtype=c.dtype)[None, :, :]) > 0
+        maxd = jnp.max(jnp.where(present, d_pred, -jnp.inf), axis=-1)
+        maxd = jnp.where(jnp.any(present, axis=-1), maxd, 0.0)
+        return cache, maxd
+
+    def body(carry):
+        c, moves, improved = carry
+        cache_now, maxd_now = server_loads(cluster, c)
+        avg0 = 0.5 * (cache_now + maxd_now)  # [m]
+        cache_rm, maxd_rm = loads_after_removal(c)  # [m, T]
+        cache_ad, maxd_ad = (  # shared scorer: every type on every server
+            a.T for a in score_candidates_jnp(cluster, c, jnp.arange(T)))
+        avg_rm = 0.5 * (cache_rm + maxd_rm)
+        avg_ad = 0.5 * (cache_ad + maxd_ad)
+        feas_ad = (maxd_ad < cluster.degradation_limit) & (cache_ad <= 1.0)
+
+        # delta[s, t, u] = objective change of moving one type-t from s to u
+        delta = (avg_rm - avg0[:, None])[:, :, None] + (avg_ad - avg0[:, None]).T[None, :, :]
+        valid = (c[:, :, None] > 0) & feas_ad.T[None, :, :]
+        valid &= ~jnp.eye(m, dtype=bool)[:, None, :]
+        delta = jnp.where(valid, delta, jnp.inf)
+        flat = jnp.argmin(delta.reshape(-1))
+        best = delta.reshape(-1)[flat]
+        s, t, u = flat // (T * m), (flat // m) % T, flat % m
+        improve = best < -1e-9
+        c = jnp.where(improve, c.at[s, t].add(-1.0).at[u, t].add(1.0), c)
+        return c, moves + improve.astype(jnp.int32), improve
+
+    def cond(carry):
+        _, moves, improved = carry
+        return improved & (moves < max_iters)
+
+    c, moves, _ = jax.lax.while_loop(
+        cond, body, (counts, jnp.int32(0), jnp.asarray(True)))
+    return c, moves

@@ -9,8 +9,20 @@ global objective (total average load). It can only improve the objective and
 never leaves the feasible region, so greedy + local_search is a strictly-
 better offline allocator at O(iters x W x m) model evaluations (each one the
 same Fig-8 check the Pallas scoring kernel batches).
+
+``local_search_engine`` is the device-backed variant: it packs the state
+into the unified engine's array representation, runs
+``engine_jax.local_search_jax`` (best-improvement relocations scored through
+the same incremental load algebra as the shared candidate scorer), and
+reconstructs the assignment. Python first-improvement and array
+best-improvement may take different descent paths; both are monotone and
+criteria-preserving.
 """
 from __future__ import annotations
+
+import collections
+
+import numpy as np
 
 from .binpack import ClusterState
 
@@ -78,3 +90,34 @@ def local_search(state: ClusterState, max_iters: int = 100) -> tuple[ClusterStat
         if not improved:
             break
     return cur, improved_total
+
+
+def local_search_engine(state: ClusterState, max_iters: int = 100) -> tuple[ClusterState, int]:
+    """Array-native relocation search on device; returns (state, n_moves).
+
+    Workloads are interchangeable within a profiling-grid type for both §V
+    criteria, so the refined type counts are mapped back to concrete
+    workloads by redistributing the originals type by type.
+    """
+    from .binpack_jax import PackedCluster, counts_from_assignments
+    from .engine_jax import local_search_jax
+    from .workload import type_index
+
+    cluster = PackedCluster.build(list(state.servers), state.D, list(state.alphas))
+    counts0 = counts_from_assignments(cluster, state.assignments)
+    counts1, moves = local_search_jax(cluster, counts0, max_iters=max_iters)
+
+    pool = collections.defaultdict(list)
+    for ws in state.assignments:
+        for w in ws:
+            pool[type_index(w)].append(w)
+    c = np.asarray(counts1).round().astype(int)
+    assignments = []
+    for s in range(len(state.servers)):
+        ws = []
+        for t in np.nonzero(c[s])[0]:
+            for _ in range(c[s, t]):
+                ws.append(pool[int(t)].pop())
+        assignments.append(ws)
+    refined = ClusterState(state.servers, state.D, state.alphas, assignments)
+    return refined, int(moves)

@@ -1,5 +1,12 @@
 """Online consolidation scheduler with criterion-1 queueing (paper §V, §VIII).
 
+NOTE: this module is the *numpy reference oracle* of the unified engine
+(DESIGN.md §8). Production traffic goes through
+``core.engine.ConsolidationEngine`` (whose jitted ``engine_jax.run_trace``
+backend is parity-tested against this implementation in
+tests/test_engine.py); the float64 event loop below is kept as the
+readable, trusted specification of the runtime semantics.
+
 The paper's operating model: workloads *arrive* one at a time; the greedy
 (Fig 8) places each on the best feasible server, or queues it "until a server
 to satisfy this criterion is found -- most probably upon completion of

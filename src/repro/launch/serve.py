@@ -21,7 +21,8 @@ import numpy as np
 
 from ..configs.base import MeshConfig, sharding_rules
 from ..configs.registry import get_config
-from ..core import FleetState, JobProfile, PodSpec, pack_jobs
+from ..core import TPU_V5E_HOST, ConsolidationEngine, Workload
+from ..core.units import KB, MB
 from ..distributed.serve_step import make_serve_steps
 from ..models import layers as model_layers
 from ..models.api import build_model
@@ -30,12 +31,24 @@ from .mesh import make_host_mesh
 
 
 def admission_check(arch: str, n_streams: int) -> list[int | None]:
-    """Place `n_streams` request streams on the pod fleet with the paper's greedy."""
-    job = JobProfile(name=f"serve:{arch}", flops=5e12, bytes_accessed=2e12,
-                     collective_bytes=1e11, hbm_bytes=4 * 2**30, chips=256)
-    fleet = FleetState.empty([PodSpec(name=f"pod{i}") for i in range(2)])
-    placements, _ = pack_jobs(fleet, [job] * n_streams)
-    return placements
+    """Admit `n_streams` request streams onto the serving hosts through the
+    unified ConsolidationEngine (the paper's online operating model, §V).
+
+    Each stream is characterized (§III.A) by its host-side I/O: KV-cache
+    paging working set as FS, per-decode-step activation traffic as RS. The
+    engine runs the arrive -> score -> place-or-queue loop; ``None`` means
+    the stream was not admitted on arrival and had to queue for capacity
+    (criterion 1).
+    """
+    engine = ConsolidationEngine([TPU_V5E_HOST, TPU_V5E_HOST])
+    stream = Workload(fs=64 * MB, rs=256 * KB, name=f"serve:{arch}")
+    try:
+        result = engine.run([(0.0, stream)] * n_streams)
+    except RuntimeError:
+        # deadlock (stream fits no empty host): admit nothing rather than
+        # crash the serving driver at startup
+        return [None] * n_streams
+    return [None if q else p for p, q in zip(result.placements, result.was_queued)]
 
 
 def main(argv=None):

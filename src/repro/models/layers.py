@@ -20,6 +20,32 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from .params import ParamInfo
 
+
+# resolved once at import: which shard_map the installed jax ships and
+# whether it speaks the current (axis_names/check_vma) signature
+_SM = getattr(jax, "shard_map", None)
+if _SM is None:
+    from jax.experimental.shard_map import shard_map as _SM
+import inspect as _inspect
+
+_SM_CURRENT_API = "check_vma" in _inspect.signature(_SM).parameters
+
+
+def _shard_map(body, *, mesh, in_specs, out_specs, axis_names):
+    """``jax.shard_map`` across jax versions.
+
+    ``jax.shard_map`` with ``axis_names``/``check_vma`` is a recent API; older
+    releases ship ``jax.experimental.shard_map.shard_map`` where the manual
+    axis set is expressed through its complement (``auto``) and replication
+    checking through ``check_rep``.
+    """
+    if _SM_CURRENT_API:
+        return _SM(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   axis_names=axis_names, check_vma=False)
+    auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _SM(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False, auto=auto)
+
 # --- activation-sharding context ------------------------------------------------
 
 _CTX: dict = {"mesh": None, "rules": None}
@@ -122,13 +148,12 @@ def sharded_embed(table: jax.Array, tokens: jax.Array, cfg) -> jax.Array:
 
     # table in_spec: vocab rows over 'model'; its dmodel dim may carry the
     # FSDP data axes -- gather it at the boundary (bf16, cheap vs the grads).
-    out = jax.shard_map(
+    out = _shard_map(
         body,
         mesh=mesh,
         in_specs=(PartitionSpec("model", None), PartitionSpec(batch_spec, None)),
         out_specs=PartitionSpec(batch_spec, None, None),
         axis_names={"model", *data_axes},
-        check_vma=False,
     )(table, tokens)
     return out.astype(dt)
 
@@ -296,7 +321,7 @@ def _seq_sharded_attention(q, k, v, *, causal, chunk, window, mesh):
 
     # k/v cross the boundary in f32 (replicated-input cotangents lower to
     # copy-combiner all-reduces that XLA:CPU aborts on in bf16; see MoE note).
-    return jax.shard_map(
+    return _shard_map(
         body,
         mesh=mesh,
         in_specs=(
@@ -306,7 +331,6 @@ def _seq_sharded_attention(q, k, v, *, causal, chunk, window, mesh):
         ),
         out_specs=PartitionSpec(None, "model", None, None, None),
         axis_names={"model"},
-        check_vma=False,
     )(q, k.astype(jnp.float32), v.astype(jnp.float32))
 
 
@@ -589,7 +613,7 @@ def _moe_expert_parallel(p: dict, x: jax.Array, cfg, group: str, mesh) -> jax.Ar
     manual = {"model", *data_axes}
     wi_spec = PartitionSpec("model", data_axes if fsdp else None, None, None)
     wo_spec = PartitionSpec("model", None, data_axes if fsdp else None)
-    return jax.shard_map(
+    return _shard_map(
         body,
         mesh=mesh,
         in_specs=(
@@ -600,7 +624,6 @@ def _moe_expert_parallel(p: dict, x: jax.Array, cfg, group: str, mesh) -> jax.Ar
         ),
         out_specs=PartitionSpec(batch_spec, None, None),
         axis_names=manual,
-        check_vma=False,
     )(x.astype(jnp.float32), p["router"], p["wi"], p["wo"])
 
 

@@ -56,7 +56,9 @@ def compressed_psum_mean(grads, axis_names: tuple[str, ...], method: str = "bf16
     """
     n = 1
     for a in axis_names:
-        n *= jax.lax.axis_size(a)
+        # jax.lax.axis_size is a recent addition; psum(1) is its portable form
+        size_of = getattr(jax.lax, "axis_size", None)
+        n *= size_of(a) if size_of is not None else jax.lax.psum(1, a)
 
     def one(g, e):
         p, aux, new_e = compress(g, method, e)

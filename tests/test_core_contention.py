@@ -2,8 +2,7 @@
 (Eqn 3) -- paper §IV, Figures 3-4 and 6."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (
     M1,

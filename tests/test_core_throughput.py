@@ -1,8 +1,7 @@
 """Single-workload throughput model (paper §III, Figures 1-2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core import M1, M2, Workload, solo_throughput, solo_throughput_grid
 from repro.core.throughput import level_of

@@ -1,8 +1,7 @@
 """HDFS-inspired chunk store + input pipeline."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core.workload import Workload, characterize, parse_workloads
 from repro.data import ChunkStore, FileMeta, TokenPipeline, synthetic_store

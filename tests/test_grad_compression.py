@@ -32,13 +32,14 @@ PROBE = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.optim.grad_utils import compressed_psum_mean
+    from repro.models.layers import _shard_map  # the one version-compat shim
     mesh = jax.make_mesh((8,), ("data",))
     grads = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
     def body(g):
         mean, _ = compressed_psum_mean(g, ("data",), method="bf16")
         return mean
-    f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=({"w": P("data", None)},),
-                              out_specs={"w": P("data", None)}, check_vma=False))
+    f = jax.jit(_shard_map(body, mesh=mesh, in_specs=({"w": P("data", None)},),
+                           out_specs={"w": P("data", None)}, axis_names={"data"}))
     out = np.asarray(f(grads)["w"])
     # psum-mean over shards of rows 0..7: every shard's row i -> mean over shards
     want = np.asarray(grads["w"], np.float32)
@@ -52,7 +53,9 @@ def test_compressed_psum_under_shard_map():
     env = dict(os.environ)
     env["PYTHONPATH"] = env.get("PYTHONPATH", "") + os.pathsep + os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))
-    env.pop("JAX_PLATFORMS", None)
+    # pin the subprocess to the host platform: the device-count forcing below
+    # only applies to CPU, and probing for a TPU runtime hangs in CI sandboxes
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run([sys.executable, "-c", PROBE], capture_output=True, text=True,
                        env=env, timeout=300)
     assert "COMPRESSED-PSUM OK" in r.stdout, r.stdout + r.stderr[-2000:]
