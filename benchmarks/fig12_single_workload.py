@@ -13,7 +13,8 @@ from repro.core.units import MB
 from repro.core.workload import FS_GRID, RS_GRID
 
 
-def run(emit):
+def run(emit, smoke: bool = False):
+    del smoke  # cheap: full grid in milliseconds
     t0 = time.perf_counter()
     n = 0
     for server in (M1, M2):

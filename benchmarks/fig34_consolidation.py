@@ -20,11 +20,11 @@ from repro.core.units import KB, MB
 from repro.core.workload import FS_GRID
 
 
-def run(emit):
+def run(emit, smoke: bool = False):
     fs_grid = [f for f in FS_GRID if f <= 8 * MB]
-    n_grid = list(range(1, 9))
+    n_grid = list(range(1, 6 if smoke else 9))
 
-    for rs in (64 * KB, 256 * KB):
+    for rs in (64 * KB,) if smoke else (64 * KB, 256 * KB):
         t0 = time.perf_counter()
         grid = corun_throughput_grid(M1, rs, fs_grid, n_grid)
         dt = (time.perf_counter() - t0) * 1e6 / grid.size

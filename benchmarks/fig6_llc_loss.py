@@ -10,7 +10,8 @@ from repro.core.units import KB, MB
 from repro.core.workload import RS_GRID
 
 
-def run(emit):
+def run(emit, smoke: bool = False):
+    del smoke  # cheap: 10 RS points per server
     for server in (M1, M2):
         t0 = time.perf_counter()
         rows = []

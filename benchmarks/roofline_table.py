@@ -12,7 +12,8 @@ from repro.launch.roofline import CellArtifact
 ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
 
 
-def run(emit):
+def run(emit, smoke: bool = False):
+    del smoke  # reads precomputed artifacts
     if not ARTIFACTS.exists():
         emit("roofline/missing", 0.0, "run `python -m repro.launch.dryrun --all` first")
         return

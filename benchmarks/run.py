@@ -1,20 +1,27 @@
 """Benchmark harness: one module per paper table/figure (DESIGN.md §7).
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig9] [--out-dir .]
+    PYTHONPATH=src python -m benchmarks.run [--only fig9] [--smoke] [--out-dir .]
 
 Output format: ``name,us_per_call,derived`` on stdout, plus one
-``BENCH_<suite>.json`` per suite (records ``{name, value, unit, meta}``) so
-the performance trajectory is tracked across PRs.
+``BENCH_<suite>.json`` per suite so the performance trajectory is tracked
+across PRs. Each file records ``{"suite", "meta": {"commit", "smoke"},
+"records": [{name, value, unit, meta}, ...]}`` -- the git commit stamps
+every suite so a regression can be bisected straight from the JSON, and
+``smoke`` marks reduced-size CI runs that must not be compared against full
+runs. ``--smoke`` is the PR-gate mode: every module shrinks its problem
+sizes enough to finish in CI while still exercising the full code path.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import pathlib
+import subprocess
 import sys
 import traceback
 
 from . import (
+    adaptive_regret,
     fig6_llc_loss,
     fig9_greedy_vs_optimal,
     fig12_single_workload,
@@ -31,18 +38,33 @@ MODULES = [
     ("table2", table2_greedy_example),
     ("fig9", fig9_greedy_vs_optimal),
     ("scale", scale_scheduler),
+    ("adaptive", adaptive_regret),
     ("roofline", roofline_table),
 ]
+
+
+def git_commit() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=pathlib.Path(__file__).resolve().parent,
+            capture_output=True, text=True, check=True,
+        ).stdout.strip()
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run benches whose tag contains this")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced problem sizes (the CI PR gate)")
     ap.add_argument("--out-dir", default=str(pathlib.Path(__file__).resolve().parents[1]),
                     help="directory for BENCH_<suite>.json records")
     args = ap.parse_args()
     out_dir = pathlib.Path(args.out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
+    meta = {"commit": git_commit(), "smoke": bool(args.smoke)}
 
     print("name,us_per_call,derived")
 
@@ -60,13 +82,15 @@ def main() -> None:
             continue
         records = []
         try:
-            mod.run(emit)
+            mod.run(emit, smoke=args.smoke)
         except Exception as e:  # noqa: BLE001 -- report and continue
             failures.append((tag, e))
             traceback.print_exc()
             emit(f"{tag}/ERROR", 0.0, repr(e)[:120])
         path = out_dir / f"BENCH_{tag}.json"
-        path.write_text(json.dumps(records, indent=2) + "\n")
+        path.write_text(
+            json.dumps({"suite": tag, "meta": meta, "records": records}, indent=2)
+            + "\n")
     if failures:
         raise SystemExit(f"{len(failures)} benchmark modules failed: {[t for t, _ in failures]}")
 

@@ -60,17 +60,19 @@ def _arrival_trace(n, seed=1, gap=2e-5, passes=8):
     return out
 
 
-def run(emit):
-    servers = [M1, M2] * (N_SERVERS // 2)
-    D = [profile_pairwise_fast(s) for s in servers[:2]] * (N_SERVERS // 2)
-    arrivals = _random_workloads(64)
+def run(emit, smoke: bool = False):
+    n_online = 64 if smoke else N_ARRIVALS_ONLINE
+    n_servers = 8 if smoke else N_SERVERS
+    servers = [M1, M2] * (n_servers // 2)
+    D = [profile_pairwise_fast(s) for s in servers[:2]] * (n_servers // 2)
+    arrivals = _random_workloads(32 if smoke else 64)
 
     # python greedy
     state = ClusterState.empty(servers, D, alpha=1.3)
     t0 = time.perf_counter()
     placements, queued = greedy_sequence(state, arrivals)
     py_us = (time.perf_counter() - t0) * 1e6 / len(arrivals)
-    emit("scale/greedy_python/16srv", py_us,
+    emit(f"scale/greedy_python/{n_servers}srv", py_us,
          f"placed={sum(p is not None for p in placements)};queued={len(queued)}")
 
     # beyond-paper: offline local-search refinement on top of the greedy
@@ -79,7 +81,7 @@ def run(emit):
     t0 = time.perf_counter()
     refined, n_moves = local_search(state, max_iters=20)
     ref_us = (time.perf_counter() - t0) * 1e6
-    emit("scale/greedy+local_search/16srv", ref_us,
+    emit(f"scale/greedy+local_search/{n_servers}srv", ref_us,
          f"moves={n_moves};load_before={state.total_avg_load():.3f};"
          f"load_after={refined.total_avg_load():.3f};descent=first-improvement",
          unit="us_total")
@@ -91,7 +93,7 @@ def run(emit):
     # NOTE: not like-for-like with the python row -- best-improvement takes a
     # different descent path to a different final objective; compare the
     # wall-time columns knowing the work differs.
-    emit("scale/greedy+local_search_jax/16srv", refe_us,
+    emit(f"scale/greedy+local_search_jax/{n_servers}srv", refe_us,
          f"moves={n_moves_e};load_after={refined_e.total_avg_load():.3f};"
          f"descent=best-improvement(not comparable to python row)",
          unit="us_total")
@@ -106,17 +108,17 @@ def run(emit):
     pj.block_until_ready()
     jx_us = (time.perf_counter() - t0) * 1e6 / len(arrivals)
     placed = int((np.asarray(pj) >= 0).sum())
-    emit("scale/greedy_jax/16srv", jx_us,
+    emit(f"scale/greedy_jax/{n_servers}srv", jx_us,
          f"placed={placed};speedup_vs_python={py_us / jx_us:.1f}x")
 
     # the online engine: full arrive/queue/complete/drain runtime, 256 arrivals
-    trace = _arrival_trace(N_ARRIVALS_ONLINE, gap=2e-5, passes=8)
+    trace = _arrival_trace(n_online, gap=2e-5, passes=8)
     engine = ConsolidationEngine(servers, D, alpha=1.3)
 
     t0 = time.perf_counter()
     res_py = engine.run(trace, backend="numpy")
     eng_py_us = (time.perf_counter() - t0) * 1e6 / len(trace)
-    emit("scale/engine_python/16srv", eng_py_us,
+    emit(f"scale/engine_python/{n_servers}srv", eng_py_us,
          f"makespan={res_py.makespan:.4f};queued={sum(res_py.was_queued)};"
          f"maxdeg={res_py.max_observed_degradation:.3f}")
 
@@ -125,6 +127,6 @@ def run(emit):
     res_jx = engine.run(trace, backend="jax")
     eng_jx_us = (time.perf_counter() - t0) * 1e6 / len(trace)
     same = res_py.placements == res_jx.placements
-    emit("scale/engine_jax/16srv", eng_jx_us,
+    emit(f"scale/engine_jax/{n_servers}srv", eng_jx_us,
          f"makespan={res_jx.makespan:.4f};placements_match={same};"
          f"speedup_vs_python={eng_py_us / eng_jx_us:.1f}x")

@@ -7,7 +7,8 @@ from __future__ import annotations
 import time
 
 
-def run(emit):
+def run(emit, smoke: bool = False):
+    del smoke  # arithmetic only
     t0 = time.perf_counter()
     # The table's numbers, verbatim.
     before = {"A": (30.0, 40.0), "B": (40.0, 45.0)}

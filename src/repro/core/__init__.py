@@ -8,6 +8,8 @@ Public API (stable):
   predict_tdp_hit, profile_pairwise*, predict_degradations  -- Eqns 1-3
   check_consolidation, DEGRADATION_LIMIT       -- §V criteria (Eqns 4-5)
   ConsolidationEngine, EngineResult            -- THE unified online runtime
+  AdaptiveEngine, AdaptiveResult               -- closed observe/estimate/schedule
+                                                  loop (repro.telemetry)
   score_candidates, make_scorer                -- shared Q x m scoring iface
   PackedDynamics, run_trace, corun_rates       -- device engine internals
   PackedCluster, greedy_sequence_jax, brute_force_jax, score_candidates_jnp
@@ -65,7 +67,14 @@ from .contention import (
     tdp_lhs_naive,
 )
 from .criteria import DEGRADATION_LIMIT, AdmissionCheck, check_consolidation
-from .engine import ConsolidationEngine, EngineResult, make_scorer, score_candidates
+from .engine import (
+    AdaptiveEngine,
+    AdaptiveResult,
+    ConsolidationEngine,
+    EngineResult,
+    make_scorer,
+    score_candidates,
+)
 from .engine_jax import PackedDynamics, corun_rates, local_search_jax, run_trace
 from .scheduler import OnlineScheduler, ScheduleResult
 from .server import M1, M2, PAPER_CLUSTER, TPU_V5E_HOST, TPU_V5E_POD256, ServerSpec

@@ -18,6 +18,7 @@ from __future__ import annotations
 import numpy as np
 
 from .binpack import ClusterState, average_min_throughput_simulated, greedy_sequence
+from .criteria import DEGRADATION_LIMIT
 from .server import ServerSpec
 from .simulator import simulate_corun
 from .units import KB, MB
@@ -25,9 +26,15 @@ from .workload import Workload
 
 
 def observed_tdp_bytes(
-    server: ServerSpec, rs: float, fs: float, max_n: int = 12, threshold: float = 0.5
+    server: ServerSpec,
+    rs: float,
+    fs: float,
+    max_n: int = 12,
+    threshold: float = DEGRADATION_LIMIT,
 ) -> float | None:
-    """Competing-byte total at the first N whose degradation exceeds 50%."""
+    """Competing-byte total at the first N whose degradation exceeds the §V
+    limit (``criteria.DEGRADATION_LIMIT`` -- the one source of truth for the
+    50% threshold)."""
     if fs > server.llc_bytes:
         return None  # not LLC-resident: no TDP exists (Eqn 2's CS set)
     for n in range(2, max_n + 1):

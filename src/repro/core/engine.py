@@ -27,13 +27,18 @@ Candidate scoring is a *separate* axis: all runtime backends consume the same
   scorer='numpy'   ``kernels.ref.consolidation_scores_ref`` -- host-side
                    float64 reference for contract tests (not jit-able).
 
+``AdaptiveEngine`` closes the observe -> estimate -> schedule loop on top of
+this: it feeds telemetry-enabled runs into streaming D-estimators
+(``repro.telemetry``) and places each trace segment from the *estimated*
+dynamics while the simulator stays ground truth (DESIGN.md §9).
+
 See DESIGN.md §8 for the backend matrix and the architecture notes.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Literal, Sequence
+from typing import TYPE_CHECKING, Callable, Literal, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -41,11 +46,16 @@ import numpy as np
 
 from .binpack import ClusterState, greedy_place
 from .binpack_jax import PackedCluster, score_candidates_jnp
-from .contention import profile_pairwise_fast
+from .contention import profile_pairwise_fast, type_tables
 from .engine_jax import QUEUED, PackedDynamics, Scorer, run_trace
 from .scheduler import OnlineScheduler
 from .server import ServerSpec
-from .workload import Workload, type_index
+from .workload import FS_GRID, RS_GRID, Workload, type_index
+from ..telemetry.estimator import ScatterName, StreamingEstimator
+from ..telemetry.log import ObservationLog, observations_from_trace
+
+if TYPE_CHECKING:
+    from ..telemetry.drift import DriftSchedule
 
 Backend = Literal["auto", "jax", "numpy"]
 ScorerName = Literal["jnp", "pallas", "numpy"]
@@ -108,6 +118,7 @@ class EngineResult:
     makespan: float
     max_observed_degradation: float
     backend: str
+    observations: ObservationLog | None = None  # filled when run(telemetry=True)
 
     @property
     def queued_indices(self) -> tuple[int, ...]:
@@ -162,7 +173,11 @@ class ConsolidationEngine:
 
     # -- public API -------------------------------------------------------
     def run(
-        self, arrivals: Sequence[tuple[float, Workload]], backend: Backend | None = None
+        self,
+        arrivals: Sequence[tuple[float, Workload]],
+        backend: Backend | None = None,
+        *,
+        telemetry: bool = False,
     ) -> EngineResult:
         """Simulate arrivals [(time, workload)] to completion of all work.
 
@@ -170,20 +185,31 @@ class ConsolidationEngine:
         snaps every candidate for its D-matrix lookup); ``data_total`` is
         honoured per arrival. Raises ``RuntimeError`` on deadlock (a queued
         workload no *empty* server can take), like the oracle.
+
+        ``telemetry=True`` attaches the completion-observation log
+        (``repro.telemetry.ObservationLog``) to the result -- the input of
+        the streaming D-estimator. Telemetry is emitted by the device
+        engine's event loop, so it requires (and, under 'auto', selects) the
+        jax backend.
         """
-        if not arrivals:
-            return EngineResult((), (), (), (), 0.0, 0.0, "empty")
         backend = backend or self.backend
         if backend == "auto":
-            backend = "jax" if len(arrivals) >= AUTO_JAX_THRESHOLD else "numpy"
+            backend = "jax" if telemetry or len(arrivals) >= AUTO_JAX_THRESHOLD else "numpy"
+        if backend not in ("jax", "numpy"):
+            raise ValueError(f"unknown engine backend {backend!r}")
+        if telemetry and backend != "jax":
+            raise ValueError("telemetry requires the jax engine backend")
+        if not arrivals:
+            obs = ObservationLog.empty(self.cluster.T) if telemetry else None
+            return EngineResult((), (), (), (), 0.0, 0.0, backend, obs)
         if backend == "jax":
-            return self._run_jax(arrivals)
-        if backend == "numpy":
-            return self._run_oracle(arrivals)
-        raise ValueError(f"unknown engine backend {backend!r}")
+            return self._run_jax(arrivals, telemetry=telemetry)
+        return self._run_oracle(arrivals)
 
     # -- device backend ---------------------------------------------------
-    def _run_jax(self, arrivals: Sequence[tuple[float, Workload]]) -> EngineResult:
+    def _run_jax(
+        self, arrivals: Sequence[tuple[float, Workload]], telemetry: bool = False
+    ) -> EngineResult:
         n = len(arrivals)
         times = np.asarray([t for t, _ in arrivals], np.float64)
         order = np.argsort(times, kind="stable")
@@ -200,9 +226,12 @@ class ConsolidationEngine:
         scorer = None if self.scorer == "jnp" else make_scorer(self.scorer)
         trace = run_trace(
             self.cluster, self.dyn, arr_time, arr_type, arr_bytes,
-            objective=self.objective, scorer=scorer)
+            objective=self.objective, scorer=scorer, telemetry=telemetry)
         if bool(trace.deadlock):
             raise RuntimeError("deadlock: queued workloads fit no empty server")
+        # observation records are per-run; the trace's arrival-sorted order is
+        # as good as submission order, so no inverse permutation is needed
+        obs = observations_from_trace(trace, arr_type, arr_bytes) if telemetry else None
 
         inv = np.empty(n, np.int64)
         inv[order] = np.arange(n)
@@ -220,6 +249,7 @@ class ConsolidationEngine:
             makespan=float(trace.makespan) + t0,
             max_observed_degradation=float(trace.max_deg),
             backend="jax",
+            observations=obs,
         )
 
     # -- reference oracle -------------------------------------------------
@@ -258,3 +288,162 @@ class ConsolidationEngine:
             max_observed_degradation=float(result.max_observed_degradation),
             backend="numpy",
         )
+
+
+# --- the closed observe -> estimate -> schedule loop ----------------------------
+
+#: the paper's profiling grid size (10 RS x 23 FS)
+GRID_T = len(RS_GRID) * len(FS_GRID)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveResult:
+    """Outcome of one :meth:`AdaptiveEngine.run`: per-segment engine results."""
+
+    segments: tuple[EngineResult, ...]
+    n_obs: tuple[int, ...]  # observations consumed by the estimators per segment
+    t_starts: tuple[float, ...]  # first arrival time per segment
+
+    @property
+    def makespans(self) -> tuple[float, ...]:
+        """Absolute completion time per segment (the engine's makespan)."""
+        return tuple(r.makespan for r in self.segments)
+
+    @property
+    def durations(self) -> tuple[float, ...]:
+        """First-arrival -> last-completion span per segment: the quantity
+        comparable across segments (and against an oracle run of the same
+        chunk), independent of where the chunk sits on the trace clock."""
+        return tuple(r.makespan - t0 for r, t0 in zip(self.segments, self.t_starts))
+
+    @property
+    def total_obs(self) -> int:
+        return int(sum(self.n_obs))
+
+
+class AdaptiveEngine:
+    """The closed-loop front-end: place from *estimated* dynamics, observe the
+    (simulated) world, refresh the estimate, repeat.
+
+    This is the first subsystem where the scheduler's model and the world can
+    disagree. A :class:`ConsolidationEngine` consumes its D-matrix as frozen
+    ground truth; here the D each placement consults comes from a per-server
+    :class:`~repro.telemetry.StreamingEstimator` fed purely by completion
+    observations, while the device engine's ``PackedDynamics`` (built from
+    the *true* server specs, which a :class:`~repro.telemetry.DriftSchedule`
+    may change under the scheduler) remains the ground truth that generates
+    those observations.
+
+    ``run`` splits the arrival trace into contiguous segments and alternates:
+    run one segment to completion with the current estimate -> fold its
+    observation log into the estimators -> rebuild D for the next segment.
+    Each segment starts from an empty cluster, so segment makespans are
+    directly comparable against a true-D oracle run under the same protocol
+    (``benchmarks/adaptive_regret.py`` measures exactly that regret).
+
+    Estimators are per server (never pooled across same-spec servers): under
+    drift, two nominally identical servers stop being identical, and pooling
+    would average incompatible worlds. Pooling for faster warm-up on healthy
+    fleets is an open item (ROADMAP).
+    """
+
+    def __init__(
+        self,
+        servers: Sequence[ServerSpec],
+        prior: float | str | np.ndarray | Sequence[np.ndarray] = 0.0,
+        alpha: float | Sequence[float] = 1.3,
+        objective: str = "sum_avg",
+        scorer: ScorerName = "jnp",
+        drift: "DriftSchedule | None" = None,
+        lr: float = 0.6,
+        decay: float = 1.0,
+        confidence_floor: float = 2.0,
+        max_lost_frac: float = 0.5,
+        scatter: ScatterName = "auto",
+    ):
+        """``prior`` selects what the scheduler believes before any telemetry:
+        a scalar is a uniform D prior (0.0 = optimistic "no interference" --
+        the fleet consolidates aggressively and learns the cost), 'profiled'
+        seeds each estimator with the offline pairwise pass on the *initial*
+        spec (stale once drift hits), and an array (or one per server) is an
+        explicit prior. Solo base rates always start from the cheap per-type
+        solo profile of the initial spec -- it is the 52 900-pair matrix, not
+        the 230-run solo pass, that telemetry amortizes away."""
+        self.servers = tuple(servers)
+        self.alpha = alpha
+        self.objective = objective
+        self.scorer = scorer
+        self.drift = drift
+
+        priors: list[np.ndarray | float]
+        if isinstance(prior, str):
+            if prior != "profiled":
+                raise ValueError(f"unknown prior {prior!r}")
+            cache: dict[ServerSpec, np.ndarray] = {}
+            for s in self.servers:
+                if s not in cache:
+                    cache[s] = profile_pairwise_fast(s)
+            priors = [cache[s] for s in self.servers]
+        elif isinstance(prior, (int, float)):
+            priors = [float(prior)] * len(self.servers)
+        elif isinstance(prior, np.ndarray):
+            priors = [prior] * len(self.servers)
+        else:
+            priors = list(prior)
+
+        self.estimators = [
+            StreamingEstimator(
+                T=GRID_T,
+                prior_D=priors[i],
+                prior_solo=type_tables(s)["solo"],
+                lr=lr,
+                decay=decay,
+                confidence_floor=confidence_floor,
+                max_lost_frac=max_lost_frac,
+                scatter=scatter,
+            )
+            for i, s in enumerate(self.servers)
+        ]
+
+    # -- estimates --------------------------------------------------------
+    def current_D(self) -> list[np.ndarray]:
+        """The per-server D-matrices the next segment's placements will use."""
+        return [est.estimate_D() for est in self.estimators]
+
+    def engine_for_segment(self, segment: int) -> ConsolidationEngine:
+        """A ConsolidationEngine scoring with estimates over the true world."""
+        specs = (self.drift.specs_at(self.servers, segment)
+                 if self.drift is not None else self.servers)
+        return ConsolidationEngine(
+            list(specs), D=self.current_D(), alpha=self.alpha,
+            objective=self.objective, backend="jax", scorer=self.scorer)
+
+    # -- the loop ---------------------------------------------------------
+    def run(
+        self,
+        arrivals: Sequence[tuple[float, Workload]],
+        segments: int = 8,
+        on_segment: Callable[[int, EngineResult, "AdaptiveEngine"], None] | None = None,
+    ) -> AdaptiveResult:
+        """Alternate ``segments`` trace chunks with estimator refreshes.
+
+        ``on_segment(k, result, self)`` fires after each segment's
+        observations have been folded in -- benchmarks use it to snapshot
+        estimation error and regret as observation volume grows.
+        """
+        ordered = sorted(arrivals, key=lambda tw: tw[0])
+        bounds = np.linspace(0, len(ordered), segments + 1).astype(int)
+        results, n_obs, t_starts = [], [], []
+        for k in range(segments):
+            chunk = ordered[bounds[k]:bounds[k + 1]]
+            engine = self.engine_for_segment(k)
+            res = engine.run(chunk, telemetry=True)
+            used = 0
+            for s, est in enumerate(self.estimators):
+                used += est.update(res.observations.for_server(s))
+            results.append(res)
+            n_obs.append(used)
+            t_starts.append(chunk[0][0] if chunk else 0.0)
+            if on_segment is not None:
+                on_segment(k, res, self)
+        return AdaptiveResult(tuple(results), tuple(n_obs), tuple(t_starts))

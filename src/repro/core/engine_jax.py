@@ -141,6 +141,9 @@ class EngineState(NamedTuple):
     max_deg: jax.Array  # f32 scalar max *observed* (simulated) degradation
     draining: jax.Array  # bool -- queue re-check pending
     deadlock: jax.Array  # bool -- queued work that no empty server can take
+    obs_co: jax.Array  # f32[n, T] time-integrated co-resident type counts
+    obs_lost: jax.Array  # f32[n] time spent past the physical TDP
+    obs_logr: jax.Array  # f32[n] time-integrated log instantaneous rate
 
 
 class EngineTrace(NamedTuple):
@@ -153,6 +156,9 @@ class EngineTrace(NamedTuple):
     makespan: jax.Array  # f32
     max_deg: jax.Array  # f32
     deadlock: jax.Array  # bool
+    obs_co: jax.Array  # f32[n, T] (zeros unless telemetry=True)
+    obs_lost: jax.Array  # f32[n] (zeros unless telemetry=True)
+    obs_logr: jax.Array  # f32[n] (zeros unless telemetry=True)
 
 
 def corun_rates(
@@ -181,7 +187,7 @@ def _slot_rates(dyn, ldiag_keep, ldiag_lost, overflow, colog_keep, colog_lost, s
     return jnp.take_along_axis(base, t, axis=1) * jnp.exp(logslow)  # [m, K]
 
 
-@partial(jax.jit, static_argnames=("objective", "scorer", "n_steps"))
+@partial(jax.jit, static_argnames=("objective", "scorer", "n_steps", "telemetry"))
 def run_trace(
     cluster: PackedCluster,
     dyn: PackedDynamics,
@@ -192,6 +198,7 @@ def run_trace(
     objective: str = "sum_avg",
     scorer: Scorer | None = None,
     n_steps: int | None = None,
+    telemetry: bool = False,
 ) -> EngineTrace:
     """Run one arrival trace to completion entirely on device.
 
@@ -209,6 +216,15 @@ def run_trace(
     scoring contract (O(Q m T) with no counts @ D re-reduction); passing an
     explicit backend (e.g. the Pallas kernel via ``engine.make_scorer``)
     routes every candidate batch through it instead.
+
+    ``telemetry=True`` additionally emits the fixed-shape observation log the
+    streaming D-estimator consumes (``repro.telemetry``): per arrival, the
+    time-integrated co-resident type counts over its run (``obs_co`` [n, T],
+    excluding the workload itself) and the time it spent while its server was
+    past the physical TDP (``obs_lost`` [n]). Both integrate between
+    micro-events, so partial co-residency overlaps are weighted exactly by
+    their duration. Off by default: the accumulation adds an O(m K T) scatter
+    per time-advancing event, and the static flag compiles it out entirely.
     """
     n = int(arr_time.shape[0])
     m, K = cluster.m, n
@@ -246,6 +262,9 @@ def run_trace(
         max_deg=jnp.float32(0.0),
         draining=jnp.asarray(False),
         deadlock=jnp.asarray(False),
+        obs_co=jnp.zeros((n, cluster.T), jnp.float32),
+        obs_lost=jnp.zeros((n,), jnp.float32),
+        obs_logr=jnp.zeros((n,), jnp.float32),
     )
 
     def score_fast(st, wtypes):
@@ -340,7 +359,27 @@ def run_trace(
     def advance(st, rates, dt):
         active = st.slot_type >= 0
         rem = jnp.where(active, jnp.maximum(st.slot_rem - rates * dt, 0.0), st.slot_rem)
-        return st._replace(slot_rem=rem)
+        st = st._replace(slot_rem=rem)
+        if telemetry:
+            # integrate each running workload's co-resident counts, TDP
+            # exposure, and log instantaneous rate over [now, now + dt);
+            # inactive slots scatter to index n and are dropped. The log-rate
+            # integral is what a fleet gets from sampling its throughput
+            # counters: time-averaging log(rate) keeps the estimator's
+            # log-linear model exact across within-run co-residency changes
+            # (a plain bytes/duration rate mixes regimes arithmetically).
+            idx = jnp.where(active, st.slot_arr, n).reshape(-1)  # [m K]
+            own = jax.nn.one_hot(jnp.clip(st.slot_type, 0), T, dtype=st.counts.dtype)
+            co = jnp.maximum(st.counts[:, None, :] - own, 0.0)  # [m, K, T]
+            overflow = st.comp > dyn.tol_budget  # [m]
+            logr = jnp.log(jnp.where(active, rates, 1.0))
+            st = st._replace(
+                obs_co=st.obs_co.at[idx].add(dt * co.reshape(-1, T)),
+                obs_lost=st.obs_lost.at[idx].add(
+                    dt * jnp.broadcast_to(overflow[:, None], (m, K)).reshape(-1)),
+                obs_logr=st.obs_logr.at[idx].add(dt * logr.reshape(-1)),
+            )
+        return st
 
     W = min(8, n)  # drain fast-path window (first W queued candidates)
 
@@ -444,7 +483,8 @@ def run_trace(
 
     st, _ = jax.lax.while_loop(cond, body, (st0, jnp.int32(0)))
     return EngineTrace(st.placement, st.was_queued, st.place_time, st.finish_time,
-                       st.makespan, st.max_deg, st.deadlock)
+                       st.makespan, st.max_deg, st.deadlock, st.obs_co, st.obs_lost,
+                       st.obs_logr)
 
 
 # --- array-native local search (core/refine.py's device backend) ----------------

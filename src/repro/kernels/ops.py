@@ -18,6 +18,7 @@ from .consolidation import consolidation_scores
 from .flash_attention import flash_attention
 from .mamba_scan import mamba_scan
 from .rwkv6_scan import rwkv6_scan
+from .telemetry import pair_scatter
 
 
 def _mode_kwargs(mode: str) -> dict:
@@ -88,3 +89,7 @@ def greedy_scores(
     return consolidation_scores(
         counts, D, rs, fs_resident, llc_budget, wtypes, **_mode_kwargs(mode)
     )
+
+
+def telemetry_pair_scatter(types, cbar, vals, *, mode: str = "interpret"):
+    return pair_scatter(types, cbar, vals, **_mode_kwargs(mode))

@@ -58,6 +58,29 @@ def mamba_ref(da, dbu, c):
     return jnp.stack(ys, axis=1), h
 
 
+def pair_scatter_ref(types, cbar, vals):
+    """Pair-statistic scatter accumulation (telemetry estimator), float64.
+
+    types i32[B]; cbar [B, T]; vals [B]. Returns (pair [T, T], base [T]) with
+      pair[u, t] = sum_b cbar[b, u] * vals[b] * 1{types[b] == t}
+      base[t]    = sum_b            vals[b] * 1{types[b] == t}.
+    Out-of-range types (padding) contribute nothing.
+    """
+    cbar = np.asarray(cbar, np.float64)
+    vals = np.asarray(vals, np.float64)
+    types = np.asarray(types)
+    B, T = cbar.shape
+    pair = np.zeros((T, T))
+    base = np.zeros(T)
+    for b in range(B):
+        t = int(types[b])
+        if not 0 <= t < T:
+            continue
+        pair[:, t] += cbar[b] * vals[b]
+        base[t] += vals[b]
+    return pair, base
+
+
 def consolidation_scores_ref(counts, D, rs, fs, llc_budget, resident, wtypes):
     """Greedy candidate scoring (the paper's Fig-8 inner loop), per candidate.
 

@@ -1,0 +1,101 @@
+"""Batched pair-statistic scatter-accumulation as a Pallas TPU kernel.
+
+The telemetry estimator (``repro.telemetry.estimator``) reduces every batch
+of completion observations to per-pair sufficient statistics: for a batch of
+B observations -- target grid type ``t_b``, co-resident exposure row
+``cbar_b`` [T], and a scalar statistic ``v_b`` (a normalized residual, a
+confidence weight, ...) -- it needs
+
+  pair[u, t] = sum_b cbar_b[u] * v_b * 1{t_b == t}        [T, T]
+  base[t]    = sum_b          v_b * 1{t_b == t}           [T]
+
+i.e. a scatter over the *target-type column* with the co-resident row as the
+update. At fleet scale this runs once per trace segment over thousands of
+observations with T = 230, so the batch is streamed through the MXU as a
+[T, Bb] x [Bb, T] contraction per block instead of a python-level scatter:
+the one-hot column selector turns the scatter into a matmul, and the [T, T]
+output block stays resident in VMEM across the whole batch (the grid walks
+the batch axis only, revisiting the same output tile).
+
+Validated against the float64 numpy reference ``kernels.ref.pair_scatter_ref``
+in tests/test_kernels.py. Out-of-range types (e.g. the -1 padding the wrapper
+adds to fill the last block) select no column and contribute nothing, exactly
+like the reference's explicit skip.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pair_scatter_kernel(types_ref, cbar_ref, vals_ref, pair_ref, base_ref):
+    b = pl.program_id(0)
+
+    types = types_ref[:, 0]  # [Bb] i32
+    vals = vals_ref[:, 0].astype(jnp.float32)  # [Bb]
+    cbar = cbar_ref[...].astype(jnp.float32)  # [Bb, T]
+    Bb, T = cbar.shape
+
+    # one-hot target-type selector; padding types (< 0 or >= T) select nothing
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, (Bb, T), 1) == types[:, None]
+    ).astype(jnp.float32)
+    sel = onehot * vals[:, None]  # [Bb, T]
+
+    @pl.when(b == 0)
+    def _init():
+        pair_ref[...] = jnp.zeros_like(pair_ref)
+        base_ref[...] = jnp.zeros_like(base_ref)
+
+    # cbar^T @ sel: contract the batch axis on the MXU -> [T, T] column scatter
+    pair_ref[...] += jax.lax.dot_general(
+        cbar, sel, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    base_ref[...] += jnp.sum(sel, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def pair_scatter(
+    types: jax.Array,  # i32[B] target grid type per observation
+    cbar: jax.Array,  # f32[B, T] co-resident exposure rows
+    vals: jax.Array,  # f32[B] scalar statistic per observation
+    *,
+    block_b: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """(pair [T, T], base [T]) sufficient statistics for one observation batch."""
+    B, T = cbar.shape
+    if B == 0:  # match the jnp/numpy backends of the contract
+        return jnp.zeros((T, T), jnp.float32), jnp.zeros((T,), jnp.float32)
+    Bb = min(block_b, B)
+    pad = (-B) % Bb
+    if pad:
+        # padded rows carry type -1: the one-hot selector drops them
+        types = jnp.concatenate([types, jnp.full((pad,), -1, types.dtype)])
+        cbar = jnp.concatenate([cbar, jnp.zeros((pad, T), cbar.dtype)])
+        vals = jnp.concatenate([vals, jnp.zeros((pad,), vals.dtype)])
+    nb = (B + pad) // Bb
+
+    pair, base = pl.pallas_call(
+        _pair_scatter_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((Bb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((Bb, T), lambda i: (i, 0)),
+            pl.BlockSpec((Bb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((T, T), lambda i: (0, 0)),
+            pl.BlockSpec((1, T), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, T), jnp.float32),
+            jax.ShapeDtypeStruct((1, T), jnp.float32),
+        ],
+        interpret=interpret,
+    )(types.reshape(-1, 1).astype(jnp.int32),
+      cbar.astype(jnp.float32),
+      vals.reshape(-1, 1).astype(jnp.float32))
+    return pair, base[0]

@@ -1,0 +1,53 @@
+"""Telemetry & online D-matrix estimation: the observe -> estimate -> schedule loop.
+
+The paper's scheduler stands on a 52 900-pair offline profiling pass; this
+package replaces that frozen ground truth with a closed loop a production
+fleet can actually run:
+
+  observe   ``engine_jax.run_trace(..., telemetry=True)`` emits a fixed-shape
+            device-resident observation log; ``log.observations_from_trace``
+            lifts it to per-completion records (type, co-residency, rate).
+  estimate  ``estimator.StreamingEstimator`` recovers per-type base rates and
+            the pairwise D-matrix in log-slowdown space, with per-pair
+            confidence counts and prior fallback; the batched pair-statistic
+            scatter is a Pallas kernel (``kernels.telemetry``).
+  schedule  ``core.engine.AdaptiveEngine`` alternates trace segments with
+            estimator refreshes, placing from *estimated* dynamics while the
+            simulator stays ground truth.
+  drift     ``drift`` builds the non-stationary worlds (perturbed, decaying,
+            degraded servers) the loop must track.
+
+Benchmarked end to end by ``benchmarks/adaptive_regret.py`` (makespan regret
+vs the true-D oracle as observations accumulate). See DESIGN.md §9.
+"""
+from .drift import (
+    DriftEvent,
+    DriftSchedule,
+    congest_server,
+    congestion_at,
+    decayed_spec,
+    degradation_at,
+    degrade_server,
+    gradual_decay,
+    perturb_spec,
+    scale_perf,
+)
+from .estimator import StreamingEstimator, make_scatter
+from .log import ObservationLog, observations_from_trace
+
+__all__ = [
+    "DriftEvent",
+    "DriftSchedule",
+    "ObservationLog",
+    "StreamingEstimator",
+    "congest_server",
+    "congestion_at",
+    "decayed_spec",
+    "degradation_at",
+    "degrade_server",
+    "gradual_decay",
+    "make_scatter",
+    "observations_from_trace",
+    "perturb_spec",
+    "scale_perf",
+]

@@ -1,0 +1,224 @@
+"""Streaming recovery of the scheduler's empirical foundation from telemetry.
+
+The paper fits its additive degradation model (Eqn 3) from a 52 900-pair
+offline profiling pass; no production fleet has that, and interference
+profiles drift with co-tenancy and hardware wear. This module recovers the
+same quantities *online*, from the completion observations of
+``telemetry.log``:
+
+  per-type base throughput  b_t        (the solo curves of Fig 1-2)
+  pairwise degradation      D[u, t]    (the profiled matrix of §IV.B)
+
+Estimation happens in **log-slowdown space**, where the ground truth is
+linear: pairwise slowdowns compose multiplicatively, so a type-t run whose
+time-averaged co-resident counts were ``cbar`` satisfies (keep-cache regime)
+
+  y  :=  log(rate)  =  log b_t  +  sum_u cbar_u * L[u, t],      L = log(1 - d)
+
+-- a linear model in (log b_t, L[:, t]). Co-run observations determine only
+the *sum* ``log b_t + cbar @ L[:, t]`` (base rate and pair effects trade off
+along an unidentifiable direction), so updates are decoupled along
+identifiability lines: solo runs -- the only unbiased base signal -- update
+``log_b``; co-run residuals against the freshly updated base take one
+damped, exposure-weighted least-squares step on ``L`` alone (a
+batch-normalized LMS update whose step size is invariant to batch
+composition). Per-pair confidence counts accumulate alongside; below a
+confidence floor the estimate falls back to a prior (profiled, or a
+uniform/optimistic constant), and an EWMA ``decay`` on the confidence lets
+fresh evidence overturn stale estimates after a drift.
+
+The batched pair-statistic scatter-accumulation -- the only O(B T) hot loop
+-- is the shared contract implemented by the Pallas kernel
+(``kernels.telemetry.pair_scatter``, MXU one-hot contraction), a jnp
+fallback, and the float64 numpy reference (``kernels.ref.pair_scatter_ref``).
+
+Known model limits (documented, by design -- the estimator's model and the
+simulated world *can* disagree): observations that straddle the TDP mix the
+keep/lost base rates, and time-varying co-residency makes log-of-mean differ
+from mean-of-log. Both appear as residual noise; ``max_lost_frac`` filters
+the worst of the former.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Literal
+
+import numpy as np
+
+from .log import ObservationLog
+
+ScatterName = Literal["auto", "jnp", "pallas", "numpy"]
+
+#: scatter contract: (types i32[B], cbar f[B, T], vals f[B]) ->
+#: (pair [T, T], base [T]) with pair[u, t] = sum_b cbar[b, u] vals[b] 1{t_b = t}
+Scatter = Callable[[np.ndarray, np.ndarray, np.ndarray], tuple[np.ndarray, np.ndarray]]
+
+
+def make_scatter(backend: ScatterName = "auto") -> Scatter:
+    """Resolve a pair-statistic scatter backend to the shared contract."""
+    if backend == "auto":
+        import jax
+
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "numpy":
+        from ..kernels.ref import pair_scatter_ref
+
+        return pair_scatter_ref
+    if backend == "jnp":
+        import jax.numpy as jnp
+
+        def scatter_jnp(types, cbar, vals):
+            T = cbar.shape[1]
+            onehot = (jnp.arange(T)[None, :] == jnp.asarray(types)[:, None])
+            sel = onehot.astype(jnp.float32) * jnp.asarray(vals, jnp.float32)[:, None]
+            pair = jnp.asarray(cbar, jnp.float32).T @ sel
+            return np.asarray(pair, np.float64), np.asarray(sel.sum(0), np.float64)
+
+        return scatter_jnp
+    if backend == "pallas":
+        import jax
+
+        from ..kernels.telemetry import pair_scatter
+
+        interpret = jax.default_backend() != "tpu"
+
+        def scatter_pallas(types, cbar, vals):
+            pair, base = pair_scatter(
+                np.asarray(types, np.int32), np.asarray(cbar, np.float32),
+                np.asarray(vals, np.float32), interpret=interpret)
+            return np.asarray(pair, np.float64), np.asarray(base, np.float64)
+
+        return scatter_pallas
+    raise ValueError(f"unknown scatter backend {backend!r}")
+
+
+@dataclasses.dataclass
+class StreamingEstimator:
+    """Online (base-rate, D-matrix) estimator for one server.
+
+    Parameters
+    ----------
+    T : grid size (230 for the paper's 10 x 23 grid).
+    prior_D : profiled D matrix [T, T], or a scalar uniform prior (0.0 = the
+        optimistic "no interference" prior that makes the un-observed
+        scheduler consolidate aggressively and *learn* the cost).
+    prior_solo : per-type solo throughput prior [T] (bytes/s). Solo profiling
+        is the cheap 230-run pass -- it is the 52 900-pair matrix that this
+        estimator amortizes away -- but the base rate still adapts online
+        (from solo runs), so a drifting/degraded server is tracked even with
+        a stale prior. ``None`` starts from 1 byte/s and learns the base
+        from solo observations alone.
+    lr : damping of each batch's exposure-weighted least-squares step (0, 1].
+    decay : EWMA forgetting applied to the confidence counts per update
+        batch; < 1 lets the estimator re-converge after drift.
+    confidence_floor : per-pair exposure below which ``estimate_D`` blends
+        toward the prior (linearly in accumulated exposure).
+    max_lost_frac : observations that spent more than this fraction of their
+        run past the physical TDP are excluded (they mix base-rate regimes).
+    scatter : pair-statistic backend ('auto' picks pallas on TPU, jnp else).
+    """
+
+    T: int
+    prior_D: float | np.ndarray = 0.0
+    prior_solo: np.ndarray | None = None
+    lr: float = 0.5
+    decay: float = 1.0
+    confidence_floor: float = 4.0
+    max_lost_frac: float = 0.5
+    scatter: ScatterName = "auto"
+    #: exposure added to the step denominator: damps updates from batches
+    #: whose total exposure to a pair is far below one full co-run
+    step_damp: float = 0.5
+    #: co-resident exposure below which a run counts as a *solo* observation
+    solo_eps: float = 0.05
+
+    def __post_init__(self):
+        prior = self.prior_D
+        if np.isscalar(prior):
+            prior = np.full((self.T, self.T), float(prior))
+        prior = np.clip(np.asarray(prior, np.float64), 0.0, 1.0 - 1e-9)
+        self._L_prior = np.log1p(-prior)  # log(1 - d) prior
+        if self.prior_solo is None:
+            self._logb_prior = np.zeros(self.T)
+        else:
+            self._logb_prior = np.log(np.asarray(self.prior_solo, np.float64))
+        # state: current estimates + accumulated confidence
+        self.L = self._L_prior.copy()
+        self.log_b = self._logb_prior.copy()
+        self.n_pair = np.zeros((self.T, self.T))
+        self.n_base = np.zeros(self.T)
+        self.n_obs = 0
+        self._scatter = make_scatter(self.scatter)
+
+    # -- updates ----------------------------------------------------------
+    def update(self, obs: ObservationLog) -> int:
+        """Consume one observation batch; returns how many records were used."""
+        if len(obs) == 0:
+            return 0
+        keep = obs.lost_frac <= self.max_lost_frac
+        obs = obs.select(keep)
+        if len(obs) == 0:
+            return 0
+        t = np.asarray(obs.wtype, np.int32)
+        cbar = np.asarray(obs.co_counts, np.float64)
+        # geometric-mean rate: the log-linear model is exact in it per cache
+        # regime, whereas log(bytes/duration) carries a Jensen gap whenever
+        # co-residency changed mid-run
+        y = np.log(np.asarray(obs.geo_rate, np.float64))
+
+        if self.decay < 1.0:
+            self.n_pair *= self.decay
+            self.n_base *= self.decay
+
+        # Co-run telemetry determines only the sum log_b_t + cbar @ L[:, t]:
+        # base rate and pair effects trade off along an unidentifiable
+        # direction, so letting co-runs touch the base bleeds any base-rate
+        # drift (a degraded server) into every co-resident pair estimate.
+        # The updates are therefore decoupled along identifiability lines:
+        # *solo* runs -- the only unbiased base signal -- update log_b; co-run
+        # residuals (against the freshly updated base) update only L. A fleet
+        # whose types never run alone keeps its base prior, and the pair
+        # estimates absorb the discrepancy -- the best any estimator could do.
+        solo = cbar.sum(axis=1) <= self.solo_eps
+        if solo.any():
+            r0 = y[solo] - self.log_b[t[solo]]
+            num0 = np.bincount(t[solo], weights=r0, minlength=self.T)
+            cnt0 = np.bincount(t[solo], minlength=self.T).astype(np.float64)
+            self.log_b += self.lr * num0 / (cnt0 + self.step_damp)
+            self.n_base += cnt0
+
+        co = ~solo
+        if co.any():
+            tc, cc, yc = t[co], cbar[co], y[co]
+            pred = self.log_b[tc] + np.einsum("bu,ub->b", cc, self.L[:, tc])
+            xnorm = np.maximum((cc**2).sum(axis=1), self.solo_eps)
+            h = (yc - pred) / xnorm  # normalized residual (LMS direction)
+
+            num_pair, _ = self._scatter(tc, cc, h)
+            wgt_pair, _ = self._scatter(tc, cc, np.ones_like(h))
+            # exposure-weighted average step: invariant to batch composition
+            self.L += self.lr * num_pair / (wgt_pair + self.step_damp)
+            self.n_pair += wgt_pair
+
+        self.n_obs += len(obs)
+        return len(obs)
+
+    # -- estimates --------------------------------------------------------
+    def pair_confidence(self) -> np.ndarray:
+        """Accumulated (decayed) exposure per pair, in co-run units [T, T]."""
+        return self.n_pair.copy()
+
+    def observed_mask(self, floor: float | None = None) -> np.ndarray:
+        """Pairs whose accumulated exposure reached the confidence floor."""
+        return self.n_pair >= (self.confidence_floor if floor is None else floor)
+
+    def estimate_D(self) -> np.ndarray:
+        """Current D-matrix estimate, prior-blended below the confidence floor."""
+        w = np.minimum(self.n_pair / self.confidence_floor, 1.0)
+        L_eff = w * self.L + (1.0 - w) * self._L_prior
+        return np.clip(-np.expm1(L_eff), 0.0, 0.999999)
+
+    def estimate_solo(self) -> np.ndarray:
+        """Current per-type base-throughput estimate (bytes/s) [T]."""
+        w = np.minimum(self.n_base / self.confidence_floor, 1.0)
+        return np.exp(w * self.log_b + (1.0 - w) * self._logb_prior)

@@ -1,0 +1,127 @@
+"""The completion-observation log: what a production fleet actually sees.
+
+One record per *completed* workload run (the unit the paper's TestDFSIO
+profiling also measures), assembled host-side from the fixed-shape telemetry
+arrays ``engine_jax.run_trace`` emits with ``telemetry=True``:
+
+  wtype      -- the workload's profiling-grid type (§III characterization)
+  server     -- which server it ran on
+  duration   -- wall-clock run time (place -> finish)
+  rate       -- observed effective throughput, data_total / duration (bytes/s)
+  geo_rate   -- geometric-mean throughput, exp(mean of log instantaneous
+                rate) -- what sampling the server's throughput counters and
+                averaging in log space yields. This is the estimator's y:
+                time-averaging *log* rate keeps the log-linear model exact
+                when co-residency changes mid-run, where the arithmetic
+                ``rate`` mixes regimes (Jensen gap, large at heavy
+                degradation).
+  co_counts  -- time-*averaged* co-resident type counts over the run [T]
+                (the integral of the co-run multiset, excluding the workload
+                itself, divided by the duration -- partial overlaps weighted
+                exactly by how long they lasted)
+  lost_frac  -- fraction of the run spent while the server was past its
+                physical TDP (the estimator can down-weight or split on it)
+
+This is deliberately *not* the simulator's internals: no solo throughputs, no
+pairwise slowdowns, no cache state -- only quantities a real deployment can
+log (completion times and co-residency intervals from the scheduler's own
+records). The streaming estimator (``telemetry.estimator``) recovers the
+paper's empirical foundation -- per-type base rates and the pairwise D-matrix
+-- from exactly this.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ObservationLog:
+    """A batch of completion observations (arrays share the leading axis)."""
+
+    wtype: np.ndarray  # i32[N] grid type per completed run
+    server: np.ndarray  # i32[N] server the run was placed on
+    duration: np.ndarray  # f64[N] place -> finish wall time (s)
+    rate: np.ndarray  # f64[N] observed effective throughput (bytes/s)
+    geo_rate: np.ndarray  # f64[N] geometric-mean throughput (bytes/s)
+    co_counts: np.ndarray  # f64[N, T] time-averaged co-resident type counts
+    lost_frac: np.ndarray  # f64[N] fraction of the run spent past the TDP
+
+    def __post_init__(self):
+        n = len(self.wtype)
+        for f in dataclasses.fields(self):
+            arr = getattr(self, f.name)
+            assert len(arr) == n, f"{f.name} length {len(arr)} != {n}"
+
+    def __len__(self) -> int:
+        return len(self.wtype)
+
+    @property
+    def T(self) -> int:
+        return self.co_counts.shape[1]
+
+    @classmethod
+    def empty(cls, T: int) -> "ObservationLog":
+        return cls(
+            wtype=np.zeros(0, np.int32),
+            server=np.zeros(0, np.int32),
+            duration=np.zeros(0),
+            rate=np.zeros(0),
+            geo_rate=np.zeros(0),
+            co_counts=np.zeros((0, T)),
+            lost_frac=np.zeros(0),
+        )
+
+    def select(self, mask: np.ndarray) -> "ObservationLog":
+        """Subset of the log (boolean mask or index array)."""
+        return ObservationLog(
+            **{f.name: getattr(self, f.name)[mask] for f in dataclasses.fields(self)})
+
+    def for_server(self, server: int) -> "ObservationLog":
+        return self.select(self.server == server)
+
+    @classmethod
+    def merge(cls, logs: Iterable["ObservationLog"]) -> "ObservationLog":
+        logs = list(logs)
+        if not logs:
+            raise ValueError("merge of zero logs (T unknown)")
+        return cls(**{
+            f.name: np.concatenate([getattr(l, f.name) for l in logs])
+            for f in dataclasses.fields(cls)})
+
+
+def observations_from_trace(
+    trace,
+    arr_type: Sequence[int] | np.ndarray,
+    arr_bytes: Sequence[float] | np.ndarray,
+    min_duration: float = 1e-12,
+) -> ObservationLog:
+    """Build the log from a telemetry-enabled ``EngineTrace``.
+
+    Never-placed or never-finished arrivals (queued at deadlock, zero-length
+    runs below ``min_duration``) are dropped -- a fleet cannot observe a rate
+    for work that did not complete. Order follows the trace's arrival axis.
+    """
+    place = np.asarray(trace.place_time, np.float64)
+    finish = np.asarray(trace.finish_time, np.float64)
+    placement = np.asarray(trace.placement)
+    duration = finish - place
+    ok = (placement >= 0) & (place >= 0.0) & np.isfinite(finish) & (duration > min_duration)
+
+    wtype = np.asarray(arr_type, np.int32)[ok]
+    nbytes = np.asarray(arr_bytes, np.float64)[ok]
+    duration = duration[ok]
+    obs_co = np.asarray(trace.obs_co, np.float64)[ok]
+    obs_lost = np.asarray(trace.obs_lost, np.float64)[ok]
+    obs_logr = np.asarray(trace.obs_logr, np.float64)[ok]
+    return ObservationLog(
+        wtype=wtype,
+        server=placement[ok].astype(np.int32),
+        duration=duration,
+        rate=nbytes / duration,
+        geo_rate=np.exp(obs_logr / duration),
+        co_counts=obs_co / duration[:, None],
+        lost_frac=np.clip(obs_lost / duration, 0.0, 1.0),
+    )

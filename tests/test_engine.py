@@ -133,6 +133,21 @@ def test_corun_rates_match_simulator():
         np.testing.assert_allclose(got, want, rtol=1e-4)
 
 
+def test_engine_empty_trace_resolves_backend():
+    """Empty traces report the backend that *would* have run -- consumers
+    branch on ``EngineResult.backend`` uniformly (no 'empty' sentinel)."""
+    engine = ConsolidationEngine([M1])
+    assert engine.run([]).backend == "numpy"  # auto, below the jit threshold
+    assert engine.run([], backend="jax").backend == "jax"
+    assert engine.run([], backend="numpy").backend == "numpy"
+    res = engine.run([], backend="jax", telemetry=True)
+    assert res.backend == "jax" and len(res.observations) == 0
+    # telemetry needs the device engine's event loop
+    with pytest.raises(ValueError):
+        engine.run([], backend="numpy", telemetry=True)
+    assert engine.run([], telemetry=True).backend == "jax"  # auto picks jax
+
+
 def test_engine_deadlock_raises():
     """A workload that fits no empty server deadlocks both backends alike."""
     tiny = ConsolidationEngine([M1], alpha=0.01)  # budget too small for anything

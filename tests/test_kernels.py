@@ -109,6 +109,49 @@ def test_consolidation_scores_vs_ref_and_model():
     np.testing.assert_allclose(np.asarray(maxd), np.asarray(mr), atol=1e-5)
 
 
+@pytest.mark.parametrize(
+    "B,T,block_b",
+    [
+        (1, 16, 128),  # single observation
+        (7, 230, 128),  # smaller than one block (padding path)
+        (128, 230, 64),  # multiple full blocks
+        (300, 64, 128),  # partial last block
+    ],
+)
+def test_pair_scatter_vs_ref(B, T, block_b):
+    """Telemetry pair-statistic scatter kernel vs the float64 numpy oracle.
+
+    Includes out-of-range types (-1): the wrapper's padding convention, which
+    must contribute nothing, exactly like the reference's explicit skip."""
+    from repro.kernels.telemetry import pair_scatter
+
+    rng = np.random.default_rng(B * 1000 + T)
+    types = rng.integers(-1, T, size=B).astype(np.int32)
+    cbar = (rng.random((B, T)) * 2).astype(np.float32)
+    vals = rng.normal(size=B).astype(np.float32)
+    pair, base = pair_scatter(jnp.asarray(types), jnp.asarray(cbar),
+                              jnp.asarray(vals), block_b=block_b, interpret=True)
+    pair_ref, base_ref = ref.pair_scatter_ref(types, cbar, vals)
+    np.testing.assert_allclose(np.asarray(pair), pair_ref, atol=2e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(base), base_ref, atol=2e-5, rtol=1e-5)
+
+
+def test_pair_scatter_matches_estimator_backends():
+    """All three scatter backends implement one contract (estimator view)."""
+    from repro.telemetry.estimator import make_scatter
+
+    rng = np.random.default_rng(0)
+    B, T = 40, 230
+    types = rng.integers(0, T, size=B).astype(np.int32)
+    cbar = (rng.random((B, T)) < 0.02).astype(np.float64) * rng.random((B, T))
+    vals = rng.normal(size=B)
+    want = make_scatter("numpy")(types, cbar, vals)
+    for backend in ("jnp", "pallas"):
+        got = make_scatter(backend)(types, cbar, vals)
+        np.testing.assert_allclose(got[0], want[0], atol=1e-5)
+        np.testing.assert_allclose(got[1], want[1], atol=1e-5)
+
+
 def test_flash_attention_matches_model_layer():
     """Kernel path == the production jnp chunked_attention (same math)."""
     from repro.models.layers import chunked_attention
