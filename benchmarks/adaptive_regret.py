@@ -90,8 +90,9 @@ def run(emit, smoke: bool = False):
 
         # decay < 1: confidence on pre-drift evidence fades, so pairs the
         # drifted world re-observes re-converge and unobservable ones fall
-        # back toward the prior instead of pinning stale estimates
-        adaptive = AdaptiveEngine(servers, prior=0.0, drift=drift, decay=0.9)
+        # back toward the prior instead of pinning stale estimates. Decay is
+        # per observation-unit (chunk-invariant): 0.997^32 ~ 0.9 per segment.
+        adaptive = AdaptiveEngine(servers, prior=0.0, drift=drift, decay=0.997)
         res = adaptive.run(arrivals, segments=segments, on_segment=snapshot)
 
         mk_oracle = {}  # per-seed (seg differs); D matrices reuse oracle_D

@@ -29,6 +29,7 @@ from . import (
     roofline_table,
     scale_scheduler,
     table2_greedy_example,
+    telemetry_throughput,
 )
 
 MODULES = [
@@ -39,6 +40,7 @@ MODULES = [
     ("fig9", fig9_greedy_vs_optimal),
     ("scale", scale_scheduler),
     ("adaptive", adaptive_regret),
+    ("telemetry", telemetry_throughput),
     ("roofline", roofline_table),
 ]
 

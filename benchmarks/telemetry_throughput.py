@@ -1,0 +1,196 @@
+"""Telemetry ingest throughput: host vs device estimator paths (ISSUE 4).
+
+The question this suite answers: how many completion observations per second
+can one estimator absorb, starting from where they are born -- the device-
+resident telemetry arrays ``engine_jax.run_trace`` emits? The ROADMAP's
+million-user setting turns the observe -> estimate loop into a streaming
+ingest problem, and the two paths differ exactly where it matters at scale:
+
+  host    ``observations_from_trace`` + per-server ``for_server`` +
+          ``StreamingEstimator.update`` -- the float64 reference semantics
+          (what PR 2's AdaptiveEngine runs, with this PR's satellite fixes:
+          jitted single-launch stacked scatter), but every segment round-
+          trips through ``np.asarray``: device -> host transfer of the trace
+          arrays, numpy filtering/residuals, one sliced log + update call
+          per server, a device scatter with transfers both ways each.
+  device  ``ObservationRing.push_trace`` + ``EstimatorBank.update_device``
+          -- the same records never leave the device: one fused rows->ring
+          launch per segment, then one fused masking/residual/scatter/LMS
+          program per ring-full that updates EVERY server's estimator (the
+          per-server split becomes scatter indices, so the batch streams
+          once regardless of fleet size). State stays device-resident.
+
+Both paths consume identical synthetic trace telemetry arriving in fixed
+chunks (the cadence segment boundaries impose), warmed up before timing so
+jit compilation is excluded. They differ in *refresh* cadence, which is the
+architectural point: the host path has no buffer, so every chunk is an
+estimator update; the ring decouples ingest from estimation, so the device
+path refreshes once per ring-full (``device_chunked`` pins the device path
+to the host's per-chunk refresh cadence for a like-for-like program
+comparison). Timing repetitions interleave the paths so machine-noise
+epochs land on both. Reported as observations/sec per tier plus the
+device/host speedup; the acceptance bar is >= 5x at the 64k tier.
+``--smoke`` shrinks the stream for CI and additionally pushes one block
+through the Pallas scatter in interpret mode, so the kernel path is
+exercised off-TPU on every PR.
+"""
+from __future__ import annotations
+
+import time
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.telemetry import (
+    EstimatorBank,
+    ObservationRing,
+    StreamingEstimator,
+    observations_from_trace,
+)
+
+#: the paper's grid size; matches what AdaptiveEngine's estimators use
+T = 230
+#: servers in the fleet (per-server estimators, as AdaptiveEngine holds)
+M = 2
+#: observations per ingest chunk (a segment boundary's worth of completions --
+#: generous: the repo's closed-loop segments run 16-48 arrivals)
+CHUNK = 128
+#: ring capacity = device refresh cadence (rows per fused estimator update)
+CAPACITY = 4096
+#: timing repetitions per path; the minimum is reported (machine-noise guard)
+REPS = 3
+
+
+class _FakeTrace(NamedTuple):
+    """The telemetry fields of an ``EngineTrace``, synthesized on device."""
+
+    place_time: jnp.ndarray
+    finish_time: jnp.ndarray
+    placement: jnp.ndarray
+    obs_co: jnp.ndarray
+    obs_lost: jnp.ndarray
+    obs_logr: jnp.ndarray
+
+
+def _synthetic_stream(rng: np.random.Generator, n: int, chunk: int):
+    """(trace, arr_type, arr_bytes) per chunk, trace arrays staged on device.
+
+    Rates follow a plausible log-linear world; a few rows per chunk never
+    complete (placement -1), exercising both paths' filtering.
+    """
+    chunks = []
+    for start in range(0, n, chunk):
+        b = min(chunk, n - start)
+        t = rng.integers(0, T, b).astype(np.int32)
+        co = np.zeros((b, T))
+        rows = np.repeat(np.arange(b), 2)
+        co[rows, rng.integers(0, T, 2 * b)] += 1.0
+        # solo runs anchor the base rates but are rare in a consolidated
+        # fleet (co-location is the scheduler's whole objective)
+        co[rng.random(b) < 0.1] = 0.0
+        y = rng.normal(1.0, 0.2, b)
+        dur = rng.uniform(0.5, 2.0, b)
+        placement = rng.integers(0, M, b).astype(np.int32)
+        placement[rng.random(b) < 0.02] = -1  # queued at deadlock: no record
+        trace = _FakeTrace(
+            place_time=jnp.zeros(b, jnp.float32),
+            finish_time=jnp.asarray(dur, jnp.float32),
+            placement=jnp.asarray(placement),
+            obs_co=jnp.asarray(co * dur[:, None], jnp.float32),
+            obs_lost=jnp.asarray((rng.random(b) < 0.05) * dur, jnp.float32),
+            obs_logr=jnp.asarray(y * dur, jnp.float32),
+        )
+        chunks.append((trace, jnp.asarray(t), np.exp(y) * dur))
+    return chunks
+
+
+def _estimator(scatter: str) -> StreamingEstimator:
+    return StreamingEstimator(T=T, prior_D=0.0, lr=0.5, decay=0.999,
+                              confidence_floor=2.0, scatter=scatter)
+
+
+def _run_host(chunks) -> float:
+    ests = [_estimator("jnp") for _ in range(M)]
+    t0 = time.perf_counter()
+    for trace, arr_type, arr_bytes in chunks:
+        obs = observations_from_trace(trace, np.asarray(arr_type), arr_bytes)
+        for s, est in enumerate(ests):
+            est.update(obs.for_server(s))
+    return time.perf_counter() - t0
+
+
+def _run_device(chunks, ring_cadence: bool) -> "tuple[float, EstimatorBank]":
+    """Push every chunk; refresh per ring-full, or per chunk when pinned."""
+    bank = EstimatorBank([_estimator("jnp") for _ in range(M)])
+    ring = ObservationRing(CAPACITY, T)
+    pending = 0
+    t0 = time.perf_counter()
+    for trace, arr_type, _ in chunks:
+        pushed = ring.push_trace(trace, arr_type)
+        if not ring_cadence:
+            # host-cadence pin: consume this block, without per-call syncs
+            bank.update_device(pushed, sync=False)
+            continue
+        pending += pushed.rows
+        if pending >= CAPACITY:
+            # the ring rolled over with exactly `pending` fresh rows (the
+            # capacity is a chunk multiple): one fused update consumes it
+            bank.update_device(ring.view(), sync=False)
+            pending = 0
+    if pending:
+        # flush: remaining rows never wrapped
+        bank.update_device(ring.view(), sync=False)
+    # the stream is fully absorbed once every member state materializes
+    bank.estimators[0].device_state().L_t.block_until_ready()
+    return time.perf_counter() - t0, bank
+
+
+def _time_paths(chunks) -> tuple[float, float, float]:
+    """Best-of-REPS per path, *interleaved* within each repetition so an
+    epoch of machine noise (frequency scaling, a noisy neighbor) lands on
+    every path instead of skewing whichever ran during it."""
+    _run_host(chunks)  # warm the jitted scatter across the chunk shapes
+    _run_device(chunks, ring_cadence=True)  # warm the push + update jits
+    _run_device(chunks, ring_cadence=False)
+    host_s = dev_s = chunked_s = float("inf")
+    for _ in range(REPS):
+        host_s = min(host_s, _run_host(chunks))
+        dt, bank = _run_device(chunks, ring_cadence=True)
+        dev_s = min(dev_s, dt)
+        chunked_s = min(chunked_s, _run_device(chunks, ring_cadence=False)[0])
+    for est in bank.estimators:
+        est.estimate_D()  # sanity: the lazy host sync works after a timed run
+    return host_s, dev_s, chunked_s
+
+
+def run(emit, smoke: bool = False):
+    rng = np.random.default_rng(0)
+    tiers = [1024] if smoke else [1024, 16384, 65536]
+
+    for n in tiers:
+        chunks = _synthetic_stream(rng, n, CHUNK)
+        host_s, dev_s, chunked_s = _time_paths(chunks)
+        host_rate, dev_rate, chunked_rate = n / host_s, n / dev_s, n / chunked_s
+        tag = f"{n // 1024}k"
+        emit(f"telemetry/host_{tag}", host_rate,
+             f"chunk={CHUNK};sec={host_s:.3f}", unit="obs_per_sec")
+        emit(f"telemetry/device_{tag}", dev_rate,
+             f"chunk={CHUNK};refresh={CAPACITY};sec={dev_s:.3f}",
+             unit="obs_per_sec")
+        emit(f"telemetry/device_chunked_{tag}", chunked_rate,
+             f"chunk={CHUNK};refresh={CHUNK};sec={chunked_s:.3f}",
+             unit="obs_per_sec")
+        emit(f"telemetry/speedup_{tag}", dev_rate / host_rate,
+             "device_over_host;target>=5x_at_64k", unit="ratio")
+
+    if smoke:
+        # PR-gate coverage of the kernel path: one block through the Pallas
+        # stacked-statistic scatter (interpret mode off-TPU)
+        est = _estimator("pallas")
+        ring = ObservationRing(CHUNK, T)
+        trace, arr_type, _ = chunks[0]
+        used = est.update_device(ring.push_trace(trace, arr_type), server=0)
+        err = float(np.abs(est.estimate_D()).max())  # forces the host sync
+        emit("telemetry/pallas_interpret_block", float(used),
+             f"rows_consumed;max_D={err:.3f}", unit="observations")

@@ -51,8 +51,14 @@ from .engine_jax import QUEUED, PackedDynamics, Scorer, run_trace
 from .scheduler import OnlineScheduler
 from .server import ServerSpec
 from .workload import FS_GRID, RS_GRID, Workload, type_index
-from ..telemetry.estimator import ScatterName, StreamingEstimator
-from ..telemetry.log import ObservationLog, observations_from_trace
+from ..telemetry.estimator import EstimatorBank, ScatterName, StreamingEstimator
+from ..telemetry.log import (
+    ObservationLog,
+    ObservationRing,
+    RingBlock,
+    observations_from_trace,
+    rows_from_trace,
+)
 
 if TYPE_CHECKING:
     from ..telemetry.drift import DriftSchedule
@@ -119,6 +125,11 @@ class EngineResult:
     max_observed_degradation: float
     backend: str
     observations: ObservationLog | None = None  # filled when run(telemetry=True)
+    #: device-resident observation rows (run(telemetry='device')): the same
+    #: records as ``observations`` but as a validity-masked RingBlock that
+    #: never left the device -- what AdaptiveEngine's stream mode folds into
+    #: its ObservationRing
+    stream_block: RingBlock | None = None
 
     @property
     def queued_indices(self) -> tuple[int, ...]:
@@ -171,13 +182,24 @@ class ConsolidationEngine:
             self._dyn = PackedDynamics.build(self.servers)
         return self._dyn
 
+    def set_D(self, D: Sequence[np.ndarray] | np.ndarray) -> None:
+        """Swap the scoring D-matrices in place, rebuilding only what depends
+        on them (the PackedCluster). The ground-truth ``PackedDynamics`` and
+        the jitted trace programs key on server specs, not D, so a closed
+        loop refreshing its estimate every segment pays for one [m, T, T]
+        restack instead of a full engine rebuild."""
+        if isinstance(D, np.ndarray):
+            D = [D] * len(self.servers)
+        self.D = list(D)
+        self.cluster = PackedCluster.build(list(self.servers), self.D, self.alpha)
+
     # -- public API -------------------------------------------------------
     def run(
         self,
         arrivals: Sequence[tuple[float, Workload]],
         backend: Backend | None = None,
         *,
-        telemetry: bool = False,
+        telemetry: bool | Literal["host", "device"] = False,
     ) -> EngineResult:
         """Simulate arrivals [(time, workload)] to completion of all work.
 
@@ -186,12 +208,17 @@ class ConsolidationEngine:
         honoured per arrival. Raises ``RuntimeError`` on deadlock (a queued
         workload no *empty* server can take), like the oracle.
 
-        ``telemetry=True`` attaches the completion-observation log
-        (``repro.telemetry.ObservationLog``) to the result -- the input of
-        the streaming D-estimator. Telemetry is emitted by the device
-        engine's event loop, so it requires (and, under 'auto', selects) the
-        jax backend.
+        ``telemetry=True`` (or ``'host'``) attaches the completion-observation
+        log (``repro.telemetry.ObservationLog``) to the result -- the input
+        of the streaming D-estimator's host path. ``'device'`` attaches the
+        same records as a device-resident validity-masked ``stream_block``
+        instead, never materializing a host log (the fleet-scale path:
+        ``ObservationRing`` / ``StreamingEstimator.update_device``).
+        Telemetry is emitted by the device engine's event loop, so it
+        requires (and, under 'auto', selects) the jax backend.
         """
+        if telemetry not in (False, True, "host", "device"):
+            raise ValueError(f"unknown telemetry mode {telemetry!r}")
         backend = backend or self.backend
         if backend == "auto":
             backend = "jax" if telemetry or len(arrivals) >= AUTO_JAX_THRESHOLD else "numpy"
@@ -200,7 +227,8 @@ class ConsolidationEngine:
         if telemetry and backend != "jax":
             raise ValueError("telemetry requires the jax engine backend")
         if not arrivals:
-            obs = ObservationLog.empty(self.cluster.T) if telemetry else None
+            obs = (ObservationLog.empty(self.cluster.T)
+                   if telemetry in (True, "host") else None)
             return EngineResult((), (), (), (), 0.0, 0.0, backend, obs)
         if backend == "jax":
             return self._run_jax(arrivals, telemetry=telemetry)
@@ -208,7 +236,9 @@ class ConsolidationEngine:
 
     # -- device backend ---------------------------------------------------
     def _run_jax(
-        self, arrivals: Sequence[tuple[float, Workload]], telemetry: bool = False
+        self,
+        arrivals: Sequence[tuple[float, Workload]],
+        telemetry: bool | Literal["host", "device"] = False,
     ) -> EngineResult:
         n = len(arrivals)
         times = np.asarray([t for t, _ in arrivals], np.float64)
@@ -226,12 +256,16 @@ class ConsolidationEngine:
         scorer = None if self.scorer == "jnp" else make_scorer(self.scorer)
         trace = run_trace(
             self.cluster, self.dyn, arr_time, arr_type, arr_bytes,
-            objective=self.objective, scorer=scorer, telemetry=telemetry)
+            objective=self.objective, scorer=scorer, telemetry=bool(telemetry))
         if bool(trace.deadlock):
             raise RuntimeError("deadlock: queued workloads fit no empty server")
         # observation records are per-run; the trace's arrival-sorted order is
         # as good as submission order, so no inverse permutation is needed
-        obs = observations_from_trace(trace, arr_type, arr_bytes) if telemetry else None
+        obs = block = None
+        if telemetry == "device":
+            block = rows_from_trace(trace, arr_type)
+        elif telemetry:
+            obs = observations_from_trace(trace, arr_type, arr_bytes)
 
         inv = np.empty(n, np.int64)
         inv[order] = np.arange(n)
@@ -250,6 +284,7 @@ class ConsolidationEngine:
             max_observed_degradation=float(trace.max_deg),
             backend="jax",
             observations=obs,
+            stream_block=block,
         )
 
     # -- reference oracle -------------------------------------------------
@@ -341,6 +376,12 @@ class AdaptiveEngine:
     directly comparable against a true-D oracle run under the same protocol
     (``benchmarks/adaptive_regret.py`` measures exactly that regret).
 
+    ``stream=True`` is the fleet-scale variant of the same loop: each
+    segment runs with ``telemetry='device'``, its observation rows fold into
+    a shared device-resident :class:`~repro.telemetry.ObservationRing`, and
+    every estimator refresh is one fused ``update_device`` call -- no host
+    ``ObservationLog`` is ever materialized (DESIGN.md §10).
+
     Estimators are per server (never pooled across same-spec servers): under
     drift, two nominally identical servers stop being identical, and pooling
     would average incompatible worlds. Pooling for faster warm-up on healthy
@@ -360,6 +401,8 @@ class AdaptiveEngine:
         confidence_floor: float = 2.0,
         max_lost_frac: float = 0.5,
         scatter: ScatterName = "auto",
+        stream: bool = False,
+        ring_capacity: int = 4096,
     ):
         """``prior`` selects what the scheduler believes before any telemetry:
         a scalar is a uniform D prior (0.0 = optimistic "no interference" --
@@ -374,6 +417,15 @@ class AdaptiveEngine:
         self.objective = objective
         self.scorer = scorer
         self.drift = drift
+        self.stream = stream
+        self.ring = ObservationRing(ring_capacity, GRID_T) if stream else None
+        # segment-engine cache: under an unchanged world (drift is None, or a
+        # schedule window with no event) only the D-matrices move between
+        # segments, so the engine -- and with it the PackedDynamics tables and
+        # the jitted trace programs keyed on them -- is reused via set_D
+        self._seg_engine: ConsolidationEngine | None = None
+        self._seg_specs: tuple[ServerSpec, ...] | None = None
+        self._dyn_cache: dict[tuple[ServerSpec, ...], PackedDynamics] = {}
 
         priors: list[np.ndarray | float]
         if isinstance(prior, str):
@@ -404,6 +456,8 @@ class AdaptiveEngine:
             )
             for i, s in enumerate(self.servers)
         ]
+        #: stream mode refreshes every server's estimator in one fused call
+        self.bank = EstimatorBank(self.estimators) if stream else None
 
     # -- estimates --------------------------------------------------------
     def current_D(self) -> list[np.ndarray]:
@@ -411,12 +465,28 @@ class AdaptiveEngine:
         return [est.estimate_D() for est in self.estimators]
 
     def engine_for_segment(self, segment: int) -> ConsolidationEngine:
-        """A ConsolidationEngine scoring with estimates over the true world."""
-        specs = (self.drift.specs_at(self.servers, segment)
+        """A ConsolidationEngine scoring with estimates over the true world.
+
+        Engines are cached across segments: while the specs are unchanged
+        only the estimated D moves, and ``set_D`` swaps it without rebuilding
+        the ground-truth dynamics (or re-tracing the engine's jit programs).
+        When drift changes the specs, the new engine still reuses any
+        previously built ``PackedDynamics`` for that world (drift schedules
+        revisit worlds: congest -> recover)."""
+        specs = (tuple(self.drift.specs_at(self.servers, segment))
                  if self.drift is not None else self.servers)
-        return ConsolidationEngine(
+        if self._seg_engine is not None and specs == self._seg_specs:
+            self._seg_engine.set_D(self.current_D())
+            return self._seg_engine
+        engine = ConsolidationEngine(
             list(specs), D=self.current_D(), alpha=self.alpha,
             objective=self.objective, backend="jax", scorer=self.scorer)
+        if specs in self._dyn_cache:
+            engine._dyn = self._dyn_cache[specs]
+        else:
+            self._dyn_cache[specs] = engine.dyn  # builds the tables once
+        self._seg_engine, self._seg_specs = engine, specs
+        return engine
 
     # -- the loop ---------------------------------------------------------
     def run(
@@ -437,10 +507,21 @@ class AdaptiveEngine:
         for k in range(segments):
             chunk = ordered[bounds[k]:bounds[k + 1]]
             engine = self.engine_for_segment(k)
-            res = engine.run(chunk, telemetry=True)
-            used = 0
-            for s, est in enumerate(self.estimators):
-                used += est.update(res.observations.for_server(s))
+            if self.stream:
+                # fleet-scale path: the segment's rows go trace -> ring ->
+                # one banked estimator update without leaving the device
+                res = engine.run(chunk, telemetry="device")
+                used = 0
+                if res.stream_block is not None:
+                    # estimators consume the segment's FULL block; the ring
+                    # (which keeps only its newest capacity rows) is the
+                    # bounded history for re-reads, not the update source
+                    self.ring.push(res.stream_block)
+                    used = self.bank.update_device(res.stream_block)
+            else:
+                res = engine.run(chunk, telemetry=True)
+                used = sum(est.update(res.observations.for_server(s))
+                           for s, est in enumerate(self.estimators))
             results.append(res)
             n_obs.append(used)
             t_starts.append(chunk[0][0] if chunk else 0.0)

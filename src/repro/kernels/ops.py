@@ -92,4 +92,6 @@ def greedy_scores(
 
 
 def telemetry_pair_scatter(types, cbar, vals, *, mode: str = "interpret"):
+    """Pair-statistic scatter; ``vals`` [B] or [K, B] (K stacked statistics
+    accumulated in one batch stream -- see ``kernels.telemetry``)."""
     return pair_scatter(types, cbar, vals, **_mode_kwargs(mode))

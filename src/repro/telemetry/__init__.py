@@ -6,19 +6,28 @@ fleet can actually run:
 
   observe   ``engine_jax.run_trace(..., telemetry=True)`` emits a fixed-shape
             device-resident observation log; ``log.observations_from_trace``
-            lifts it to per-completion records (type, co-residency, rate).
+            lifts it to per-completion host records (type, co-residency,
+            rate), while ``log.rows_from_trace`` keeps the same records on
+            device as validity-masked rows and ``log.ObservationRing``
+            accumulates them across traces in a fixed-capacity device ring.
   estimate  ``estimator.StreamingEstimator`` recovers per-type base rates and
             the pairwise D-matrix in log-slowdown space, with per-pair
-            confidence counts and prior fallback; the batched pair-statistic
-            scatter is a Pallas kernel (``kernels.telemetry``).
+            confidence counts and prior fallback; ``update`` is the host
+            float64 reference, ``update_device`` the fused jitted path that
+            consumes ring blocks without a host round trip. The batched
+            pair-statistic scatter is a Pallas kernel (``kernels.telemetry``)
+            carrying K stacked statistics per pass.
   schedule  ``core.engine.AdaptiveEngine`` alternates trace segments with
             estimator refreshes, placing from *estimated* dynamics while the
-            simulator stays ground truth.
+            simulator stays ground truth; ``stream=True`` keeps the whole
+            observe -> estimate path device-resident through the ring.
   drift     ``drift`` builds the non-stationary worlds (perturbed, decaying,
             degraded servers) the loop must track.
 
 Benchmarked end to end by ``benchmarks/adaptive_regret.py`` (makespan regret
-vs the true-D oracle as observations accumulate). See DESIGN.md §9.
+vs the true-D oracle as observations accumulate) and
+``benchmarks/telemetry_throughput.py`` (host vs device observations/sec).
+See DESIGN.md §9-§10.
 """
 from .drift import (
     DriftEvent,
@@ -32,14 +41,31 @@ from .drift import (
     perturb_spec,
     scale_perf,
 )
-from .estimator import StreamingEstimator, make_scatter
-from .log import ObservationLog, observations_from_trace
+from .estimator import (
+    DeviceEstimatorState,
+    EstimatorBank,
+    StreamingEstimator,
+    make_scatter,
+)
+from .log import (
+    ObservationLog,
+    ObservationRing,
+    RingBlock,
+    block_from_log,
+    observations_from_trace,
+    rows_from_trace,
+)
 
 __all__ = [
+    "DeviceEstimatorState",
     "DriftEvent",
+    "EstimatorBank",
     "DriftSchedule",
     "ObservationLog",
+    "ObservationRing",
+    "RingBlock",
     "StreamingEstimator",
+    "block_from_log",
     "congest_server",
     "congestion_at",
     "decayed_spec",
@@ -49,5 +75,6 @@ __all__ = [
     "make_scatter",
     "observations_from_trace",
     "perturb_spec",
+    "rows_from_trace",
     "scale_perf",
 ]

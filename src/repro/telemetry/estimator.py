@@ -25,59 +25,111 @@ batch-normalized LMS update whose step size is invariant to batch
 composition). Per-pair confidence counts accumulate alongside; below a
 confidence floor the estimate falls back to a prior (profiled, or a
 uniform/optimistic constant), and an EWMA ``decay`` on the confidence lets
-fresh evidence overturn stale estimates after a drift.
+fresh evidence overturn stale estimates after a drift. Forgetting is
+**exposure-based**: decay compounds per observation-unit (``decay ** n`` per
+batch of n used observations, with matching triangular weights inside the
+batch), so the confidence half-life is a property of the stream, not of how
+callers chunk it -- eight segment-sized updates and one merged log leave the
+confidence state identical.
+
+Two update paths implement the same estimator:
+
+  ``update``         host numpy (float64), consuming an ``ObservationLog``;
+                     the reference semantics.
+  ``update_device``  one fused jax program consuming a device-resident
+                     ``RingBlock`` (``telemetry.log.ObservationRing``):
+                     validity/lost-frac masking, solo/co split, residuals,
+                     and the LMS step compile into a single jitted call whose
+                     pair statistics come from one stacked-statistic scatter
+                     -- no host round trip per batch. Estimator state lives
+                     on device between calls and syncs back lazily when an
+                     estimate is read.
 
 The batched pair-statistic scatter-accumulation -- the only O(B T) hot loop
 -- is the shared contract implemented by the Pallas kernel
 (``kernels.telemetry.pair_scatter``, MXU one-hot contraction), a jnp
 fallback, and the float64 numpy reference (``kernels.ref.pair_scatter_ref``).
+All three scatter K stacked statistics per pass; the estimator streams the
+batch exactly once per update (residual numerator and exposure weight ride
+together).
 
 Known model limits (documented, by design -- the estimator's model and the
 simulated world *can* disagree): observations that straddle the TDP mix the
 keep/lost base rates, and time-varying co-residency makes log-of-mean differ
 from mean-of-log. Both appear as residual noise; ``max_lost_frac`` filters
-the worst of the former.
+the worst of the former. Chunk-invariance is exact for the confidence state
+(``n_pair``/``n_base``) and first-order for the point estimates: the damped
+LMS steps themselves remain batch-sequential, so splitting a log changes
+``L``/``log_b`` only at O(lr^2) (tested to a tight tolerance).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Literal
+from functools import partial
+from typing import Callable, Literal, NamedTuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from .log import ObservationLog
+from .log import ObservationLog, RingBlock
 
 ScatterName = Literal["auto", "jnp", "pallas", "numpy"]
 
-#: scatter contract: (types i32[B], cbar f[B, T], vals f[B]) ->
-#: (pair [T, T], base [T]) with pair[u, t] = sum_b cbar[b, u] vals[b] 1{t_b = t}
+#: scatter contract: (types i32[B], cbar f[B, T], vals f[B] or f[K, B]) ->
+#: (pair [T, T], base [T]) -- or ([K, T, T], [K, T]) for stacked vals -- with
+#: pair[k, u, t] = sum_b cbar[b, u] vals[k, b] 1{t_b = t}
 Scatter = Callable[[np.ndarray, np.ndarray, np.ndarray], tuple[np.ndarray, np.ndarray]]
 
 
-def make_scatter(backend: ScatterName = "auto") -> Scatter:
-    """Resolve a pair-statistic scatter backend to the shared contract."""
-    if backend == "auto":
-        import jax
+def _scatter_jnp_device(types, cbar, vals):
+    """The jnp scatter on device arrays (jit-safe; stacked or 1-D vals).
 
+    The contraction carries an explicit ``preferred_element_type`` and
+    highest precision so accumulation stays full f32 on every backend (TPU
+    matmuls would otherwise downcast to bf16, drifting from the float64
+    reference contract on large batches).
+    """
+    T = cbar.shape[1]
+    squeeze = vals.ndim == 1
+    vals2 = (vals[None, :] if squeeze else vals).astype(jnp.float32)  # [K, B]
+    onehot = (jnp.arange(T)[None, :] == types[:, None]).astype(jnp.float32)
+    cbar = cbar.astype(jnp.float32)
+    base = jax.lax.dot_general(  # [K, T] = vals2 @ onehot
+        vals2, onehot, (((1,), (0,)), ((), ())),
+        precision=jax.lax.Precision.HIGHEST, preferred_element_type=jnp.float32)
+    sel = onehot[None, :, :] * vals2[:, :, None]  # [K, B, T]
+    pair = jax.lax.dot_general(  # [K, T(u), T(t)]: contract the batch axis
+        jnp.broadcast_to(cbar[None], sel.shape[:1] + cbar.shape), sel,
+        (((1,), (1,)), ((0,), (0,))),
+        precision=jax.lax.Precision.HIGHEST, preferred_element_type=jnp.float32)
+    return (pair[0], base[0]) if squeeze else (pair, base)
+
+
+_scatter_jnp_jit = jax.jit(_scatter_jnp_device)
+
+
+def make_scatter(backend: ScatterName = "auto") -> Scatter:
+    """Resolve a pair-statistic scatter backend to the shared host contract."""
+    if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
     if backend == "numpy":
         from ..kernels.ref import pair_scatter_ref
 
         return pair_scatter_ref
     if backend == "jnp":
-        import jax.numpy as jnp
-
         def scatter_jnp(types, cbar, vals):
-            T = cbar.shape[1]
-            onehot = (jnp.arange(T)[None, :] == jnp.asarray(types)[:, None])
-            sel = onehot.astype(jnp.float32) * jnp.asarray(vals, jnp.float32)[:, None]
-            pair = jnp.asarray(cbar, jnp.float32).T @ sel
-            return np.asarray(pair, np.float64), np.asarray(sel.sum(0), np.float64)
+            # one module-level jitted program shared by every estimator;
+            # retracing then happens only per (B, T, K) shape instead of
+            # rebuilding the op-by-op eager graph on every call
+            pair, base = _scatter_jnp_jit(
+                jnp.asarray(np.asarray(types), jnp.int32),
+                jnp.asarray(np.asarray(cbar, np.float32)),
+                jnp.asarray(np.asarray(vals, np.float32)))
+            return np.asarray(pair, np.float64), np.asarray(base, np.float64)
 
         return scatter_jnp
     if backend == "pallas":
-        import jax
-
         from ..kernels.telemetry import pair_scatter
 
         interpret = jax.default_backend() != "tpu"
@@ -90,6 +142,142 @@ def make_scatter(backend: ScatterName = "auto") -> Scatter:
 
         return scatter_pallas
     raise ValueError(f"unknown scatter backend {backend!r}")
+
+
+class DeviceEstimatorState(NamedTuple):
+    """The estimator's mutable state as device arrays (``update_device``).
+
+    The pair tables live **target-major** ([t, u] -- the transpose of the
+    host's canonical [u, t]): the fused update then reads each observation's
+    coefficient row ``L_t[t_b]`` as one contiguous row gather and the column
+    scatter-add lands rows without a transpose. ``device_state``/``_pull``
+    transpose at the host boundary only.
+    """
+
+    L_t: "object"  # f32[T, T] log(1 - d) estimate, transposed ([t, u])
+    log_b: "object"  # f32[T] log base-throughput estimate
+    n_pair_t: "object"  # f32[T, T] decayed per-pair exposure, transposed
+    n_base: "object"  # f32[T] decayed per-type solo counts
+    n_obs: "object"  # i32 scalar observations consumed
+
+
+def _bank_core(
+    state: DeviceEstimatorState,  # arrays carry a leading server axis [m, ...]
+    block: RingBlock,
+    *,
+    lr: float,
+    decay: float,
+    step_damp: float,
+    solo_eps: float,
+    max_lost_frac: float,
+    use_pallas: bool,
+    interpret: bool,
+):
+    """The fused observe -> estimate step: m per-server estimators, one pass.
+
+    Mirrors ``StreamingEstimator.update`` exactly, independently per server
+    -- lost-frac filter, exposure-based decay with **per-server** triangular
+    weights (a server's half-life counts its own observations, not the
+    fleet's), solo-then-co ordering (co residuals see the freshly updated
+    base) -- on masked fixed-shape rows. Every row updates only the server
+    its ``server`` column names: the per-server split is a scatter index,
+    so the batch streams once regardless of m. The single-estimator
+    ``_update_device`` is this program with m = 1 (no duplicated twin to
+    drift out of parity). Returns (new_state, used_total).
+    """
+    L_t, log_b, n_pair_t, n_base, n_obs = state
+    m, T = log_b.shape
+    valid = block.valid & (block.lost_frac <= max_lost_frac)
+    valid &= (block.server >= 0) & (block.server < m)
+    s_clip = jnp.clip(block.server, 0, m - 1)
+    onehot_s = (jnp.arange(m)[None, :] == s_clip[:, None]) & valid[:, None]  # [B, m]
+    n_used = onehot_s.sum(axis=0)  # [m] rows per server
+
+    if decay < 1.0:
+        # decay^(n_used[s] - rank within s): same triangular weights as the
+        # host path, so the confidence state is invariant to how the stream
+        # is chunked
+        rank = jnp.cumsum(onehot_s.astype(jnp.float32), axis=0)  # [B, m]
+        w_bm = jnp.where(onehot_s,
+                         decay ** (n_used[None, :].astype(jnp.float32) - rank), 0.0)
+        w = w_bm.sum(axis=1)  # [B]: each row has at most one server column
+        sdecay = decay ** n_used.astype(jnp.float32)  # [m]
+        n_pair_t = n_pair_t * sdecay[:, None, None]
+        n_base = n_base * sdecay[:, None]
+    else:
+        w = valid.astype(jnp.float32)
+
+    t_clip = jnp.clip(block.wtype, 0, T - 1)
+    co_sum = block.co_sum  # materialized at row birth (see RingBlock)
+    solo = valid & (co_sum <= solo_eps)
+
+    # solo runs anchor the base (see module docstring); rows land in a dump
+    # slot (index T) that is sliced away, both statistics in one scatter
+    t_solo = jnp.where(solo, block.wtype, T)
+    r0 = block.y - log_b[s_clip, t_clip]
+    ws = jnp.where(solo, w, 0.0)
+    acc0 = jnp.zeros((m, T + 1, 2), jnp.float32).at[s_clip, t_solo].add(
+        jnp.stack([ws * r0, ws], axis=1))
+    num0, cnt0 = acc0[:, :T, 0], acc0[:, :T, 1]
+    log_b = log_b + lr * num0 / (cnt0 + step_damp)
+    n_base = n_base + cnt0
+
+    # co-run residuals against the *updated* base take the LMS step on L;
+    # the [t, u] layout makes the coefficient lookup one contiguous row
+    # gather fused into the multiply-reduce
+    is_co = valid & (co_sum > solo_eps)
+    pred = log_b[s_clip, t_clip] + (block.co * L_t[s_clip, t_clip]).sum(axis=1)
+    xnorm = jnp.maximum(block.co_sq, solo_eps)
+    h = (block.y - pred) / xnorm
+    wc = jnp.where(is_co, w, 0.0)
+    tt = jnp.where(is_co & (block.wtype >= 0) & (block.wtype < T),
+                   block.wtype, T)  # dump slot; the kernel drops >= T too
+    stats = jnp.stack([wc * h, wc])  # residual numerator + exposure weight
+    if use_pallas and m == 1:
+        # TPU lowering: the one-hot MXU contraction (O(B T^2) flops are free
+        # there, scatters are not). A multi-server MXU variant (one-hot over
+        # the combined (server, type) column space) is a kernel follow-up;
+        # banks with m > 1 take the scatter-add below meanwhile.
+        from ..kernels.telemetry import pair_scatter
+
+        pair, _ = pair_scatter(tt, block.co, stats, interpret=interpret)
+        pair_t = pair.swapaxes(1, 2)[:, None]  # [K, 1, T(t), T(u)]
+    else:
+        # CPU/GPU lowering: a duplicate-index scatter-add touches only the
+        # O(B T) contributing elements (~200x less work at T = 230 than the
+        # contraction) and lands target-major rows directly -- no transpose
+        contrib = block.co[None, :, :] * stats[:, :, None]  # [K, B, T(u)]
+        acc = jnp.zeros((2, m, T + 1, T), jnp.float32).at[:, s_clip, tt].add(contrib)
+        pair_t = acc[:, :, :T]  # [K, m, T(t), T(u)]
+    L_t = L_t + lr * pair_t[0] / (pair_t[1] + step_damp)
+    n_pair_t = n_pair_t + pair_t[1]
+
+    new = DeviceEstimatorState(L_t, log_b, n_pair_t, n_base, n_obs + n_used)
+    return new, n_used.sum()
+
+
+@partial(
+    jax.jit,
+    static_argnames=("lr", "decay", "step_damp", "solo_eps", "max_lost_frac",
+                     "use_pallas", "interpret"),
+)
+def _update_device(
+    state: DeviceEstimatorState,
+    block: RingBlock,
+    server,  # i32 scalar; < 0 accepts every server
+    **hypers,
+):
+    """Single-estimator fused update: ``_bank_core`` as a bank of one.
+
+    Rows matching ``server`` (or every row when ``server < 0``) are remapped
+    to bank row 0; everything else drops inside the core's validity mask.
+    """
+    sel = (server < 0) | (block.server == server)
+    block = block._replace(
+        ints=jnp.stack([block.wtype, jnp.where(sel, 0, -1)], axis=1))
+    lifted = DeviceEstimatorState(*(a[None] for a in state))
+    new, used = _bank_core(lifted, block, **hypers)
+    return DeviceEstimatorState(*(a[0] for a in new)), used
 
 
 @dataclasses.dataclass
@@ -109,13 +297,19 @@ class StreamingEstimator:
         a stale prior. ``None`` starts from 1 byte/s and learns the base
         from solo observations alone.
     lr : damping of each batch's exposure-weighted least-squares step (0, 1].
-    decay : EWMA forgetting applied to the confidence counts per update
-        batch; < 1 lets the estimator re-converge after drift.
+    decay : EWMA forgetting of the confidence counts **per observation-unit**
+        (compounded ``decay ** n`` over a batch of n used observations, with
+        matching triangular weights inside the batch). < 1 lets the estimator
+        re-converge after drift; the half-life is ``log 0.5 / log decay``
+        observations regardless of how callers chunk the log, so values live
+        much closer to 1 than the old per-call decay (e.g. 0.997 ~ forgetting
+        half the evidence every ~230 observations).
     confidence_floor : per-pair exposure below which ``estimate_D`` blends
         toward the prior (linearly in accumulated exposure).
     max_lost_frac : observations that spent more than this fraction of their
         run past the physical TDP are excluded (they mix base-rate regimes).
     scatter : pair-statistic backend ('auto' picks pallas on TPU, jnp else).
+        ``update_device`` maps 'numpy' (not jit-able) to the jnp contraction.
     """
 
     T: int
@@ -142,23 +336,86 @@ class StreamingEstimator:
             self._logb_prior = np.zeros(self.T)
         else:
             self._logb_prior = np.log(np.asarray(self.prior_solo, np.float64))
-        # state: current estimates + accumulated confidence
-        self.L = self._L_prior.copy()
-        self.log_b = self._logb_prior.copy()
-        self.n_pair = np.zeros((self.T, self.T))
-        self.n_base = np.zeros(self.T)
-        self.n_obs = 0
+        # state: current estimates + accumulated confidence (host canonical;
+        # a device mirror takes over between update_device calls)
+        self._L = self._L_prior.copy()
+        self._log_b = self._logb_prior.copy()
+        self._n_pair = np.zeros((self.T, self.T))
+        self._n_base = np.zeros(self.T)
+        self._n_obs = 0
+        self._dev: DeviceEstimatorState | None = None
+        self._dev_dirty = False
+        self._bank = None  # EstimatorBank holding this member, if any
         self._scatter = make_scatter(self.scatter)
 
+    # -- host <-> device state management ---------------------------------
+    def _mutated(self) -> None:
+        """This estimator's state moved ahead of any bank's stacked copy."""
+        if self._bank is not None:
+            self._bank._invalidate()
+
+    def _pull(self) -> None:
+        """Sync the host state from the device mirror if it is ahead."""
+        if self._bank is not None:
+            self._bank._flush()  # a banked update may hold the newest state
+        if self._dev_dirty:
+            dev = self._dev
+            self._L = np.asarray(dev.L_t, np.float64).T
+            self._log_b = np.asarray(dev.log_b, np.float64)
+            self._n_pair = np.asarray(dev.n_pair_t, np.float64).T
+            self._n_base = np.asarray(dev.n_base, np.float64)
+            self._n_obs = int(dev.n_obs)
+            self._dev_dirty = False
+
+    def _host_write(self, name, value) -> None:
+        self._pull()
+        self._dev = None  # mirror no longer matches: rebuild on next device use
+        self._mutated()
+        setattr(self, "_" + name, value)
+
+    # host-canonical views: reading syncs from the device mirror, writing
+    # (the host update path, tests poking state) invalidates it
+    L = property(lambda s: (s._pull(), s._L)[1],
+                 lambda s, v: s._host_write("L", v))
+    log_b = property(lambda s: (s._pull(), s._log_b)[1],
+                     lambda s, v: s._host_write("log_b", v))
+    n_pair = property(lambda s: (s._pull(), s._n_pair)[1],
+                      lambda s, v: s._host_write("n_pair", v))
+    n_base = property(lambda s: (s._pull(), s._n_base)[1],
+                      lambda s, v: s._host_write("n_base", v))
+    n_obs = property(lambda s: (s._pull(), s._n_obs)[1],
+                     lambda s, v: s._host_write("n_obs", v))
+
+    def device_state(self) -> DeviceEstimatorState:
+        """The estimator's state as device arrays (building it on first use)."""
+        if self._bank is not None:
+            self._bank._flush()
+        if self._dev is None:
+            f32 = lambda x: jnp.asarray(x, jnp.float32)
+            self._dev = DeviceEstimatorState(
+                f32(self._L.T), f32(self._log_b), f32(self._n_pair.T),
+                f32(self._n_base), jnp.int32(self._n_obs))
+        return self._dev
+
     # -- updates ----------------------------------------------------------
+    def _batch_weights(self, n: int) -> np.ndarray:
+        """Per-observation decay weights, newest last (see ``decay`` docs)."""
+        if self.decay >= 1.0:
+            return np.ones(n)
+        return self.decay ** np.arange(n - 1, -1, -1, dtype=np.float64)
+
     def update(self, obs: ObservationLog) -> int:
         """Consume one observation batch; returns how many records were used."""
         if len(obs) == 0:
             return 0
         keep = obs.lost_frac <= self.max_lost_frac
         obs = obs.select(keep)
-        if len(obs) == 0:
+        n = len(obs)
+        if n == 0:
             return 0
+        self._pull()
+        self._dev = None
+        self._mutated()
         t = np.asarray(obs.wtype, np.int32)
         cbar = np.asarray(obs.co_counts, np.float64)
         # geometric-mean rate: the log-linear model is exact in it per cache
@@ -166,9 +423,14 @@ class StreamingEstimator:
         # co-residency changed mid-run
         y = np.log(np.asarray(obs.geo_rate, np.float64))
 
+        # exposure-based forgetting: the state decays once per observation
+        # consumed (not once per call), and each observation's contribution
+        # carries the decay the rest of the batch will apply after it --
+        # splitting a log across calls leaves the confidences identical
+        w = self._batch_weights(n)
         if self.decay < 1.0:
-            self.n_pair *= self.decay
-            self.n_base *= self.decay
+            self._n_pair *= self.decay ** n
+            self._n_base *= self.decay ** n
 
         # Co-run telemetry determines only the sum log_b_t + cbar @ L[:, t]:
         # base rate and pair effects trade off along an unidentifiable
@@ -181,29 +443,64 @@ class StreamingEstimator:
         # estimates absorb the discrepancy -- the best any estimator could do.
         solo = cbar.sum(axis=1) <= self.solo_eps
         if solo.any():
-            r0 = y[solo] - self.log_b[t[solo]]
-            num0 = np.bincount(t[solo], weights=r0, minlength=self.T)
-            cnt0 = np.bincount(t[solo], minlength=self.T).astype(np.float64)
-            self.log_b += self.lr * num0 / (cnt0 + self.step_damp)
-            self.n_base += cnt0
+            r0 = y[solo] - self._log_b[t[solo]]
+            num0 = np.bincount(t[solo], weights=w[solo] * r0, minlength=self.T)
+            cnt0 = np.bincount(t[solo], weights=w[solo], minlength=self.T)
+            self._log_b += self.lr * num0 / (cnt0 + self.step_damp)
+            self._n_base += cnt0
 
         co = ~solo
         if co.any():
-            tc, cc, yc = t[co], cbar[co], y[co]
-            pred = self.log_b[tc] + np.einsum("bu,ub->b", cc, self.L[:, tc])
+            tc, cc, yc, wc = t[co], cbar[co], y[co], w[co]
+            pred = self._log_b[tc] + np.einsum("bu,ub->b", cc, self._L[:, tc])
             xnorm = np.maximum((cc**2).sum(axis=1), self.solo_eps)
             h = (yc - pred) / xnorm  # normalized residual (LMS direction)
 
-            num_pair, _ = self._scatter(tc, cc, h)
-            wgt_pair, _ = self._scatter(tc, cc, np.ones_like(h))
+            # one stacked scatter carries both sufficient statistics: the
+            # residual numerator and the exposure weight of the same step
+            pair, _ = self._scatter(tc, cc, np.stack([wc * h, wc]))
+            num_pair, wgt_pair = pair[0], pair[1]
             # exposure-weighted average step: invariant to batch composition
-            self.L += self.lr * num_pair / (wgt_pair + self.step_damp)
-            self.n_pair += wgt_pair
+            self._L += self.lr * num_pair / (wgt_pair + self.step_damp)
+            self._n_pair += wgt_pair
 
-        self.n_obs += len(obs)
-        return len(obs)
+        self._n_obs += n
+        return n
+
+    def update_device(self, block: RingBlock, server: int = -1, sync: bool = True):
+        """Consume one device-resident block (the fused fleet-scale path).
+
+        ``block`` is a ``RingBlock`` -- typically what ``ObservationRing.push
+        _trace`` just wrote, or a ring ``view()`` -- whose invalid rows are
+        dropped by the validity mask inside the program. ``server`` restricts
+        the update to rows placed on that server (< 0 consumes every row);
+        per-server estimators each call this on the same block. Returns the
+        number of rows consumed -- as a host int when ``sync`` (the only
+        host sync this path performs), as the raw device scalar with
+        ``sync=False`` so back-to-back updates pipeline without blocking.
+        State stays on device until an estimate is read either way.
+        """
+        use_pallas = self.scatter == "pallas" or (
+            self.scatter == "auto" and jax.default_backend() == "tpu")
+        interpret = jax.default_backend() != "tpu"
+        new, used = _update_device(
+            self.device_state(), block, jnp.int32(server),
+            lr=float(self.lr), decay=float(self.decay),
+            step_damp=float(self.step_damp), solo_eps=float(self.solo_eps),
+            max_lost_frac=float(self.max_lost_frac),
+            use_pallas=use_pallas, interpret=interpret)
+        self._dev = new
+        self._dev_dirty = True
+        self._mutated()
+        return int(used) if sync else used
 
     # -- estimates --------------------------------------------------------
+    # -- internal: bank interop -------------------------------------------
+    def _absorb_device(self, state: DeviceEstimatorState) -> None:
+        """Adopt externally-updated device state (see ``EstimatorBank``)."""
+        self._dev = state
+        self._dev_dirty = True
+
     def pair_confidence(self) -> np.ndarray:
         """Accumulated (decayed) exposure per pair, in co-run units [T, T]."""
         return self.n_pair.copy()
@@ -222,3 +519,89 @@ class StreamingEstimator:
         """Current per-type base-throughput estimate (bytes/s) [T]."""
         w = np.minimum(self.n_base / self.confidence_floor, 1.0)
         return np.exp(w * self.log_b + (1.0 - w) * self._logb_prior)
+
+
+# --- the fleet bank: m per-server estimators, one fused update ----------------
+
+#: the banked update is ``_bank_core`` jitted as-is (m from the state shape)
+_update_bank = partial(
+    jax.jit,
+    static_argnames=("lr", "decay", "step_damp", "solo_eps", "max_lost_frac",
+                     "use_pallas", "interpret"),
+)(_bank_core)
+
+
+class EstimatorBank:
+    """m per-server :class:`StreamingEstimator`\\ s updated by one program.
+
+    The fleet-scale front half of the closed loop: ``AdaptiveEngine`` (and
+    anything else holding one estimator per server) folds a trace block into
+    every server's estimator with a single ``update_device`` call -- the
+    batch streams through the fused program once, with per-server scatters,
+    instead of once per server. The member estimators stay the source of
+    truth for reads (``estimate_D`` etc.) and for the host ``update`` path;
+    the bank stacks their device states before each fused run and hands the
+    split states back after, so banked and member-wise updates interleave
+    freely.
+
+    All members must share hyperparameters (asserted) -- they are per-server
+    *states*, not per-server policies.
+
+    Between banked updates the stacked [m, ...] state is the live copy (the
+    members are not re-split per call -- back-to-back banked updates touch
+    only the stacked arrays); it flushes back into the members lazily, the
+    first time any member's state is read or mutated outside the bank.
+    """
+
+    def __init__(self, estimators: "list[StreamingEstimator]"):
+        if not estimators:
+            raise ValueError("EstimatorBank needs at least one estimator")
+        e0 = estimators[0]
+        for e in estimators[1:]:
+            same = (e.T == e0.T and e.lr == e0.lr and e.decay == e0.decay
+                    and e.step_damp == e0.step_damp and e.solo_eps == e0.solo_eps
+                    and e.max_lost_frac == e0.max_lost_frac)
+            if not same:
+                raise ValueError("banked estimators must share hyperparameters")
+        self.estimators = list(estimators)
+        self._stacked: DeviceEstimatorState | None = None
+        self._dirty = False  # stacked state is ahead of the members
+        for e in self.estimators:
+            e._bank = self
+
+    def _invalidate(self) -> None:
+        """A member moved ahead of the stacked copy: restack on next update."""
+        self._stacked = None
+
+    def _flush(self) -> None:
+        """Split the stacked state back into the members (lazy, idempotent)."""
+        if self._dirty:
+            self._dirty = False  # first: _absorb_device re-enters via _pull
+            for s, est in enumerate(self.estimators):
+                est._absorb_device(
+                    DeviceEstimatorState(*(a[s] for a in self._stacked)))
+
+    def update_device(self, block: RingBlock, sync: bool = True):
+        """One fused observe -> estimate step for every server's estimator.
+
+        Rows update the estimator their ``server`` column names; rows with a
+        server outside [0, m) (including voided rows) are dropped. Returns
+        the total rows consumed (host int when ``sync``, device scalar
+        otherwise).
+        """
+        e0 = self.estimators[0]
+        if self._stacked is None:
+            self._stacked = DeviceEstimatorState(
+                *(jnp.stack(parts)
+                  for parts in zip(*(e.device_state() for e in self.estimators))))
+        use_pallas = e0.scatter == "pallas" or (
+            e0.scatter == "auto" and jax.default_backend() == "tpu")
+        new, used = _update_bank(
+            self._stacked, block,
+            lr=float(e0.lr), decay=float(e0.decay),
+            step_damp=float(e0.step_damp), solo_eps=float(e0.solo_eps),
+            max_lost_frac=float(e0.max_lost_frac),
+            use_pallas=use_pallas, interpret=jax.default_backend() != "tpu")
+        self._stacked = new
+        self._dirty = True
+        return int(used) if sync else used

@@ -28,12 +28,28 @@ log (completion times and co-residency intervals from the scheduler's own
 records). The streaming estimator (``telemetry.estimator``) recovers the
 paper's empirical foundation -- per-type base rates and the pairwise D-matrix
 -- from exactly this.
+
+Two representations of the same stream live here:
+
+* :class:`ObservationLog` -- the host-side numpy batch, one row per
+  *completed* run, filtered at construction. The reference representation,
+  and what the host estimator path consumes.
+* :class:`ObservationRing` -- the device-resident fixed-capacity ring buffer
+  the fleet-scale path streams through. Rows keep the trace's fixed shape and
+  carry a **validity mask** instead of being host-filtered: never-placed /
+  never-finished arrivals occupy a slot with ``valid=False`` and are dropped
+  by the estimator's scatter (their type scatters out of range), so the whole
+  observe -> estimate path stays inside one jax program with no ``np.asarray``
+  round trip per segment (``StreamingEstimator.update_device``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from functools import partial
+from typing import Iterable, NamedTuple, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -124,4 +140,263 @@ def observations_from_trace(
         geo_rate=np.exp(obs_logr / duration),
         co_counts=obs_co / duration[:, None],
         lost_frac=np.clip(obs_lost / duration, 0.0, 1.0),
+    )
+
+
+# --- the device-resident stream ----------------------------------------------
+
+class RingBlock(NamedTuple):
+    """One fixed-shape block of observation rows, resident on device.
+
+    The device twin of an :class:`ObservationLog` batch: same per-run
+    quantities, but invalid rows (never placed, never finished, zero-length)
+    stay in place with ``valid=False`` instead of being filtered -- every
+    array keeps the trace's static shape, so the block can flow straight from
+    ``run_trace`` into the jitted estimator update. ``y`` is the estimator's
+    regressand ``log(geo_rate)`` directly (the only form the estimator ever
+    takes the rate in).
+
+    Storage is **packed into three arrays** (the integer fields, the scalar
+    float fields, and the co-residency matrix): a ring push then costs three
+    in-place slice writes instead of seven, and the named accessors below are
+    lazy column slices that fuse into whatever jitted consumer reads them.
+    The scalar array also carries two *materialized columns* derived from the
+    co matrix (its row sum and squared row norm): they are computed once
+    where the row is born, so every later estimator refresh -- which may
+    re-read a ring window -- saves two full passes over the [n, T] matrix.
+    """
+
+    ints: jax.Array  # i32[n, 2]: (wtype, server); -1 on invalid rows
+    scalars: jax.Array  # f32[n, 6]: (duration, y, lost_frac, valid, co_sum, co_sq)
+    co: jax.Array  # f32[n, T] time-averaged co-resident type counts
+
+    # NB: tuple semantics (len == 3 fields) must stay intact for namedtuple
+    # machinery and pytree flattening -- row count is a property instead
+    rows = property(lambda s: int(s.ints.shape[0]))
+
+    @property
+    def T(self) -> int:
+        return int(self.co.shape[1])
+
+    wtype = property(lambda s: s.ints[:, 0])  # grid type per row
+    server = property(lambda s: s.ints[:, 1])  # placement server
+    duration = property(lambda s: s.scalars[:, 0])  # place -> finish wall time
+    y = property(lambda s: s.scalars[:, 1])  # log geometric-mean throughput
+    lost_frac = property(lambda s: s.scalars[:, 2])  # run fraction past the TDP
+    valid = property(lambda s: s.scalars[:, 3] > 0.5)  # row is a real observation
+    co_sum = property(lambda s: s.scalars[:, 4])  # total co-resident exposure
+    co_sq = property(lambda s: s.scalars[:, 5])  # squared norm of the co row
+
+    @classmethod
+    def build(cls, wtype, server, duration, y, co, lost_frac, valid) -> "RingBlock":
+        """Pack per-field arrays (device or host) into the stored layout."""
+        f32 = jnp.float32
+        co = jnp.asarray(co, f32)
+        return cls(
+            ints=jnp.stack([jnp.asarray(wtype, jnp.int32),
+                            jnp.asarray(server, jnp.int32)], axis=1),
+            scalars=jnp.stack([jnp.asarray(duration, f32), jnp.asarray(y, f32),
+                               jnp.asarray(lost_frac, f32),
+                               jnp.asarray(valid, f32),
+                               co.sum(axis=1), (co * co).sum(axis=1)], axis=1),
+            co=co,
+        )
+
+
+def _rows_from_trace(trace, arr_type: jax.Array, min_duration: float = 1e-12) -> RingBlock:
+    place = trace.place_time
+    finish = trace.finish_time
+    duration = finish - place
+    ok = ((trace.placement >= 0) & (place >= 0.0)
+          & jnp.isfinite(finish) & (duration > min_duration))
+    dur = jnp.where(ok, duration, 1.0)  # dummy divisor on voided rows
+    return RingBlock.build(
+        wtype=jnp.where(ok, arr_type.astype(jnp.int32), -1),
+        server=jnp.where(ok, trace.placement.astype(jnp.int32), -1),
+        duration=jnp.where(ok, duration, 0.0),
+        y=trace.obs_logr / dur,
+        co=trace.obs_co / dur[:, None],
+        lost_frac=jnp.clip(trace.obs_lost / dur, 0.0, 1.0),
+        valid=ok,
+    )
+
+
+def rows_from_trace(trace, arr_type: jax.Array, min_duration: float = 1e-12) -> RingBlock:
+    """Device-side :func:`observations_from_trace`: trace -> masked rows.
+
+    Same completion semantics (never-placed / never-finished / sub-
+    ``min_duration`` runs are not observations) but expressed as a validity
+    mask over the trace's fixed arrival axis instead of host-side filtering,
+    so the block never leaves the device.
+    """
+    return _rows_from_trace_jit(trace, jnp.asarray(arr_type), min_duration)
+
+
+_rows_from_trace_jit = jax.jit(_rows_from_trace)
+
+
+def _write_rows_contig(buf: RingBlock, block: RingBlock, ptr) -> RingBlock:
+    """In-place slice write of a non-wrapping block (shared by both jitted
+    push programs -- the packed layout lives in exactly one place)."""
+    return RingBlock(*(
+        jax.lax.dynamic_update_slice(
+            b, v.astype(b.dtype), (ptr,) + (0,) * (b.ndim - 1))
+        for b, v in zip(buf, block)))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _ring_write_trace(
+    buf: RingBlock, trace, arr_type: jax.Array, ptr: jax.Array, min_duration: float
+) -> tuple[RingBlock, RingBlock]:
+    """Fused trace -> rows -> contiguous ring write: one program launch per
+    segment on the ingest hot path (returns the written block as well)."""
+    block = _rows_from_trace(trace, arr_type, min_duration)
+    return _write_rows_contig(buf, block, ptr), block
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _ring_write(buf: RingBlock, block: RingBlock, ptr: jax.Array) -> RingBlock:
+    """Scatter ``block``'s rows into the ring at [ptr, ptr + n) mod capacity."""
+    n = block.wtype.shape[0]
+    idx = (ptr + jnp.arange(n)) % buf.wtype.shape[0]
+    return RingBlock(*(b.at[idx].set(v.astype(b.dtype))
+                       for b, v in zip(buf, block)))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _ring_write_contig(buf: RingBlock, block: RingBlock, ptr: jax.Array) -> RingBlock:
+    """Contiguous fast path: the block fits without wrapping, so every array
+    updates with one in-place dynamic slice (cheaper than the general
+    modular scatter -- and the common case, since pushes are segment-sized
+    and capacities are segment multiples)."""
+    return _write_rows_contig(buf, block, ptr)
+
+
+class ObservationRing:
+    """Fixed-capacity device-resident ring of observation rows.
+
+    The working set of the fleet-scale estimator (ISSUE 4 / ROADMAP
+    "telemetry at fleet scale"): completion telemetry accumulates here across
+    traces as fixed-shape :class:`RingBlock` rows -- validity mask included,
+    no host filtering -- and the estimator's fused ``update_device`` consumes
+    blocks (or re-reads ring windows) without materializing a host
+    :class:`ObservationLog`. Capacity is spent in *trace rows*, valid or not:
+    a voided row (arrival that never completed) occupies its slot like any
+    other, which keeps every push a static-shape scatter. Once full, the
+    oldest rows are overwritten -- exactly the forgetting a bounded
+    observation window is supposed to do.
+
+    The ring is a host-side object holding device arrays; pushes mutate it in
+    place (the underlying jitted scatter donates the old buffers, so a push
+    does not copy the ring).
+    """
+
+    def __init__(self, capacity: int, T: int):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive (got {capacity})")
+        self.capacity = int(capacity)
+        self._buf = RingBlock(
+            ints=jnp.full((capacity, 2), -1, jnp.int32),
+            scalars=jnp.zeros((capacity, 6), jnp.float32),
+            co=jnp.zeros((capacity, T), jnp.float32),
+        )
+        self.ptr = 0  # next write slot
+        self.total = 0  # rows ever pushed (valid or not)
+
+    @property
+    def T(self) -> int:
+        return self._buf.T
+
+    def __len__(self) -> int:
+        """Rows currently held (ring slots written at least once)."""
+        return min(self.total, self.capacity)
+
+    def push(self, block: RingBlock) -> RingBlock:
+        """Append one block of rows; returns the block (for chained updates).
+
+        Blocks longer than the ring keep only their newest ``capacity`` rows
+        (the older ones would have been overwritten within the same push).
+        """
+        n = block.rows
+        if n == 0:
+            return block
+        if n > self.capacity:
+            block = RingBlock(*(a[n - self.capacity:] for a in block))
+            n = self.capacity
+        write = _ring_write_contig if self.ptr + n <= self.capacity else _ring_write
+        self._buf = write(self._buf, block, jnp.int32(self.ptr))
+        self.ptr = (self.ptr + n) % self.capacity
+        self.total += n
+        return block
+
+    def push_trace(self, trace, arr_type: jax.Array, min_duration: float = 1e-12) -> RingBlock:
+        """Fold one telemetry-enabled ``EngineTrace`` into the ring, on device.
+
+        The common case (the block fits before the wrap point) fuses the
+        trace -> rows conversion and the ring write into one program launch.
+        """
+        arr_type = jnp.asarray(arr_type)
+        n = int(arr_type.shape[0])
+        if n == 0:
+            return rows_from_trace(trace, arr_type, min_duration)
+        if self.ptr + n <= self.capacity:
+            self._buf, block = _ring_write_trace(
+                self._buf, trace, arr_type, jnp.int32(self.ptr), min_duration)
+            self.ptr = (self.ptr + n) % self.capacity
+            self.total += n
+            return block
+        return self.push(rows_from_trace(trace, arr_type, min_duration))
+
+    def view(self) -> RingBlock:
+        """The ring's full contents as one masked block (device arrays).
+
+        Never-written slots carry ``valid=False`` (and type -1), so the view
+        is safe to feed to any masked consumer regardless of fill level.
+
+        Lifetime: a view is valid until the **next push** -- pushes donate
+        the underlying buffers to the in-place write, which deletes the
+        arrays a previously returned view holds (reading one afterwards
+        raises jax's "Array has been deleted"). Consume the view (or copy
+        it) before pushing again; dispatching a jitted consumer before the
+        push is safe -- in-flight reads complete before donation reuses the
+        buffers.
+        """
+        return self._buf
+
+    def host_log(self) -> ObservationLog:
+        """Host :class:`ObservationLog` of the currently-valid rows.
+
+        Debug/test view: ``rate`` mirrors ``geo_rate`` (the ring does not
+        keep per-run byte totals -- the estimator never consumes the
+        arithmetic rate).
+        """
+        ints = np.asarray(self._buf.ints)
+        scalars = np.asarray(self._buf.scalars, np.float64)
+        valid = scalars[:, 3] > 0.5
+        geo = np.exp(scalars[valid, 1])
+        return ObservationLog(
+            wtype=ints[valid, 0].astype(np.int32),
+            server=ints[valid, 1].astype(np.int32),
+            duration=scalars[valid, 0],
+            rate=geo,
+            geo_rate=geo,
+            co_counts=np.asarray(self._buf.co, np.float64)[valid],
+            lost_frac=scalars[valid, 2],
+        )
+
+
+def block_from_log(obs: ObservationLog) -> RingBlock:
+    """Lift a host :class:`ObservationLog` to a device block (all rows valid).
+
+    The bridge for tests and host-collected streams: the device estimator
+    path consumes the result exactly as it consumes trace-born blocks.
+    """
+    return RingBlock.build(
+        wtype=np.asarray(obs.wtype, np.int32),
+        server=np.asarray(obs.server, np.int32),
+        duration=np.asarray(obs.duration, np.float32),
+        y=np.log(np.asarray(obs.geo_rate, np.float64)).astype(np.float32),
+        co=np.asarray(obs.co_counts, np.float32),
+        lost_frac=np.asarray(obs.lost_frac, np.float32),
+        valid=np.ones(len(obs), np.float32),
     )

@@ -115,18 +115,20 @@ def test_consolidation_scores_vs_ref_and_model():
         (1, 16, 128),  # single observation
         (7, 230, 128),  # smaller than one block (padding path)
         (128, 230, 64),  # multiple full blocks
-        (300, 64, 128),  # partial last block
+        (300, 64, 128),  # partial last block (B not a block_b multiple)
+        (193, 64, 64),  # partial last block, exact smaller blocking
     ],
 )
 def test_pair_scatter_vs_ref(B, T, block_b):
     """Telemetry pair-statistic scatter kernel vs the float64 numpy oracle.
 
-    Includes out-of-range types (-1): the wrapper's padding convention, which
-    must contribute nothing, exactly like the reference's explicit skip."""
+    Includes out-of-range types on *both* sides (-1, the wrapper's padding
+    convention, and >= T, a masked/corrupt row): they must contribute
+    nothing, exactly like the reference's explicit skip."""
     from repro.kernels.telemetry import pair_scatter
 
     rng = np.random.default_rng(B * 1000 + T)
-    types = rng.integers(-1, T, size=B).astype(np.int32)
+    types = rng.integers(-1, T + 2, size=B).astype(np.int32)
     cbar = (rng.random((B, T)) * 2).astype(np.float32)
     vals = rng.normal(size=B).astype(np.float32)
     pair, base = pair_scatter(jnp.asarray(types), jnp.asarray(cbar),
@@ -136,20 +138,70 @@ def test_pair_scatter_vs_ref(B, T, block_b):
     np.testing.assert_allclose(np.asarray(base), base_ref, atol=2e-5, rtol=1e-5)
 
 
+@pytest.mark.parametrize("B,T,K,block_b", [
+    (40, 64, 2, 128),  # the estimator's stacked (residual, weight) pair
+    (300, 32, 3, 128),  # partial last block with a stacked axis
+    (64, 230, 1, 64),  # K=1 stacked differs from the squeezed 1-D contract
+])
+def test_pair_scatter_stacked_statistics(B, T, K, block_b):
+    """The kernel scatters K stacked statistics in one pass ([K, B] vals ->
+    [K, T, T] / [K, T]), matching the float64 oracle per statistic."""
+    from repro.kernels.telemetry import pair_scatter
+
+    rng = np.random.default_rng(B + T + K)
+    types = rng.integers(-1, T, size=B).astype(np.int32)
+    cbar = (rng.random((B, T)) * 2).astype(np.float32)
+    vals = rng.normal(size=(K, B)).astype(np.float32)
+    pair, base = pair_scatter(jnp.asarray(types), jnp.asarray(cbar),
+                              jnp.asarray(vals), block_b=block_b, interpret=True)
+    assert pair.shape == (K, T, T) and base.shape == (K, T)
+    pair_ref, base_ref = ref.pair_scatter_ref(types, cbar, vals)
+    np.testing.assert_allclose(np.asarray(pair), pair_ref, atol=2e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(base), base_ref, atol=2e-5, rtol=1e-5)
+    # stacking must agree with K independent single-statistic passes
+    for k in range(K):
+        p1, b1 = pair_scatter(jnp.asarray(types), jnp.asarray(cbar),
+                              jnp.asarray(vals[k]), block_b=block_b, interpret=True)
+        np.testing.assert_array_equal(np.asarray(p1), np.asarray(pair[k]))
+        np.testing.assert_array_equal(np.asarray(b1), np.asarray(base[k]))
+
+
+def test_pair_scatter_empty_batch_all_backends():
+    """B = 0 returns zeros of the right shape on every backend, 1-D and
+    stacked (the engine's empty-segment path hits this)."""
+    from repro.kernels.telemetry import pair_scatter
+    from repro.telemetry.estimator import make_scatter
+
+    T = 16
+    e_types = np.zeros(0, np.int32)
+    e_cbar = np.zeros((0, T))
+    pair, base = pair_scatter(jnp.asarray(e_types), jnp.asarray(e_cbar),
+                              jnp.zeros((3, 0)), interpret=True)
+    assert pair.shape == (3, T, T) and base.shape == (3, T)
+    assert not np.asarray(pair).any() and not np.asarray(base).any()
+    for backend in ("numpy", "jnp", "pallas"):
+        p, b = make_scatter(backend)(e_types, e_cbar, np.zeros(0))
+        assert p.shape == (T, T) and b.shape == (T,)
+        assert not np.asarray(p).any() and not np.asarray(b).any()
+
+
 def test_pair_scatter_matches_estimator_backends():
-    """All three scatter backends implement one contract (estimator view)."""
+    """All three scatter backends implement one contract (estimator view),
+    1-D and stacked. Tolerance reflects full-f32 accumulation: the jnp
+    backend is jitted once and contracts with an explicit
+    ``preferred_element_type`` (no bf16 downcast drift on any device)."""
     from repro.telemetry.estimator import make_scatter
 
     rng = np.random.default_rng(0)
     B, T = 40, 230
     types = rng.integers(0, T, size=B).astype(np.int32)
     cbar = (rng.random((B, T)) < 0.02).astype(np.float64) * rng.random((B, T))
-    vals = rng.normal(size=B)
-    want = make_scatter("numpy")(types, cbar, vals)
-    for backend in ("jnp", "pallas"):
-        got = make_scatter(backend)(types, cbar, vals)
-        np.testing.assert_allclose(got[0], want[0], atol=1e-5)
-        np.testing.assert_allclose(got[1], want[1], atol=1e-5)
+    for vals in (rng.normal(size=B), rng.normal(size=(2, B))):
+        want = make_scatter("numpy")(types, cbar, vals)
+        for backend in ("jnp", "pallas"):
+            got = make_scatter(backend)(types, cbar, vals)
+            np.testing.assert_allclose(got[0], want[0], atol=1e-6)
+            np.testing.assert_allclose(got[1], want[1], atol=1e-6)
 
 
 def test_flash_attention_matches_model_layer():

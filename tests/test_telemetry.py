@@ -21,8 +21,11 @@ from repro.core import (
 from repro.core.contention import pair_slowdown_matrices, type_tables
 from repro.core.workload import FS_GRID, RS_GRID
 from repro.telemetry import (
+    EstimatorBank,
     ObservationLog,
+    ObservationRing,
     StreamingEstimator,
+    block_from_log,
     congestion_at,
     degrade_server,
 )
@@ -130,6 +133,79 @@ def test_estimator_prior_fallback_below_confidence_floor():
     assert not est.observed_mask().any()
 
 
+# --- chunking invariance (exposure-based decay, ISSUE 4 satellite) -----------
+
+def _check_chunking_invariance(seed, splits=8):
+    """Split-vs-merged equivalence with decay < 1.
+
+    Decay compounds per observation-unit with matching triangular weights
+    inside each batch, so the *confidence state* (n_pair / n_base -- the
+    half-life the old per-call decay silently tied to chunk size) must be
+    bitwise-equivalent however the stream is chunked. The point estimates
+    take batch-sequential LMS steps, so they agree to first order near
+    convergence; both estimators are warmed on an identical stream first and
+    the continuation's estimates are then compared tightly."""
+    solo, L, D_true = _truth(M1)
+    rng = np.random.default_rng(seed)
+    pool_idx = rng.choice(T, size=8, replace=False)
+    kw = dict(T=T, prior_D=0.0, prior_solo=solo, lr=0.6, decay=0.995,
+              confidence_floor=2.0, scatter="numpy")
+    merged_est, split_est = StreamingEstimator(**kw), StreamingEstimator(**kw)
+    for _ in range(30):  # identical warm-up on both replicas
+        batch = _synthetic_batch(rng, pool_idx, solo, L, B=64, noise=0.005)
+        merged_est.update(batch)
+        split_est.update(batch)
+
+    tail = [_synthetic_batch(rng, pool_idx, solo, L, B=32, noise=0.005)
+            for _ in range(splits)]
+    merged_est.update(ObservationLog.merge(tail))
+    for b in tail:
+        split_est.update(b)
+
+    # the confidence state is exactly chunk-invariant
+    np.testing.assert_allclose(merged_est.n_pair, split_est.n_pair,
+                               rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(merged_est.n_base, split_est.n_base,
+                               rtol=1e-12, atol=1e-12)
+    assert merged_est.n_obs == split_est.n_obs
+    # point estimates: first-order invariant (identical LMS fixed point)
+    np.testing.assert_allclose(merged_est.estimate_D(), split_est.estimate_D(),
+                               atol=0.01)
+    np.testing.assert_allclose(np.log(merged_est.estimate_solo()),
+                               np.log(split_est.estimate_solo()), atol=0.01)
+
+
+def test_estimator_chunking_invariance():
+    _check_chunking_invariance(0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=1, max_value=10_000))
+def test_estimator_chunking_invariance_property(seed):
+    _check_chunking_invariance(seed)
+
+
+def test_confidence_half_life_independent_of_chunking():
+    """The regression the decay fix targets: under the old per-call decay, 8
+    small updates forgot confidence 8x faster than 1 merged update of the
+    same observations. Now the decayed mass depends only on the stream."""
+    solo, L, _ = _truth(M1)
+    rng = np.random.default_rng(3)
+    pool_idx = rng.choice(T, size=6, replace=False)
+    kw = dict(T=T, prior_D=0.0, prior_solo=solo, lr=0.5, decay=0.99,
+              scatter="numpy")
+    a, b = StreamingEstimator(**kw), StreamingEstimator(**kw)
+    seed_batch = _synthetic_batch(rng, pool_idx, solo, L, B=64)
+    a.update(seed_batch)
+    b.update(seed_batch)
+    # same continuation stream, chunked 1-vs-4
+    cont = [_synthetic_batch(rng, pool_idx, solo, L, B=16) for _ in range(4)]
+    a.update(ObservationLog.merge(cont))
+    for c in cont:
+        b.update(c)
+    np.testing.assert_allclose(a.n_pair.sum(), b.n_pair.sum(), rtol=1e-12)
+
+
 # --- engine-driven observations (the real loop) ------------------------------
 
 def _pair_trace(server, seed, n_arrivals=48, passes=3.0):
@@ -168,9 +244,10 @@ def _check_engine_convergence(server, est, seed, rounds=5,
 
 
 def _fresh_estimator():
+    # decay is per observation-unit: 0.9926^48 ~ 0.7 per 48-arrival round
     return StreamingEstimator(
         T=T, prior_D=0.0, prior_solo=type_tables(M1)["solo"], lr=0.6,
-        decay=0.7, confidence_floor=2.0, scatter="numpy")
+        decay=0.9926, confidence_floor=2.0, scatter="numpy")
 
 
 def test_estimate_converges_to_profiled_D_from_engine_trace():
@@ -245,7 +322,8 @@ def test_adaptive_engine_regret_shrinks_and_recovers():
     # rates, which placement does not consult -- no regret spike to recover)
     drift = congestion_at(servers, drift_at, server=0, factor=0.4)
 
-    adaptive = AdaptiveEngine(servers, prior=0.0, drift=drift, decay=0.9,
+    # per-observation-unit decay: 0.9956^24 ~ 0.9 per 24-arrival segment
+    adaptive = AdaptiveEngine(servers, prior=0.0, drift=drift, decay=0.9956,
                               scatter="numpy")
     res = adaptive.run(_replayed_trace(seg, K), segments=K)
     assert res.total_obs >= K * len(seg) // 2
@@ -282,3 +360,177 @@ def test_adaptive_engine_profiled_prior_matches_oracle_immediately():
     want = oracle.run(sorted(seg, key=lambda tw: tw[0]), backend="jax")
     assert res.segments[0].placements == want.placements
     assert res.segments[0].makespan == pytest.approx(want.makespan, rel=1e-6)
+
+
+# --- the device-resident stream (ISSUE 4 tentpole) ---------------------------
+
+def _obs_batch(rng, m=1, B=64):
+    """A synthetic host batch with co-runs, solos, and lost-frac outliers."""
+    t = rng.integers(0, T, B).astype(np.int32)
+    co = np.zeros((B, T))
+    for b in range(B):
+        for c in rng.choice(T, size=rng.integers(0, 4)):
+            co[b, c] += 1.0
+    y = rng.normal(0.0, 0.3, B) + 1.0
+    return ObservationLog(
+        wtype=t, server=rng.integers(0, m, B).astype(np.int32),
+        duration=np.ones(B), rate=np.exp(y), geo_rate=np.exp(y), co_counts=co,
+        lost_frac=(rng.random(B) < 0.1) * 0.9)
+
+
+def test_update_device_matches_host_estimator():
+    """Acceptance: the fused device path reproduces the host numpy estimator
+    on the same observation stream (L, log_b, n_pair within atol 1e-5)."""
+    rng = np.random.default_rng(0)
+    kw = dict(T=T, prior_D=0.0, lr=0.5, decay=0.995, confidence_floor=2.0,
+              scatter="numpy")
+    host, dev = StreamingEstimator(**kw), StreamingEstimator(**kw)
+    used_h = used_d = 0
+    for _ in range(12):
+        log = _obs_batch(rng)
+        used_h += host.update(log)
+        used_d += dev.update_device(block_from_log(log))
+    assert used_h == used_d and host.n_obs == dev.n_obs
+    np.testing.assert_allclose(host.L, dev.L, atol=1e-5)
+    np.testing.assert_allclose(host.log_b, dev.log_b, atol=1e-5)
+    np.testing.assert_allclose(host.n_pair, dev.n_pair, atol=1e-5)
+    np.testing.assert_allclose(host.n_base, dev.n_base, atol=1e-5)
+    np.testing.assert_allclose(host.estimate_D(), dev.estimate_D(), atol=1e-5)
+
+
+def test_update_device_matches_host_on_engine_telemetry():
+    """Same acceptance contract on real engine traces: telemetry='device'
+    blocks fed through update_device land where the host log path lands."""
+    engine = ConsolidationEngine([M1], D=profile_pairwise_fast(M1))
+    kw = dict(T=T, prior_D=0.0, prior_solo=type_tables(M1)["solo"], lr=0.6,
+              decay=0.9926, confidence_floor=2.0, scatter="numpy")
+    host, dev = StreamingEstimator(**kw), StreamingEstimator(**kw)
+    for r in range(3):
+        arrivals = _pair_trace(M1, seed=100 + r)
+        res_h = engine.run(arrivals, backend="jax", telemetry=True)
+        res_d = engine.run(arrivals, backend="jax", telemetry="device")
+        assert res_d.observations is None and res_d.stream_block is not None
+        uh = host.update(res_h.observations)
+        ud = dev.update_device(res_d.stream_block, server=0)
+        assert uh == ud
+    np.testing.assert_allclose(host.L, dev.L, atol=1e-5)
+    np.testing.assert_allclose(host.log_b, dev.log_b, atol=1e-5)
+    np.testing.assert_allclose(host.n_pair, dev.n_pair, atol=1e-5)
+
+
+def test_observation_ring_wrap_and_validity():
+    """Rows keep their fixed shape; the mask -- not host filtering -- voids
+    incomplete rows; once full, the oldest rows are overwritten."""
+    rng = np.random.default_rng(1)
+    ring = ObservationRing(capacity=96, T=T)
+    logs = [_obs_batch(rng, B=40) for _ in range(4)]
+    for log in logs:
+        blk = ring.push(block_from_log(log))
+        assert blk.rows == 40
+    assert len(ring) == 96 and ring.total == 160 and ring.ptr == 160 % 96
+    # the ring holds exactly the newest 96 rows (all valid here)
+    held = ring.host_log()
+    want = ObservationLog.merge(logs).select(np.arange(160 - 96, 160))
+    np.testing.assert_array_equal(np.sort(held.wtype), np.sort(want.wtype))
+    # invalid rows occupy slots but are masked out of the host view
+    blk = block_from_log(_obs_batch(rng, B=10))
+    blk = blk._replace(scalars=np.asarray(blk.scalars).copy())
+    scalars = np.asarray(blk.scalars)
+    scalars[::2, 3] = 0.0  # void every other row
+    import jax.numpy as jnp
+
+    ring2 = ObservationRing(capacity=16, T=T)
+    ring2.push(blk._replace(scalars=jnp.asarray(scalars)))
+    assert len(ring2) == 10
+    assert len(ring2.host_log()) == 5
+    # oversize pushes keep only the newest capacity rows
+    ring3 = ObservationRing(capacity=8, T=T)
+    ring3.push(block_from_log(_obs_batch(rng, B=20)))
+    assert len(ring3) == 8 and ring3.total == 8
+
+
+def test_estimator_bank_matches_per_server_updates():
+    """One banked fused update == m independent per-server host updates."""
+    m = 3
+    rng = np.random.default_rng(2)
+    kw = dict(T=T, prior_D=0.0, lr=0.5, decay=0.995, confidence_floor=2.0,
+              scatter="numpy")
+    hosts = [StreamingEstimator(**kw) for _ in range(m)]
+    bank = EstimatorBank([StreamingEstimator(**kw) for _ in range(m)])
+    for _ in range(6):
+        log = _obs_batch(rng, m=m, B=96)
+        used_h = sum(hosts[s].update(log.for_server(s)) for s in range(m))
+        used_b = bank.update_device(block_from_log(log))
+        assert used_h == used_b
+    for s in range(m):
+        np.testing.assert_allclose(hosts[s].L, bank.estimators[s].L, atol=1e-5)
+        np.testing.assert_allclose(hosts[s].log_b, bank.estimators[s].log_b,
+                                   atol=1e-5)
+        np.testing.assert_allclose(hosts[s].n_pair, bank.estimators[s].n_pair,
+                                   atol=1e-5)
+        assert hosts[s].n_obs == bank.estimators[s].n_obs
+
+
+def test_adaptive_engine_stream_mode_matches_host_mode():
+    """stream=True (ring + banked device updates, no host ObservationLog)
+    places like the host-log loop and lands on the same estimates."""
+    servers = [M1, M2]
+    rng = np.random.default_rng(7)
+    seg = []
+    t = 0.0
+    for _ in range(20):
+        w = _POOL[int(rng.integers(len(_POOL)))]
+        t += float(rng.exponential(2e-5))
+        seg.append((t, Workload(fs=w.fs, rs=w.rs, data_total=w.fs * 6)))
+    arrivals = [(t + j * 10.0, w) for j in range(4) for t, w in seg]
+
+    host = AdaptiveEngine(servers, prior=0.0, decay=0.996, scatter="jnp")
+    res_h = host.run(arrivals, segments=4)
+    stream = AdaptiveEngine(servers, prior=0.0, decay=0.996, scatter="jnp",
+                            stream=True, ring_capacity=256)
+    res_s = stream.run(arrivals, segments=4)
+
+    assert res_s.n_obs == res_h.n_obs
+    assert stream.ring.total == sum(len(r.placements) for r in res_s.segments)
+    for rh, rs in zip(res_h.segments, res_s.segments):
+        assert rh.placements == rs.placements
+        assert rs.observations is None  # no host log was materialized
+    for s in range(len(servers)):
+        np.testing.assert_allclose(
+            host.estimators[s].estimate_D(),
+            stream.estimators[s].estimate_D(), atol=1e-4)
+        np.testing.assert_allclose(
+            host.estimators[s].log_b, stream.estimators[s].log_b, atol=1e-4)
+
+    # a ring smaller than a segment bounds the *history*, never the update:
+    # estimators still consume every observation (regression: the bank used
+    # to be fed the push's capacity-truncated return)
+    tiny = AdaptiveEngine(servers, prior=0.0, decay=0.996, scatter="jnp",
+                          stream=True, ring_capacity=8)
+    res_t = tiny.run(arrivals, segments=4)
+    assert res_t.n_obs == res_h.n_obs
+    # the ring kept only the newest capacity rows of each oversize push
+    assert len(tiny.ring) == 8 and tiny.ring.total == 4 * 8
+
+
+def test_adaptive_engine_caches_segment_engines():
+    """Unchanged specs reuse the engine (set_D swaps only the scoring D);
+    drift boundaries rebuild, revisited worlds reuse cached dynamics."""
+    servers = [M1, M2]
+    plain = AdaptiveEngine(servers, prior=0.0, scatter="numpy")
+    e0 = plain.engine_for_segment(0)
+    e1 = plain.engine_for_segment(1)
+    assert e0 is e1  # no drift: one engine, D refreshed in place
+    plain.estimators[0].n_pair = np.full((T, T), 10.0)
+    plain.estimators[0].L = np.log1p(-np.full((T, T), 0.3))
+    e2 = plain.engine_for_segment(2)
+    assert e2 is e0
+    np.testing.assert_allclose(np.asarray(e2.cluster.D[0]),
+                               plain.estimators[0].estimate_D(), atol=1e-6)
+
+    drift = congestion_at(servers, 2, server=0, factor=0.4)
+    drifted = AdaptiveEngine(servers, prior=0.0, drift=drift, scatter="numpy")
+    d0, d1 = drifted.engine_for_segment(0), drifted.engine_for_segment(1)
+    d2, d3 = drifted.engine_for_segment(2), drifted.engine_for_segment(3)
+    assert d0 is d1 and d2 is not d1 and d2 is d3
+    assert d0._dyn is not None and d2._dyn is not None  # cached, not lazy
