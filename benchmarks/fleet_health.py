@@ -1,0 +1,281 @@
+"""Fleet-health benchmark: pooled warm-up, CUSUM latency, failure eviction.
+
+Three questions about the `repro.fleet` control plane (DESIGN.md §11), each
+a ROADMAP scenario, all answered under the multi-tenant noise world where
+relevant:
+
+  warm-up   How much faster does a *pooled* estimator reach the per-server
+            regret floor, and how much unit-to-unit hardware variance
+            (``perturb_spec`` scale) can one shared profile absorb before
+            per-server estimation pays for itself? Sweeps scale in
+            {0, 0.05, 0.1, 0.2}; the acceptance bar is pooled reaching the
+            floor in <= 1/2 the observations at scale <= 0.05.
+  split     How quickly does the CUSUM notice a genuinely diverged pool
+            member? A deterministic ``congest_server`` divergence is
+            injected on one server *under* stochastic co-tenant noise on
+            the others (``stochastic_congestion``); the bar is a split
+            within 3 segments of the injection.
+  evict     Does the failure path close? One server ``gradual_decay``\\ s
+            toward zero; the bar is an eviction event after which the
+            decayed server receives zero placements, with its in-flight
+            work requeued onto survivors.
+
+Protocol (warm-up): one stationary segment replayed K times, exactly the
+``adaptive_regret`` protocol -- the oracle (true profiled D per unit) is a
+constant per fleet, so every change in segment duration is attributable to
+the estimates. Pooled and per-server engines see identical traces.
+
+``--smoke`` shrinks the fleet and trace for CI and additionally pushes one
+update through the Pallas stacked scatter in interpret mode so the kernel
+path behind the pooled bank runs on every PR.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import MeshConfig
+from repro.core import (
+    M1,
+    AdaptiveEngine,
+    ConsolidationEngine,
+    Workload,
+    profile_pairwise_fast,
+    snap_to_grid,
+)
+from repro.core.workload import FS_GRID, RS_GRID
+from repro.fleet import FleetController
+from repro.telemetry import (
+    congestion_at,
+    gradual_decay,
+    merge_schedules,
+    stochastic_congestion,
+)
+
+#: the warm-up protocol is exactly adaptive_regret's -- share its trace
+#: generator and replay gap so the two benchmarks' baselines cannot drift
+from .adaptive_regret import SEG_GAP, _segment
+
+#: regret within this absolute margin of the floor counts as "warmed up"
+FLOOR_TOL = 0.02
+
+
+def _replay(seg, segments):
+    return [(t + k * SEG_GAP, w) for k in range(segments) for t, w in seg]
+
+
+def _perturbed_fleet(m, scale, seed0=100):
+    from repro.telemetry import perturb_spec
+
+    return [perturb_spec(M1, scale, seed=seed0 + i) for i in range(m)]
+
+
+def _oracle_duration(servers, seg):
+    """True-D greedy duration of one segment (the regret denominator)."""
+    oracle = ConsolidationEngine(
+        list(servers), D=[profile_pairwise_fast(s) for s in servers])
+    return oracle.run(seg, backend="jax").makespan - seg[0][0]
+
+
+def _obs_to_floor(regret, obs_cum, floor):
+    """Cumulative observations when regret first *stays* at the floor.
+
+    "Stays" is literal: the earliest segment from which every later segment
+    remains within tolerance of the floor (a lucky transient dip that later
+    regresses does not count as warmed up). Returns ``(inf, None)`` when the
+    curve never settles there -- pooling at high heterogeneity genuinely
+    does not converge to the per-server floor, and reporting the last
+    segment instead would dress that up as near-parity.
+    """
+    if regret[-1] > floor + FLOOR_TOL:
+        return float("inf"), None
+    k = len(regret) - 1
+    for j in range(len(regret) - 1, -1, -1):
+        if regret[j] > floor + FLOOR_TOL:
+            break
+        k = j
+    return float(obs_cum[k]), k
+
+
+def _warmup_sweep(emit, scales, m, n_seg, segments, seeds=(3, 7, 11)):
+    """Pooled vs per-server warm-up regret across hardware heterogeneity.
+
+    Regret curves are averaged over independent trace seeds (the
+    ``adaptive_regret`` protocol): single-trace curves bounce around the
+    floor with placement-tie noise, which the strict stays-at-the-floor
+    warm-up rule would otherwise read as late convergence.
+    """
+    crossovers = {}
+    for scale in scales:
+        servers = _perturbed_fleet(m, scale)
+        regret = {"pooled": np.zeros(segments), "per_server": np.zeros(segments)}
+        obs_cum = {k: np.zeros(segments) for k in regret}
+        splits = 0
+        for seed in seeds:
+            seg = _segment(seed, n_seg)
+            arrivals = _replay(seg, segments)
+            oracle_dur = _oracle_duration(servers, seg)
+            paths = {
+                "pooled": AdaptiveEngine(
+                    servers, prior=0.0, decay=0.997,
+                    fleet=FleetController(pools=[0] * m)),
+                "per_server": AdaptiveEngine(
+                    servers, prior=0.0, decay=0.997, stream=True),
+            }
+            for name, eng in paths.items():
+                res = eng.run(arrivals, segments=segments)
+                regret[name] += [(d - oracle_dur) / oracle_dur
+                                 for d in res.durations]
+                obs_cum[name] += np.cumsum(res.n_obs)
+                if name == "pooled":
+                    splits += len(eng.fleet.events_of("split"))
+        for name in regret:
+            regret[name] /= len(seeds)
+            obs_cum[name] /= len(seeds)
+
+        floor = float(np.mean(regret["per_server"][-2:]))
+        obs_pool, k_pool = _obs_to_floor(regret["pooled"], obs_cum["pooled"], floor)
+        obs_per, k_per = _obs_to_floor(regret["per_server"], obs_cum["per_server"], floor)
+        if np.isfinite(obs_pool) and np.isfinite(obs_per):
+            ratio = obs_pool / max(obs_per, 1.0)
+        else:
+            ratio = float("inf")  # one side never settled: no crossover
+        crossovers[scale] = ratio
+        emit(
+            f"fleet/warmup_scale{scale:g}",
+            ratio if np.isfinite(ratio) else -1.0,  # -1 = no convergence
+            f"obs_pooled={obs_pool:.0f}@seg{k_pool};obs_per={obs_per:.0f}@seg{k_per};"
+            f"floor={100 * floor:.1f}%;early_pooled={100 * regret['pooled'][0]:.1f}%;"
+            f"early_per={100 * regret['per_server'][0]:.1f}%;splits={splits};"
+            f"seeds={len(seeds)}",
+            unit="obs_ratio_pooled_over_per",
+        )
+    fast = [s for s in scales if s <= 0.05]
+    ok = all(crossovers[s] <= 0.5 for s in fast)
+    emit(
+        "fleet/warmup_halved_at_low_scale", float(ok),
+        ";".join(f"scale{s:g}={crossovers[s]:.2f}" for s in scales)
+        + ";bar=ratio<=0.5 at scale<=0.05",
+        unit="bool",
+    )
+
+
+def _stream_segment(seed: int, n: int, gap: float = 2e-5, passes: int = 3):
+    """A streaming arrival segment: above-LLC file sets (levels 2-3).
+
+    Congestion (``congest_server``) steals *shared* storage bandwidth, which
+    LLC-resident workloads barely touch -- the drift is only observable
+    through runs that stream the shared subsystem (for these types the
+    congested pair log-rate shifts by ~1 per co-resident; solo rates do not
+    move at all).
+    """
+    rng = np.random.default_rng(seed)
+    out, t = [], 0.0
+    for _ in range(n):
+        fs = float(rng.choice(FS_GRID[14:17]))
+        w = snap_to_grid(
+            Workload(fs=fs, rs=float(rng.choice(RS_GRID[5:8])), data_total=fs * passes))
+        t += float(rng.exponential(gap))
+        out.append((t, w))
+    return out
+
+
+def _split_latency(emit, m, n_seg, segments, inject_at, seed=5, factor=0.35):
+    """Segments from an injected congest divergence to its split event.
+
+    The fleet starts from the *profiled* prior (the realistic deployment for
+    drift detection: the offline matrix exists, the question is noticing
+    when a unit leaves it) -- detection must race the closed loop itself,
+    which observes the slowdown and starts off-loading the congested server
+    within a segment or two, starving the detector of co-run evidence.
+    """
+    servers = [M1] * m
+    noise = stochastic_congestion(
+        servers, rate=0.25, seed=seed, segments=segments,
+        servers=list(range(1, m)))  # keep the injected server out of the noise
+    drift = merge_schedules(
+        noise, congestion_at(servers, inject_at, server=0, factor=factor))
+    fleet = FleetController()  # same-spec fleet: 'spec' pools all of it
+    eng = AdaptiveEngine(servers, prior="profiled", decay=0.997, drift=drift,
+                         fleet=fleet)
+    eng.run(_replay(_stream_segment(seed, n_seg), segments), segments=segments)
+
+    split_segs = [ev.segment for ev in fleet.events_of("split") if ev.server == 0]
+    latency = (split_segs[0] - inject_at) if split_segs else float("inf")
+    other = sorted({ev.server for ev in fleet.events_of("split")} - {0})
+    emit(
+        "fleet/cusum_split_latency", float(latency),
+        f"inject_seg={inject_at};split_seg={split_segs[0] if split_segs else None};"
+        f"within_3={latency <= 3};noise_splits={other};evictions={len(fleet.evicted())}",
+        unit="segments",
+    )
+
+
+def _eviction_trace(emit, m, n_seg, segments, decay_from, seed=7, failing=1,
+                    rate=0.5):
+    """gradual_decay to ~zero: detection, masking, and requeue end to end."""
+    servers = [M1] * m
+    drift = gradual_decay(servers, server=failing, rate=rate,
+                          start=decay_from, segments=segments)
+    fleet = FleetController(mesh=MeshConfig())
+    eng = AdaptiveEngine(servers, prior=0.0, decay=0.997, drift=drift, fleet=fleet)
+    seg = _segment(seed, n_seg)
+    res = eng.run(_replay(seg, segments), segments=segments)
+
+    evs = fleet.events_of("evict")
+    evict_seg = evs[0].segment if evs else None
+    after = (0 if evict_seg is None else
+             sum(1 for r in res.segments[evict_seg + 1:]
+                 for p in r.placements if p == failing))
+    requeued = (0 if evict_seg is None or evict_seg + 1 >= segments else
+                len(res.segments[evict_seg + 1].placements) - n_seg)
+    zero_after = evict_seg is not None and after == 0
+    emit(
+        "fleet/eviction_zero_placements_after", float(zero_after),
+        f"evict_seg={evict_seg};decay_from={decay_from};on_failing_after={after};"
+        f"requeued={requeued};remesh_plans={len(fleet.plans)};"
+        f"dead={not fleet.monitor.hosts[failing].alive}",
+        unit="bool",
+    )
+
+
+def _smoke_pallas_scatter(n_seg, seed=11):
+    """Push one fused update through the Pallas stacked scatter (interpret
+    mode off-TPU), so the kernel path behind the pooled bank runs in CI."""
+    from repro.core.engine import GRID_T
+    from repro.telemetry import StreamingEstimator
+
+    servers = [M1]
+    engine = ConsolidationEngine(servers, D=profile_pairwise_fast(M1))
+    res = engine.run(_segment(seed, n_seg), backend="jax", telemetry="device")
+    est = StreamingEstimator(T=GRID_T, prior_D=0.0, scatter="pallas")
+    return est.update_device(res.stream_block, server=0)
+
+
+def run(emit, smoke: bool = False):
+    if smoke:
+        # tiny fleet, but m = 3 keeps a majority behind the pool-centered
+        # CUSUM (with 2 members, "who diverged" is genuinely ambiguous);
+        # the harsher decay rate compensates the shorter window so the
+        # detection -> eviction path still fires in CI
+        m, n_seg, segments = 3, 14, 5
+        scales = (0.0, 0.05)
+        # injections land on the first post-burn-in segment (the controller
+        # withholds actions for warmup_segments=2); the harsher congestion
+        # compensates the thin per-segment evidence (~3 rows on the
+        # injected server) so detection still fires inside the window
+        inject_at, decay_from, decay_rate = 2, 1, 0.65
+        inject_factor = 0.15
+    else:
+        m, n_seg, segments = 4, 24, 8
+        scales = (0.0, 0.05, 0.1, 0.2)
+        inject_at, decay_from, decay_rate = 3, 2, 0.5
+        inject_factor = 0.35
+
+    _warmup_sweep(emit, scales, m, n_seg, segments,
+                  seeds=(3,) if smoke else (3, 7, 11))
+    _split_latency(emit, m, n_seg, segments, inject_at, factor=inject_factor)
+    _eviction_trace(emit, m, n_seg, segments, decay_from, rate=decay_rate)
+    if smoke:
+        used = _smoke_pallas_scatter(n_seg)
+        emit("fleet/smoke_pallas_scatter", float(used),
+             "stacked pair_scatter in interpret mode", unit="rows")

@@ -26,6 +26,7 @@ from . import (
     fig9_greedy_vs_optimal,
     fig12_single_workload,
     fig34_consolidation,
+    fleet_health,
     roofline_table,
     scale_scheduler,
     table2_greedy_example,
@@ -41,6 +42,7 @@ MODULES = [
     ("scale", scale_scheduler),
     ("adaptive", adaptive_regret),
     ("telemetry", telemetry_throughput),
+    ("fleet", fleet_health),
     ("roofline", roofline_table),
 ]
 

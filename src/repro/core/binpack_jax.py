@@ -38,13 +38,22 @@ QUEUED = -1  # sentinel placement: no feasible server (criterion-1 queue)
 
 @dataclasses.dataclass(frozen=True)
 class PackedCluster:
-    """Immutable device-side cluster description (see module docstring)."""
+    """Immutable device-side cluster description (see module docstring).
+
+    ``active`` is the fleet-health mask (1.0 = eligible for placement): an
+    inactive server keeps its rows in every table -- shapes never change, so
+    jitted programs are not re-traced when the fleet controller evicts a
+    server -- but candidate scoring treats it as infeasible, exactly like a
+    server that fails both criteria (its queued work waits for a *healthy*
+    server or deadlocks, never lands on the evicted one).
+    """
 
     D: jax.Array  # f32[m, T, T]
     rs: jax.Array  # f32[T]
     fs: jax.Array  # f32[T]
     llc_budget: jax.Array  # f32[m] = alpha_s * CacheSize_s
     resident: jax.Array  # f32[m, T]
+    active: jax.Array  # f32[m] 1.0 = placement-eligible (fleet-health mask)
     degradation_limit: float = 0.5
 
     @classmethod
@@ -53,6 +62,7 @@ class PackedCluster:
         servers: list[ServerSpec],
         D: list[np.ndarray] | np.ndarray,
         alpha: float | list[float] = 1.3,
+        active: "np.ndarray | None" = None,
     ) -> "PackedCluster":
         m = len(servers)
         if isinstance(D, np.ndarray):
@@ -72,6 +82,8 @@ class PackedCluster:
             fs=fs_t,
             llc_budget=llc,
             resident=resident,
+            active=(jnp.ones(m, jnp.float32) if active is None
+                    else jnp.asarray(np.asarray(active, np.float32))),
         )
 
     @property
@@ -85,7 +97,8 @@ class PackedCluster:
 
 jax.tree_util.register_pytree_node(
     PackedCluster,
-    lambda c: ((c.D, c.rs, c.fs, c.llc_budget, c.resident), (c.degradation_limit,)),
+    lambda c: ((c.D, c.rs, c.fs, c.llc_budget, c.resident, c.active),
+               (c.degradation_limit,)),
     lambda aux, ch: PackedCluster(*ch, degradation_limit=aux[0]),
 )
 
@@ -164,8 +177,11 @@ def greedy_choice(
 
     Returns (server [Q], feasible_any [Q]); server == QUEUED where no server
     passes both criteria. Shared by the greedy scan and the online engine.
+    Servers masked out by ``cluster.active`` (fleet-health eviction) are
+    infeasible regardless of their scores.
     """
-    feasible = (maxd_after < cluster.degradation_limit) & (cache_after <= 1.0)
+    feasible = ((maxd_after < cluster.degradation_limit) & (cache_after <= 1.0)
+                & (cluster.active > 0.5)[None, :])
     avg_after = 0.5 * (cache_after + maxd_after)
     if objective == "sum_avg":  # Table II semantics: minimize the load increase
         score = avg_after - avg_loads(cluster, counts)[None, :]
@@ -249,7 +265,11 @@ def evaluate_assignment(
     scatter = scatter * placed[:, None]
     counts = counts0 + jnp.einsum("nm,nt->mt", scatter, onehots)
     cache, maxd = server_loads(cluster, counts)
-    ok = jnp.all((maxd < cluster.degradation_limit) & (cache <= 1.0))
+    # fleet-health mask: an assignment placing work on an evicted server is
+    # infeasible, same as the greedy paths (pre-existing counts0 there are
+    # the caller's business)
+    on_inactive = jnp.any(placed & (cluster.active[jnp.where(placed, assign, 0)] <= 0.5))
+    ok = jnp.all((maxd < cluster.degradation_limit) & (cache <= 1.0)) & ~on_inactive
     cost = jnp.sum(0.5 * (cache + maxd)) + jnp.sum(~placed)
     return jnp.where(ok, cost, jnp.inf), ok
 

@@ -29,6 +29,23 @@ from .workload import Workload
 DEGRADATION_LIMIT = 0.5
 
 
+def eviction_rate_floor(limit: float = DEGRADATION_LIMIT) -> float:
+    """The observed-throughput fraction at which a server leaves the fleet.
+
+    Criterion 1's threshold, read as a *health* rule: step-time inflation
+    D = O / (AR + O) >= ``limit`` is the same condition as the observed rate
+    dropping to <= (1 - limit) x its reference (for limit = 0.5, running at
+    half speed, i.e. 2x slower). Both consumers of that rule -- the
+    straggler monitor (``distributed.fault_tolerance.HeartbeatMonitor
+    .stragglers``) and the fleet failure detector (``fleet.detect``, whose
+    reference is the estimated base rate) -- read this single conversion, so
+    eviction and straggler policy cannot drift apart.
+    """
+    if not 0.0 < limit < 1.0:
+        raise ValueError(f"degradation limit must be in (0, 1), got {limit}")
+    return 1.0 - limit
+
+
 @dataclasses.dataclass(frozen=True)
 class AdmissionCheck:
     """Result of evaluating both criteria for a candidate co-run set."""

@@ -61,6 +61,7 @@ from ..telemetry.log import (
 )
 
 if TYPE_CHECKING:
+    from ..fleet.controller import FleetController, HealthEvent
     from ..telemetry.drift import DriftSchedule
 
 Backend = Literal["auto", "jax", "numpy"]
@@ -147,6 +148,7 @@ class ConsolidationEngine:
         objective: str = "sum_avg",
         backend: Backend = "auto",
         scorer: ScorerName = "jnp",
+        active: Sequence[bool] | np.ndarray | None = None,
     ):
         if scorer == "numpy":
             # fail at construction, not at the trace length where 'auto'
@@ -172,7 +174,10 @@ class ConsolidationEngine:
         self.objective = objective
         self.backend = backend
         self.scorer = scorer
-        self.cluster = PackedCluster.build(list(self.servers), self.D, alpha)
+        self._active: np.ndarray | None = (  # fleet-health placement mask
+            None if active is None else np.asarray(active, bool))
+        self.cluster = PackedCluster.build(
+            list(self.servers), self.D, alpha, active=self._active)
         self._dyn: PackedDynamics | None = None
 
     @property
@@ -182,16 +187,53 @@ class ConsolidationEngine:
             self._dyn = PackedDynamics.build(self.servers)
         return self._dyn
 
-    def set_D(self, D: Sequence[np.ndarray] | np.ndarray) -> None:
+    def set_D(
+        self,
+        D: Sequence[np.ndarray] | np.ndarray,
+        active: Sequence[bool] | np.ndarray | None = None,
+    ) -> None:
         """Swap the scoring D-matrices in place, rebuilding only what depends
         on them (the PackedCluster). The ground-truth ``PackedDynamics`` and
         the jitted trace programs key on server specs, not D, so a closed
         loop refreshing its estimate every segment pays for one [m, T, T]
-        restack instead of a full engine rebuild."""
+        restack instead of a full engine rebuild. ``active`` optionally
+        swaps the placement mask in the same build (the fleet loop updates
+        both per segment; two separate calls would restack twice)."""
+        if active is not None:
+            self._active = self._check_mask(active)
         if isinstance(D, np.ndarray):
             D = [D] * len(self.servers)
         self.D = list(D)
-        self.cluster = PackedCluster.build(list(self.servers), self.D, self.alpha)
+        self.cluster = PackedCluster.build(
+            list(self.servers), self.D, self.alpha, active=self._active)
+
+    def _check_mask(self, active) -> np.ndarray:
+        mask = np.asarray(active, bool)
+        if mask.shape != (len(self.servers),):
+            raise ValueError(
+                f"active mask shape {mask.shape} != ({len(self.servers)},)")
+        return mask
+
+    def set_active(self, active: Sequence[bool] | np.ndarray) -> None:
+        """Swap the fleet-health placement mask (True = eligible).
+
+        Masked servers stay in every table -- shapes are unchanged, so the
+        jitted trace programs are not re-traced -- but candidate scoring
+        treats them as infeasible (``binpack_jax.greedy_choice`` and the
+        engine's internal pick both veto them), so they receive no further
+        placements. Masking lives in the device scoring path only: the numpy
+        reference oracle does not consume it (``run`` refuses the
+        combination).
+        """
+        mask = self._check_mask(active)
+        if self._active is not None and np.array_equal(mask, self._active):
+            return
+        if self._active is None and mask.all():
+            self._active = mask  # cluster is already all-active
+            return
+        self._active = mask
+        self.cluster = PackedCluster.build(
+            list(self.servers), self.D, self.alpha, active=mask)
 
     # -- public API -------------------------------------------------------
     def run(
@@ -220,12 +262,19 @@ class ConsolidationEngine:
         if telemetry not in (False, True, "host", "device"):
             raise ValueError(f"unknown telemetry mode {telemetry!r}")
         backend = backend or self.backend
+        masked = self._active is not None and not self._active.all()
         if backend == "auto":
-            backend = "jax" if telemetry or len(arrivals) >= AUTO_JAX_THRESHOLD else "numpy"
+            # telemetry and the fleet-health mask are device-engine features:
+            # 'auto' selects jax for them regardless of trace length
+            backend = ("jax" if telemetry or masked
+                       or len(arrivals) >= AUTO_JAX_THRESHOLD else "numpy")
         if backend not in ("jax", "numpy"):
             raise ValueError(f"unknown engine backend {backend!r}")
         if telemetry and backend != "jax":
             raise ValueError("telemetry requires the jax engine backend")
+        if backend == "numpy" and masked:
+            raise ValueError("server masking (set_active) requires the jax "
+                             "engine backend; the numpy oracle has no mask")
         if not arrivals:
             obs = (ObservationLog.empty(self.cluster.T)
                    if telemetry in (True, "host") else None)
@@ -338,6 +387,9 @@ class AdaptiveResult:
     segments: tuple[EngineResult, ...]
     n_obs: tuple[int, ...]  # observations consumed by the estimators per segment
     t_starts: tuple[float, ...]  # first arrival time per segment
+    #: fleet-health events fired after each segment (empty without a fleet
+    #: controller): splits and evictions, in the order they were taken
+    health: "tuple[tuple[HealthEvent, ...], ...]" = ()
 
     @property
     def makespans(self) -> tuple[float, ...]:
@@ -382,10 +434,17 @@ class AdaptiveEngine:
     every estimator refresh is one fused ``update_device`` call -- no host
     ``ObservationLog`` is ever materialized (DESIGN.md §10).
 
-    Estimators are per server (never pooled across same-spec servers): under
-    drift, two nominally identical servers stop being identical, and pooling
-    would average incompatible worlds. Pooling for faster warm-up on healthy
-    fleets is an open item (ROADMAP).
+    ``fleet=FleetController(...)`` puts the fleet-health control plane
+    (``repro.fleet``, DESIGN.md §11) in the loop, implying ``stream=True``:
+    the controller binds to this engine's servers and estimators, same-spec
+    servers pool onto shared estimator rows (warming up ~m x faster), each
+    segment's telemetry block feeds the controller's CUSUM drift detector,
+    and its decisions act on the very next segment -- split servers get
+    their own seeded estimator, evicted servers are masked out of candidate
+    scoring (``set_active``) and their in-flight workloads (placed on the
+    evicted server in the detection segment, or never placed) are requeued
+    into the following segment. Without a controller, estimators stay
+    strictly per-server as before.
     """
 
     def __init__(
@@ -403,6 +462,7 @@ class AdaptiveEngine:
         scatter: ScatterName = "auto",
         stream: bool = False,
         ring_capacity: int = 4096,
+        fleet: "FleetController | None" = None,
     ):
         """``prior`` selects what the scheduler believes before any telemetry:
         a scalar is a uniform D prior (0.0 = optimistic "no interference" --
@@ -417,6 +477,8 @@ class AdaptiveEngine:
         self.objective = objective
         self.scorer = scorer
         self.drift = drift
+        self.fleet = fleet
+        stream = stream or fleet is not None  # the control plane is stream-fed
         self.stream = stream
         self.ring = ObservationRing(ring_capacity, GRID_T) if stream else None
         # segment-engine cache: under an unchanged world (drift is None, or a
@@ -456,12 +518,24 @@ class AdaptiveEngine:
             )
             for i, s in enumerate(self.servers)
         ]
-        #: stream mode refreshes every server's estimator in one fused call
-        self.bank = EstimatorBank(self.estimators) if stream else None
+        #: stream mode refreshes every server's estimator in one fused call;
+        #: with a fleet controller the controller's pooled bank is that call
+        #: (two banks over the same estimators would fight for their state)
+        if fleet is not None:
+            fleet.bind(self.servers, self.estimators)
+            self.bank = None
+        else:
+            self.bank = EstimatorBank(self.estimators) if stream else None
 
     # -- estimates --------------------------------------------------------
     def current_D(self) -> list[np.ndarray]:
-        """The per-server D-matrices the next segment's placements will use."""
+        """The per-server D-matrices the next segment's placements will use.
+
+        With a fleet controller these resolve through the pool map: pooled
+        servers share their pool's estimate, split servers their own.
+        """
+        if self.fleet is not None:
+            return self.fleet.current_D()
         return [est.estimate_D() for est in self.estimators]
 
     def engine_for_segment(self, segment: int) -> ConsolidationEngine:
@@ -475,12 +549,14 @@ class AdaptiveEngine:
         revisit worlds: congest -> recover)."""
         specs = (tuple(self.drift.specs_at(self.servers, segment))
                  if self.drift is not None else self.servers)
+        mask = self.fleet.active_mask() if self.fleet is not None else None
         if self._seg_engine is not None and specs == self._seg_specs:
-            self._seg_engine.set_D(self.current_D())
+            self._seg_engine.set_D(self.current_D(), active=mask)
             return self._seg_engine
         engine = ConsolidationEngine(
             list(specs), D=self.current_D(), alpha=self.alpha,
-            objective=self.objective, backend="jax", scorer=self.scorer)
+            objective=self.objective, backend="jax", scorer=self.scorer,
+            active=mask)
         if specs in self._dyn_cache:
             engine._dyn = self._dyn_cache[specs]
         else:
@@ -498,15 +574,30 @@ class AdaptiveEngine:
         """Alternate ``segments`` trace chunks with estimator refreshes.
 
         ``on_segment(k, result, self)`` fires after each segment's
-        observations have been folded in -- benchmarks use it to snapshot
-        estimation error and regret as observation volume grows.
+        observations have been folded in (and, with a fleet controller,
+        after its health actions for the segment) -- benchmarks use it to
+        snapshot estimation error and regret as observation volume grows.
+
+        With a fleet controller, an eviction requeues the evicted server's
+        in-flight work: the detection segment's arrivals that ran on the
+        evicted server (their observed service came from a collapsing
+        machine), plus any never-placed arrivals, re-enter at the head of
+        the next segment's chunk. An eviction fired by the *final* segment
+        has no next chunk; its in-flight work stays reported in that
+        segment's result.
         """
         ordered = sorted(arrivals, key=lambda tw: tw[0])
         bounds = np.linspace(0, len(ordered), segments + 1).astype(int)
-        results, n_obs, t_starts = [], [], []
+        results, n_obs, t_starts, health = [], [], [], []
+        requeue: list[Workload] = []
         for k in range(segments):
             chunk = ordered[bounds[k]:bounds[k + 1]]
+            if requeue:
+                t0 = chunk[0][0] if chunk else 0.0
+                chunk = [(t0, w) for w in requeue] + chunk
+                requeue = []
             engine = self.engine_for_segment(k)
+            events: "tuple[HealthEvent, ...]" = ()
             if self.stream:
                 # fleet-scale path: the segment's rows go trace -> ring ->
                 # one banked estimator update without leaving the device
@@ -517,7 +608,16 @@ class AdaptiveEngine:
                     # (which keeps only its newest capacity rows) is the
                     # bounded history for re-reads, not the update source
                     self.ring.push(res.stream_block)
-                    used = self.bank.update_device(res.stream_block)
+                    if self.fleet is not None:
+                        used, evs = self.fleet.observe(res.stream_block, segment=k)
+                        events = tuple(evs)
+                        evicted = {ev.server for ev in evs if ev.kind == "evict"}
+                        if evicted:
+                            requeue = [w for (t, w), p in
+                                       zip(chunk, res.placements)
+                                       if p in evicted or p is None]
+                    else:
+                        used = self.bank.update_device(res.stream_block)
             else:
                 res = engine.run(chunk, telemetry=True)
                 used = sum(est.update(res.observations.for_server(s))
@@ -525,6 +625,8 @@ class AdaptiveEngine:
             results.append(res)
             n_obs.append(used)
             t_starts.append(chunk[0][0] if chunk else 0.0)
+            health.append(events)
             if on_segment is not None:
                 on_segment(k, res, self)
-        return AdaptiveResult(tuple(results), tuple(n_obs), tuple(t_starts))
+        return AdaptiveResult(tuple(results), tuple(n_obs), tuple(t_starts),
+                              tuple(health))

@@ -294,7 +294,10 @@ def run_trace(
             cache_a, maxd_a = score_fast(st, wtypes)
         else:
             cache_a, maxd_a = scorer(cluster, st.counts, wtypes)
-        feasible = (maxd_a < cluster.degradation_limit) & (cache_a <= 1.0)
+        # the fleet-health mask makes evicted servers infeasible on every
+        # scoring backend (scores are computed, feasibility is vetoed here)
+        feasible = ((maxd_a < cluster.degradation_limit) & (cache_a <= 1.0)
+                    & (cluster.active > 0.5)[None, :])
         if objective == "sum_avg":  # Table II: minimize the load *increase*
             cache_now, maxd_now = loads_now(st)
             if scorer is None:
@@ -531,7 +534,10 @@ def local_search_jax(
             a.T for a in score_candidates_jnp(cluster, c, jnp.arange(T)))
         avg_rm = 0.5 * (cache_rm + maxd_rm)
         avg_ad = 0.5 * (cache_ad + maxd_ad)
-        feas_ad = (maxd_ad < cluster.degradation_limit) & (cache_ad <= 1.0)
+        # relocation targets honour the fleet-health mask like every other
+        # scoring consumer: no move may land work on an evicted server
+        feas_ad = ((maxd_ad < cluster.degradation_limit) & (cache_ad <= 1.0)
+                   & (cluster.active > 0.5)[:, None])
 
         # delta[s, t, u] = objective change of moving one type-t from s to u
         delta = (avg_rm - avg0[:, None])[:, :, None] + (avg_ad - avg0[:, None]).T[None, :, :]

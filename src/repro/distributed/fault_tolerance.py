@@ -25,7 +25,7 @@ from typing import Callable
 import numpy as np
 
 from ..configs.base import MeshConfig
-from ..core.criteria import DEGRADATION_LIMIT
+from ..core.criteria import DEGRADATION_LIMIT, eviction_rate_floor
 
 
 @dataclasses.dataclass
@@ -62,19 +62,23 @@ class HeartbeatMonitor:
         AR: D_i = O_i / (AR + O_i) with O_i = t_i - AR. D_i >= `limit`
         (default 0.5, Eqn 4) marks a straggler -- its presence would double
         the synchronous step time, the same condition under which the paper
-        refuses to consolidate.
+        refuses to consolidate. The comparison routes through
+        ``criteria.eviction_rate_floor`` -- the same threshold conversion
+        the fleet failure detector uses (effective rate med/t_i at or below
+        the floor <=> inflation at or past ``limit``) -- so straggler and
+        eviction policy share one knob.
         """
         med = np.median([np.mean(h.step_times) for h in self.hosts.values()
                          if h.alive and h.step_times] or [0.0])
         if med <= 0:
             return []
+        floor = eviction_rate_floor(limit)
         out = []
         for i, h in self.hosts.items():
             if not h.alive or not h.step_times:
                 continue
             t = float(np.mean(h.step_times[-5:]))
-            overhead = max(0.0, t - med)
-            if overhead / (med + overhead) >= limit:
+            if t > 0 and med / t <= floor:
                 out.append(i)
         return out
 

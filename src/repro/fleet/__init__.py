@@ -1,0 +1,38 @@
+"""Fleet health: pooled estimation, drift detection, failure-driven eviction.
+
+The control plane above the telemetry loop (DESIGN.md §11). PR 2/4 gave
+every server its own online estimator and a fused device path to update them
+all at once; this package decides *which servers should share a model* and
+*which servers should stop receiving work*:
+
+  pool        ``PooledEstimatorBank`` -- same-spec servers share one
+              estimator row via a device-side server -> row map (pooling as
+              index remapping over the PR 4 ``EstimatorBank``), warming up
+              ~m x faster; splits re-route a server to its own row seeded
+              with the pool posterior.
+  detect      ``DriftDetector`` -- a jitted, chunk-invariant CUSUM over each
+              server's residual stream against its pool's model, plus an
+              exposure-weighted residual level for failure detection, both
+              thresholded through ``criteria.eviction_rate_floor``.
+  controller  ``FleetController`` -- consumes each segment's telemetry
+              block, applies splits, and evicts failing servers: placement
+              mask (candidate scoring refuses them), pool routing dropped,
+              ``HeartbeatMonitor.mark_dead`` + ``plan_elastic_remesh``
+              notified, in-flight work requeued by ``AdaptiveEngine``.
+
+Driven end to end by ``AdaptiveEngine(fleet=FleetController(...))`` and
+benchmarked by ``benchmarks/fleet_health.py`` (pooled-vs-per-server warm-up
+across hardware heterogeneity, split latency under multi-tenant noise, and
+the gradual-decay eviction trace).
+"""
+from .controller import FleetController, HealthEvent
+from .detect import CusumState, DriftDetector
+from .pool import PooledEstimatorBank
+
+__all__ = [
+    "CusumState",
+    "DriftDetector",
+    "FleetController",
+    "HealthEvent",
+    "PooledEstimatorBank",
+]

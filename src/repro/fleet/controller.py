@@ -1,0 +1,324 @@
+"""FleetController: the estimate -> diagnose -> act control plane.
+
+``fleet.pool`` decides which servers share a model; ``fleet.detect`` notices
+when that stops being true, or when a server stops being viable at all. This
+module closes the loop: it consumes each segment's device-resident telemetry
+block, updates the pooled estimators and the detector in the same pass, and
+turns detector signals into fleet actions:
+
+  split   a pooled server whose CUSUM crossed ``h`` is re-routed to its own
+          estimator row, seeded with the pool posterior (it keeps the pool's
+          warm-up, loses its noise), and its detector rows reset.
+  evict   a server failing either failure test leaves the fleet: its pool
+          routing is dropped, its placement mask goes False (candidate
+          scoring in the engine treats it as infeasible --
+          ``ConsolidationEngine.set_active``), the fault-tolerance plane is
+          notified (``HeartbeatMonitor.mark_dead``; with a ``mesh``, a
+          ``plan_elastic_remesh`` shrink plan is recorded and applied), and
+          the driving ``AdaptiveEngine`` requeues the work it had in flight.
+
+Two failure routes cover both pool topologies, both against the single
+threshold of ``criteria.eviction_rate_floor``:
+
+  level  the detector's residual level, measured against the **fleet
+         median** level -- precisely ``HeartbeatMonitor.stragglers``'s rule
+         (slower than ``1/(1 - limit)`` x the fleet median marks you dead)
+         transported from step times to telemetry residuals. The relative
+         form makes the route immune to fleet-wide model misfit (a cold
+         prior warming up, a drift hitting everyone); like the straggler
+         rule, it goes blind if the *whole* fleet fails at once.
+  base   the server's *own* estimated base rate at or below ``fail_floor``
+         x the nominal prior -- the absolute backstop for servers with a
+         *private* estimator row (a pooled row's ratio is shared by every
+         member, so it cannot single one out); it needs solo observations
+         to move. Whatever fires, the controller never evicts the last
+         active server -- a sick fleet still beats an empty one.
+
+The controller is deliberately host-side policy over device-side mechanism:
+one fused bank update + one fused detector update per segment, then a few
+[m]-sized host reads to make decisions. It binds late (``bind``): construct
+it with policy knobs, hand it to ``AdaptiveEngine(fleet=...)``, and the
+engine binds it to the fleet's servers and estimators it already builds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Hashable, Literal, Sequence
+
+import numpy as np
+
+from ..configs.base import MeshConfig
+from ..core.criteria import eviction_rate_floor
+from ..core.server import ServerSpec
+from ..distributed.fault_tolerance import (
+    HeartbeatMonitor,
+    ReMeshPlan,
+    plan_elastic_remesh,
+)
+from ..telemetry.estimator import StreamingEstimator
+from ..telemetry.log import RingBlock
+from .detect import DriftDetector
+from .pool import PooledEstimatorBank
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthEvent:
+    """One fleet-health decision, as the controller's audit record."""
+
+    kind: Literal["split", "evict"]
+    server: int
+    segment: int
+    stat: float  # the detector statistic that fired (CUSUM max or level)
+    detail: str = ""
+
+
+class FleetController:
+    """Fleet-health policy bound to a fleet's estimators (module docstring).
+
+    Parameters
+    ----------
+    pools : 'spec' groups servers whose ``ServerSpec`` compare equal (the
+        same-part fleet); an explicit label sequence groups arbitrarily
+        (e.g. nominally-identical perturbed units); None disables pooling.
+    cusum_k, cusum_h, level_decay, min_exposure, max_lost_frac :
+        forwarded to :class:`~repro.fleet.detect.DriftDetector`.
+    fail_floor : eviction rate floor; defaults to the shared
+        ``criteria.eviction_rate_floor()`` threshold.
+    mesh : optional training-mesh config; evictions then also produce (and
+        apply, so consecutive failures compose) ``plan_elastic_remesh``
+        shrink plans in ``plans``.
+    heartbeat_timeout : forwarded to the :class:`HeartbeatMonitor` liveness
+        plane. The controller heartbeats on the *segment* clock (one beat
+        per surviving server per ``observe``), so the unit is segments --
+        the default of 2 means "missed two consecutive segments" --  not
+        wall seconds.
+    warmup_segments : health actions are withheld for this many initial
+        ``observe`` calls (counted by the controller, not by the caller's
+        segment numbering), and the detector state is discarded during
+        them. A cold model (the optimistic zero prior) under-predicts
+        co-run degradation, so early residuals confound "this server is
+        broken" with "this server got the deepest co-run stack" -- no
+        detector can separate the two until the model has converged once.
+        Burn-in is the standard change-detection answer, and it happens
+        once per controller lifetime (the model stays warm across runs);
+        fleets starting from a profiled prior can set 0.
+    """
+
+    def __init__(
+        self,
+        pools: "Literal['spec'] | Sequence[Hashable] | None" = "spec",
+        *,
+        cusum_k: float = 0.25,
+        cusum_h: float = 2.0,
+        level_decay: float = 0.9,
+        fail_floor: float | None = None,
+        min_exposure: float = 4.0,
+        max_lost_frac: float = 0.5,
+        mesh: MeshConfig | None = None,
+        heartbeat_timeout: float = 2.0,
+        warmup_segments: int = 2,
+    ):
+        self._pools_spec = pools
+        self.cusum_k = cusum_k
+        self.cusum_h = cusum_h
+        self.level_decay = level_decay
+        self.fail_floor = (eviction_rate_floor() if fail_floor is None
+                           else fail_floor)
+        self.min_exposure = min_exposure
+        self.max_lost_frac = max_lost_frac
+        self.mesh = mesh
+        self._heartbeat_timeout = heartbeat_timeout
+        self.warmup_segments = int(warmup_segments)
+        self._segments_seen = 0  # observe() calls consumed (burn-in clock)
+        self.events: list[HealthEvent] = []
+        self.plans: list[ReMeshPlan] = []
+        self.pool: PooledEstimatorBank | None = None
+        self.detector: DriftDetector | None = None
+        self.monitor: HeartbeatMonitor | None = None
+        self._active: np.ndarray | None = None
+
+    # -- binding -----------------------------------------------------------
+    def bind(
+        self,
+        servers: Sequence[ServerSpec],
+        estimators: Sequence[StreamingEstimator],
+    ) -> "FleetController":
+        """Attach to a fleet: build the pool map, detector, and monitor.
+
+        Called by ``AdaptiveEngine`` with the estimators it constructs (one
+        per server, as always); standalone users may call it directly. A
+        controller binds once -- it accumulates fleet history.
+        """
+        if self.pool is not None:
+            raise RuntimeError("FleetController is already bound to a fleet")
+        if len(servers) != len(estimators):
+            raise ValueError(f"{len(servers)} servers, {len(estimators)} estimators")
+        m = len(servers)
+        if self._pools_spec == "spec":
+            seen: dict[ServerSpec, int] = {}
+            labels: Sequence[Hashable] = [
+                seen.setdefault(s, len(seen)) for s in servers]
+        else:
+            labels = self._pools_spec
+        self.pool = PooledEstimatorBank(estimators, labels)
+        self.detector = DriftDetector(
+            m=m, k=self.cusum_k, h=self.cusum_h,
+            level_decay=self.level_decay, fail_floor=self.fail_floor,
+            min_exposure=self.min_exposure, max_lost_frac=self.max_lost_frac)
+        self.monitor = HeartbeatMonitor(m, timeout_s=self._heartbeat_timeout)
+        self._active = np.ones(m, bool)
+        return self
+
+    def _require_bound(self) -> None:
+        if self.pool is None:
+            raise RuntimeError("FleetController.bind(servers, estimators) first")
+
+    @property
+    def m(self) -> int:
+        self._require_bound()
+        return self.pool.m
+
+    # -- fleet state reads -------------------------------------------------
+    def active_mask(self) -> np.ndarray:
+        """Placement eligibility per server (bool [m], False = evicted)."""
+        self._require_bound()
+        return self._active.copy()
+
+    def current_D(self) -> list[np.ndarray]:
+        """Per-server D estimates through the pool map (shared when pooled)."""
+        self._require_bound()
+        return self.pool.estimate_D()
+
+    def base_ratio(self) -> np.ndarray:
+        """Estimated base rate / nominal prior per server [m] (geometric,
+        weighted by per-type solo exposure; 1.0 where evidence is thin).
+
+        The *base* failure route: once a server runs solo (split out of its
+        pool), its own estimator tracks its collapse and this ratio is the
+        honest health read. Pooled servers report their pool's ratio.
+        """
+        self._require_bound()
+        st = self.pool.bank.stacked_state()
+        log_b = np.asarray(st.log_b, np.float64)  # [rows, T]
+        n_base = np.asarray(st.n_base, np.float64)
+        out = np.ones(self.m)
+        for s in range(self.m):
+            row = int(self.pool._read_row[s])
+            w = n_base[row]
+            tot = w.sum()
+            if tot < self.min_exposure:
+                continue
+            prior = self.pool.estimators[row]._logb_prior
+            out[s] = float(np.exp((w * (log_b[row] - prior)).sum() / tot))
+        return out
+
+    # -- the per-segment step ---------------------------------------------
+    def observe(self, block: RingBlock, segment: int) -> tuple[int, list[HealthEvent]]:
+        """Fold one segment's telemetry in; diagnose; act.
+
+        One fused pooled-bank update, one fused detector update (against the
+        *post-update* pooled model -- the one the next segment schedules
+        with), then host-side policy. Returns (rows consumed, events fired
+        this call); events also accumulate on ``self.events``.
+        """
+        self._require_bound()
+        used = self.pool.update_device(block)
+        log_b, L_t, row_map = self.pool.refs()
+        self.detector.update(block, log_b, L_t, row_map)
+        events: list[HealthEvent] = []
+
+        # liveness plane: surviving servers heartbeat on the segment clock
+        for s in range(self.m):
+            if self._active[s]:
+                self.monitor.heartbeat(s, now=float(segment))
+
+        self._segments_seen += 1
+        if self._segments_seen <= self.warmup_segments:
+            # burn-in (once per controller lifetime, on the controller's own
+            # observe count -- callers may number segments per run): the
+            # model is still converging, so residual evidence confounds load
+            # imbalance with divergence -- discard it and take no action
+            self.detector.reset_all()
+            return used, events
+
+        # splits: pooled servers whose residual stream diverged
+        split = self.detector.split_flags()
+        stat = self.detector.stat_max()
+        for s in map(int, np.flatnonzero(split)):
+            if not self._active[s]:
+                continue
+            if self.pool.split(s):
+                self._follow_migration()
+                events.append(HealthEvent(
+                    "split", s, segment, float(stat[s]),
+                    detail=f"cusum {stat[s]:.2f} >= h {self.detector.h:g}"))
+            # CUSUM evidence was acted on (or, for an already-solo server,
+            # is the estimator's to absorb) -- but only the CUSUM: the
+            # residual stream is *continuous* across a split (the private
+            # row is seeded with the identical posterior), so the failure
+            # level keeps its history. A collapsing server split out on the
+            # way down still evicts on schedule; a merely-congested one
+            # recenters as its private model adapts.
+            self.detector.reset_stat(s)
+
+        # failures: the level route (residual level vs the *fleet median*
+        # level -- the straggler monitor's exact rule, via the detector's
+        # one predicate: a server is failing when it observably runs at
+        # <= fail_floor x its siblings; the relative baseline also immunizes
+        # the route against fleet-wide model misfit) or the base route (own
+        # estimated base rate vs nominal -- only meaningful for a server
+        # with a *private* row: a pooled row's ratio is shared by every
+        # member and cannot single one out), both on the shared floor
+        level = self.detector.level_hat()
+        exposure = self.detector.exposure()
+        ratio = self.base_ratio()
+        seen = self._active & (exposure > 0)
+        med = float(np.median(level[seen])) if seen.any() else 0.0
+        level_hits = self.detector.fail_flags(center=med)
+        for s in range(self.m):
+            if not self._active[s]:
+                continue
+            if self._active.sum() <= 1:
+                break  # never evict the last server: a sick fleet > none
+            level_hit = bool(level_hits[s])
+            base_hit = (self.pool.pool_size(s) == 1
+                        and ratio[s] <= self.fail_floor)
+            if not (level_hit or base_hit):
+                continue
+            stat_val = float(level[s] - med if level_hit else np.log(ratio[s]))
+            detail = ("residual level vs fleet median" if level_hit
+                      else "estimated base") + (
+                f" {np.exp(stat_val):.3f} <= floor {self.fail_floor:g}")
+            events.append(self._evict(s, segment, stat_val, detail))
+
+        self.events.extend(events)
+        return used, events
+
+    def _follow_migration(self) -> None:
+        """Keep the detector's pool-centering rows aligned with a pool that
+        just migrated to a new leader row (see ``pool.last_migration``)."""
+        mig = self.pool.last_migration
+        if mig is not None:
+            self.detector.move_pool_row(*mig)
+
+    def _evict(self, server: int, segment: int, stat: float, detail: str) -> HealthEvent:
+        """Remove ``server`` from the fleet (mask, routing, fault plane)."""
+        self._active[server] = False
+        self.pool.drop(server)
+        self._follow_migration()
+        self.detector.reset(server)
+        self.monitor.mark_dead(server)
+        if self.mesh is not None:
+            plan = plan_elastic_remesh(self.mesh, [server])
+            if plan is not None:
+                self.plans.append(plan)
+                self.mesh = plan.new  # consecutive failures compose
+        return HealthEvent("evict", server, segment, stat, detail=detail)
+
+    # -- audit helpers -----------------------------------------------------
+    def evicted(self) -> tuple[int, ...]:
+        self._require_bound()
+        return tuple(int(s) for s in np.flatnonzero(~self._active))
+
+    def events_of(self, kind: str) -> tuple[HealthEvent, ...]:
+        return tuple(ev for ev in self.events if ev.kind == kind)

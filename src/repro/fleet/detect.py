@@ -1,0 +1,290 @@
+"""CUSUM drift detection on per-server residual streams.
+
+The pooling bet (``fleet.pool``) is that same-spec servers share one world;
+this module watches for the moment that stops being true. Every completion
+observation yields a *solo residual* -- the server's own log-rate minus what
+its pool's model predicts for that run::
+
+    r = y - (log_b_pool[t] + cbar @ L_pool[:, t])
+
+("solo" as in per-server: the residual of one server's stream against the
+shared model; co-run rows are included, which is what makes D-matrix drift
+-- a congested shared subsystem -- visible at all). For a healthy pool
+member r is zero-mean noise; a diverging server pushes it persistently to
+one side.
+
+Two statistics per server, both updated by one jitted, **chunk-invariant**
+program (rows are folded strictly in stream order by a ``lax.scan``, so
+splitting a batch anywhere leaves the device state bitwise identical --
+mirroring the PR 4 exposure-based EWMA contract, and tested the same way):
+
+  CUSUM [m, 2]  the classic one-sided pair S+ = max(0, S+ + (x - k)),
+                S- = max(0, S- - (x + k)) on the **pool-centered** residual
+                x = r - pool_level_hat: cumulative evidence of a mean shift
+                beyond the allowance ``k``, self-resetting through the
+                max(0, .) whenever the stream behaves. The centering
+                reference is an EWMA of the *pool row's own* residual,
+                maintained sequentially in the same scan (so it costs no
+                chunk-invariance), which cancels model error every member
+                shares -- a cold pool warming up, a drift hitting the whole
+                pool -- and leaves exactly the *relative* divergence the
+                split decision is about. Crossing ``h`` is the split signal:
+                the server no longer belongs to its pool.
+  level [m]     an exposure-weighted EWMA of the **raw** residual (decay
+                compounded per observation, like the estimator's confidence
+                decay) with its exact bias correction: ``level_hat = level /
+                ((1 - decay) n)`` recovers the running mean of r. A level at
+                or below ``log(fail_floor)`` means the server *runs at* a
+                fraction ``fail_floor`` of its model -- the failure signal,
+                whose default floor is ``criteria.eviction_rate_floor()``
+                (the Eqn-4 straggler threshold, shared so eviction and
+                straggler policy cannot drift apart). Failure is absolute
+                (the machine is slow, whoever's fault the model thinks it
+                is), so this one is deliberately *not* pool-centered.
+
+The detector holds no estimator state: the pooled model enters each update
+as explicit references (``PooledEstimatorBank.refs``), so residuals are
+always measured against the model the fleet is *currently* scheduling with.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.criteria import eviction_rate_floor
+from ..telemetry.log import RingBlock
+
+
+class CusumState(NamedTuple):
+    """Per-server (and per-pool-row) detector state as device arrays."""
+
+    stat: jax.Array  # f32[m, 2] (S+, S-) CUSUM pair, pool-centered residual
+    level: jax.Array  # f32[m] exposure-weighted EWMA of the raw residual
+    n: jax.Array  # f32[m] decayed exposure behind ``level``
+    pool_level: jax.Array  # f32[m rows] EWMA of each pool row's residual
+    pool_n: jax.Array  # f32[m rows] decayed exposure behind ``pool_level``
+
+
+@partial(jax.jit,
+         static_argnames=("k", "level_decay", "max_lost_frac"))
+def _cusum_update(
+    state: CusumState,
+    block: RingBlock,
+    log_b,  # f32[p, T] pooled base estimates (bank rows)
+    L_t,  # f32[p, T, T] pooled pair estimates, target-major [t, u]
+    row_map,  # i32[m] server -> bank row (-1 drops the server)
+    *,
+    k: float,
+    level_decay: float,
+    max_lost_frac: float,
+):
+    """Fold one block of observation rows into the detector state.
+
+    Residuals are computed vectorized (each row is independent); only the
+    accumulation is sequential -- a ``lax.scan`` in stream order, which is
+    what makes the state exactly chunk-invariant (an associative-scan tree
+    would reassociate float adds and break bitwise equality between split
+    and merged batches). Rows outside [0, m), unmapped, voided, or past the
+    lost-frac filter scatter to a dropped index.
+    """
+    m = state.level.shape[0]
+    p, T = log_b.shape
+    srv = block.server
+    valid = block.valid & (block.lost_frac <= max_lost_frac)
+    valid &= (srv >= 0) & (srv < m)
+    s_clip = jnp.clip(srv, 0, m - 1)
+    row = row_map[s_clip]
+    valid &= (row >= 0) & (row < p)
+    r_clip = jnp.clip(row, 0, p - 1)
+    t_clip = jnp.clip(block.wtype, 0, T - 1)
+    pred = log_b[r_clip, t_clip] + (block.co * L_t[r_clip, t_clip]).sum(axis=1)
+    resid = block.y - pred  # [B]
+    rows_n = state.pool_level.shape[0]
+    r_idx = jnp.clip(r_clip, 0, rows_n - 1)
+
+    def step(carry, x):
+        stat, level, n, pool_level, pool_n = carry
+        s, rw, r, ok = x
+        # the pool's running residual mean at this row's arrival (bias-
+        # corrected EWMA; an empty pool centers at 0 -- the first row per
+        # pool is the only one that sees uncentered model error)
+        hat = pool_level[rw] / jnp.maximum((1.0 - level_decay) * pool_n[rw], 1e-12)
+        hat = jnp.where(pool_n[rw] > 0, hat, 0.0)
+        x_c = r - hat  # pool-centered: shared model error cancels
+        pos = jnp.maximum(0.0, stat[s, 0] + (x_c - k))
+        neg = jnp.maximum(0.0, stat[s, 1] - (x_c + k))
+        lvl = level_decay * level[s] + (1.0 - level_decay) * r
+        cnt = level_decay * n[s] + 1.0
+        p_lvl = level_decay * pool_level[rw] + (1.0 - level_decay) * r
+        p_cnt = level_decay * pool_n[rw] + 1.0
+        idx = jnp.where(ok, s, m)  # out-of-range scatter: dropped row
+        ridx = jnp.where(ok, rw, rows_n)
+        return (stat.at[idx, 0].set(pos).at[idx, 1].set(neg),
+                level.at[idx].set(lvl), n.at[idx].set(cnt),
+                pool_level.at[ridx].set(p_lvl), pool_n.at[ridx].set(p_cnt)), None
+
+    (stat, level, n, pool_level, pool_n), _ = jax.lax.scan(
+        step, tuple(state), (s_clip, r_idx, resid, valid))
+    return CusumState(stat, level, n, pool_level, pool_n), valid.sum()
+
+
+@jax.jit
+def _reset_rows(state: CusumState, servers) -> CusumState:
+    # per-server state only: pool_level rows are shared (a split or evicted
+    # server's *new* row starts zeroed anyway; its old pool keeps its own)
+    return state._replace(stat=state.stat.at[servers].set(0.0),
+                          level=state.level.at[servers].set(0.0),
+                          n=state.n.at[servers].set(0.0))
+
+
+@jax.jit
+def _reset_stat_rows(state: CusumState, servers) -> CusumState:
+    return state._replace(stat=state.stat.at[servers].set(0.0))
+
+
+@jax.jit
+def _move_pool_row(state: CusumState, src, dst) -> CusumState:
+    lvl, n = state.pool_level, state.pool_n
+    return state._replace(
+        pool_level=lvl.at[dst].set(lvl[src]).at[src].set(0.0),
+        pool_n=n.at[dst].set(n[src]).at[src].set(0.0))
+
+
+@dataclasses.dataclass
+class DriftDetector:
+    """Per-server CUSUM + residual-level detector (see module docstring).
+
+    Parameters
+    ----------
+    m : fleet size (servers, not pools).
+    k : CUSUM allowance, in log-slowdown units -- persistent mean shifts
+        smaller than this are absorbed as noise. Model error of a healthy
+        pool member (Jensen gaps, mid-run co-residency changes) lives well
+        under 0.1; the drifts worth splitting over (a congested subsystem,
+        a decaying disk) shift log-rates by 0.3+.
+    h : CUSUM split threshold: cumulative evidence (in the same log units,
+        beyond the allowance) before a split fires. ~n_obs * (shift - k)
+        accumulates per segment, so h = 2 catches a 0.5-shift within a
+        segment or two of ~10 observations.
+    level_decay : per-observation EWMA decay of the failure level (0.9 ~ a
+        12-observation half-life).
+    fail_floor : observed/predicted rate ratio at or below which a server
+        is failing. Defaults to ``criteria.eviction_rate_floor()`` -- the
+        Eqn-4 threshold the straggler monitor also uses.
+    min_exposure : decayed observations required before the failure signal
+        may fire (an empty EWMA reads 0 = healthy, but a couple of unlucky
+        rows should not evict a server).
+    max_lost_frac : rows past this TDP-overflow fraction are ignored,
+        matching the estimator's filter.
+    """
+
+    m: int
+    k: float = 0.25
+    h: float = 2.0
+    level_decay: float = 0.9
+    fail_floor: float | None = None
+    min_exposure: float = 4.0
+    max_lost_frac: float = 0.5
+
+    def __post_init__(self):
+        if self.fail_floor is None:
+            self.fail_floor = eviction_rate_floor()
+        if not 0.0 < self.fail_floor < 1.0:
+            raise ValueError(f"fail_floor must be in (0, 1), got {self.fail_floor}")
+        self.state = CusumState(
+            stat=jnp.zeros((self.m, 2), jnp.float32),
+            level=jnp.zeros(self.m, jnp.float32),
+            n=jnp.zeros(self.m, jnp.float32),
+            pool_level=jnp.zeros(self.m, jnp.float32),
+            pool_n=jnp.zeros(self.m, jnp.float32),
+        )
+
+    # -- updates -----------------------------------------------------------
+    def update(self, block: RingBlock, log_b, L_t, row_map, sync: bool = True):
+        """Consume one observation block against the pooled model refs.
+
+        ``log_b``/``L_t``/``row_map`` are what ``PooledEstimatorBank.refs``
+        returns (post-update estimates: residuals are measured against the
+        model the next segment will schedule with). Returns rows consumed.
+        """
+        self.state, used = _cusum_update(
+            self.state, block, log_b, L_t,
+            jnp.asarray(row_map, jnp.int32),
+            k=float(self.k), level_decay=float(self.level_decay),
+            max_lost_frac=float(self.max_lost_frac))
+        return int(used) if sync else used
+
+    def reset(self, server: "int | Sequence[int]") -> None:
+        """Zero a server's detector rows (after a split or an eviction, so
+        the acted-on evidence does not immediately re-fire)."""
+        self.state = _reset_rows(self.state, jnp.asarray(server, jnp.int32))
+
+    def reset_all(self) -> None:
+        """Zero the whole detector (end of the controller's warm-up: the
+        evidence accumulated against a cold model confounds load imbalance
+        with divergence and is discarded wholesale)."""
+        self.state = CusumState(*(jnp.zeros_like(a) for a in self.state))
+
+    def move_pool_row(self, src: int, dst: int) -> None:
+        """Move one pool's centering EWMA to a new row (leader split/drop).
+
+        ``PooledEstimatorBank`` records the migration in ``last_migration``;
+        applying the same move here keeps the surviving pool's centering
+        history (instead of restarting it cold on the new leader row) while
+        the departing leader's now-private row starts centering afresh.
+        """
+        self.state = _move_pool_row(self.state, jnp.int32(src), jnp.int32(dst))
+
+    def reset_stat(self, server: "int | Sequence[int]") -> None:
+        """Zero only the CUSUM pair, keeping the failure level.
+
+        For a CUSUM that fires on an already-solo server: there is no pool
+        left to split from (the estimator absorbs the drift), but the
+        residual level must keep accumulating -- it is the failure evidence.
+        """
+        self.state = _reset_stat_rows(self.state, jnp.asarray(server, jnp.int32))
+
+    # -- host-side reads ---------------------------------------------------
+    def stat_max(self) -> np.ndarray:
+        """max(S+, S-) per server -- the split statistic [m]."""
+        return np.asarray(self.state.stat).max(axis=1)
+
+    def split_flags(self) -> np.ndarray:
+        """Servers whose CUSUM crossed ``h`` (bool [m])."""
+        return self.stat_max() >= self.h
+
+    def exposure(self) -> np.ndarray:
+        """Decayed observation count behind the failure level [m]."""
+        return np.asarray(self.state.n, np.float64)
+
+    def level_hat(self) -> np.ndarray:
+        """Bias-corrected running mean of the residual per server [m].
+
+        ``level / ((1 - decay) n)`` is exact: for a constant stream both
+        numerator and denominator carry the same ``(1 - decay^j)`` ramp.
+        Servers with no exposure read 0 (no evidence of anything).
+        """
+        n = self.exposure()
+        denom = np.maximum((1.0 - self.level_decay) * n, 1e-12)
+        out = np.asarray(self.state.level, np.float64) / denom
+        return np.where(n > 0, out, 0.0)
+
+    def fail_flags(self, center: float | np.ndarray = 0.0) -> np.ndarray:
+        """Servers running at or below ``fail_floor`` x reference (bool [m]).
+
+        ``center`` shifts the reference: 0 tests the level absolutely (at or
+        below ``fail_floor`` x what the model predicts); the fleet
+        controller passes the fleet-median level, turning this into the
+        straggler monitor's relative rule (slower than ``fail_floor`` x your
+        siblings) -- one predicate, one knob, two baselines. Gated on
+        ``min_exposure`` so an unobserved (or barely observed) server is
+        never flagged.
+        """
+        lvl = self.level_hat()
+        return (self.exposure() >= self.min_exposure) & (
+            lvl - center <= float(np.log(self.fail_floor)))

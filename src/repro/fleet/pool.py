@@ -1,0 +1,183 @@
+"""Pooled estimation: same-spec servers share one estimator row.
+
+Per-server estimators (PR 2/4) are correct under drift but slow to warm up:
+every server re-learns the same D-matrix from only its own completions. A
+fleet built from m units of the same part can pool their telemetry -- one
+shared estimator warms up ~m x faster -- *until* a unit stops behaving like
+its siblings, at which point pooling averages incompatible worlds (the
+reason ``AdaptiveEngine`` refused to pool in PR 2).
+
+:class:`PooledEstimatorBank` makes pooling a *routing* decision instead of a
+structural one, which is what lets the fleet controller change it online.
+The underlying :class:`~repro.telemetry.EstimatorBank` keeps one row per
+server (its stacked [m, ...] device state never changes shape); a
+server -> row map, applied on device by the bank's ``row_map`` hook, decides
+which row each server's observations update:
+
+  pooled   every member of a pool maps to the pool's *leader row* (the
+           lowest member index); the other members' rows lie dormant. One
+           fused banked update still consumes the whole fleet's telemetry in
+           a single pass -- the scatter indices inside the program are
+           simply pool ids now.
+  split    a diverging server (``fleet.detect`` CUSUM) is re-routed to its
+           own row, seeded with the pool's full posterior
+           (``EstimatorBank.copy_row``): it starts exactly as warm as the
+           pool it left and tracks its private world from there. When the
+           *leader* splits, the pool migrates to the next member's row
+           (seeded the same way) and the leader keeps its own.
+  dropped  an evicted server maps to -1: its rows (there should be none,
+           placement is masked) fall into the update's dump mask. Reads
+           keep returning its last estimator so in-flight consumers never
+           see a hole.
+
+Reads (``estimator_for`` / ``estimate_D``) resolve through the same map, so
+all pool members report the shared estimate and a split server reports its
+own -- callers never see pool topology, only per-server estimators.
+"""
+from __future__ import annotations
+
+from typing import Hashable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..telemetry.estimator import EstimatorBank, StreamingEstimator
+from ..telemetry.log import RingBlock
+
+
+class PooledEstimatorBank:
+    """An :class:`EstimatorBank` routed through a mutable server -> row map.
+
+    ``pools`` labels each server with an arbitrary hashable pool id (servers
+    sharing a label share a row); ``None`` puts every server in its own pool
+    (plain per-server estimation through the same code path).
+    """
+
+    def __init__(
+        self,
+        estimators: Sequence[StreamingEstimator],
+        pools: Sequence[Hashable] | None = None,
+    ):
+        self.bank = EstimatorBank(list(estimators))
+        m = len(self.bank.estimators)
+        if pools is None:
+            pools = list(range(m))
+        if len(pools) != m:
+            raise ValueError(f"{len(pools)} pool labels for {m} estimators")
+        leader: dict[Hashable, int] = {}
+        self.row_of = np.empty(m, np.int32)  # -1 once dropped
+        for s, lab in enumerate(pools):
+            self.row_of[s] = leader.setdefault(lab, s)
+        self._read_row = self.row_of.copy()  # survives drop() for reads
+        self._row_map = jnp.asarray(self.row_of)
+        #: (src_row, dst_row) when the last split()/drop() migrated a pool to
+        #: a new leader row, else None -- consumers holding per-row state
+        #: keyed on pool rows (the drift detector's centering EWMA) move the
+        #: same rows to stay aligned
+        self.last_migration: tuple[int, int] | None = None
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def m(self) -> int:
+        return len(self.bank.estimators)
+
+    @property
+    def estimators(self) -> list[StreamingEstimator]:
+        return self.bank.estimators
+
+    def members(self, server: int) -> tuple[int, ...]:
+        """Servers currently sharing ``server``'s row (itself included)."""
+        row = self.row_of[server]
+        if row < 0:
+            return ()
+        return tuple(int(s) for s in np.flatnonzero(self.row_of == row))
+
+    def pool_size(self, server: int) -> int:
+        return len(self.members(server))
+
+    # -- the fused update --------------------------------------------------
+    def update_device(self, block: RingBlock, sync: bool = True):
+        """One fused observe -> estimate step through the pool map.
+
+        A pooled row consumes every member's rows in the same pass (the
+        ~m x warm-up), dropped servers contribute nothing; otherwise
+        identical to ``EstimatorBank.update_device``.
+        """
+        return self.bank.update_device(block, sync=sync, row_map=self._row_map)
+
+    # -- reads -------------------------------------------------------------
+    def estimator_for(self, server: int) -> StreamingEstimator:
+        """The estimator whose state backs ``server`` (shared when pooled).
+
+        Evicted servers keep resolving to their last row, so consumers
+        holding a reference never see a hole.
+        """
+        return self.bank.estimators[int(self._read_row[server])]
+
+    def estimate_D(self) -> list[np.ndarray]:
+        """Per-server D estimates, computed once per live row."""
+        cache: dict[int, np.ndarray] = {}
+        out = []
+        for s in range(self.m):
+            row = int(self._read_row[s])
+            if row not in cache:
+                cache[row] = self.bank.estimators[row].estimate_D()
+            out.append(cache[row])
+        return out
+
+    def refs(self):
+        """(log_b [m_rows, T], L_t [m_rows, T, T] target-major, row_map [m])
+        -- the pooled model as device arrays, for the drift detector's
+        residual computation. Reads the bank's live stacked state directly
+        (no member flush, no host round trip)."""
+        st = self.bank.stacked_state()
+        return st.log_b, st.L_t, self._row_map
+
+    # -- topology changes (the controller's actions) -----------------------
+    def split(self, server: int) -> bool:
+        """Split ``server`` out of its pool onto its own row.
+
+        The departing row is seeded with the pool posterior (estimates and
+        confidence -- ``EstimatorBank.copy_row``), so both sides continue
+        from the shared warm state and diverge only with future telemetry.
+        Returns False (no-op) when the server is already solo or dropped.
+        A leader split records the pool's row move in ``last_migration``.
+        """
+        self.last_migration = None
+        src = int(self.row_of[server])
+        if src < 0:
+            return False
+        group = [s for s in range(self.m) if self.row_of[s] == src]
+        if len(group) <= 1:
+            return False
+        if src == server:
+            # the leader is leaving: the pool migrates to a new leader row
+            # (seeded from the shared posterior) and the leader keeps src
+            rest = [s for s in group if s != server]
+            new = min(rest)
+            self.bank.copy_row(src, new)
+            for s in rest:
+                self.row_of[s] = new
+                self._read_row[s] = new
+            self.last_migration = (src, new)
+        else:
+            self.bank.copy_row(src, server)
+            self.row_of[server] = server
+            self._read_row[server] = server
+        self._row_map = jnp.asarray(self.row_of)
+        return True
+
+    def drop(self, server: int) -> None:
+        """Stop routing ``server``'s observations anywhere (eviction).
+
+        If the server *led* a pool with other members, the pool migrates to
+        a new leader row first (:meth:`split` semantics, recorded in
+        ``last_migration``) so survivors keep their shared state; a
+        non-leader member just leaves (its dormant row is never touched).
+        Reads continue resolving to the last live row either way.
+        """
+        self.last_migration = None
+        if self.row_of[server] == server and self.pool_size(server) > 1:
+            self.split(server)  # leader: detach the survivors first
+        self.row_of[server] = -1
+        self._row_map = jnp.asarray(self.row_of)

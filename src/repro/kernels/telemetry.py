@@ -26,6 +26,14 @@ Validated against the float64 numpy reference ``kernels.ref.pair_scatter_ref``
 in tests/test_kernels.py. Out-of-range types (e.g. the -1 padding the wrapper
 adds to fill the last block, or rows a validity mask voided upstream) select
 no column and contribute nothing, exactly like the reference's explicit skip.
+
+Index-space contract: the scatter is agnostic to what its row indices *mean*.
+The estimator bank feeds it per-server splits, and since the fleet-health
+subsystem (``repro.fleet``) those indices are **pool ids** -- several servers
+remapped onto one shared estimator row (``EstimatorBank.update_device(...,
+row_map=...)``) -- so a pooled row's statistics accumulate every member's
+observations in the same pass. Rows remapped to -1 (evicted servers) ride the
+same out-of-range drop as padding.
 """
 from __future__ import annotations
 

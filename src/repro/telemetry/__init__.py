@@ -38,8 +38,10 @@ from .drift import (
     degradation_at,
     degrade_server,
     gradual_decay,
+    merge_schedules,
     perturb_spec,
     scale_perf,
+    stochastic_congestion,
 )
 from .estimator import (
     DeviceEstimatorState,
@@ -73,8 +75,10 @@ __all__ = [
     "degrade_server",
     "gradual_decay",
     "make_scatter",
+    "merge_schedules",
     "observations_from_trace",
     "perturb_spec",
     "rows_from_trace",
     "scale_perf",
+    "stochastic_congestion",
 ]

@@ -125,6 +125,57 @@ def congestion_at(
         (DriftEvent(segment, server, congest_server(base[server], factor)),))
 
 
+def stochastic_congestion(
+    base: Sequence[ServerSpec],
+    rate: float,
+    seed: int = 0,
+    *,
+    segments: int = 8,
+    low: float = 0.4,
+    high: float = 0.9,
+    servers: Sequence[int] | None = None,
+) -> DriftSchedule:
+    """Multi-tenant background noise: a stochastic co-tenant per segment.
+
+    The Ivanov et al. virtualized-Hadoop setting: co-tenants outside the
+    scheduler's view come and go, stealing shared storage bandwidth. Each
+    segment, each server is independently congested with probability
+    ``rate`` (a ``congest_server`` event with factor ~ U[low, high] -- the
+    drift that moves the pairwise D-matrix itself) and otherwise reverts to
+    its nominal spec. Events are emitted only on state *changes* (congestion
+    onset, factor change, or clearing), so a quiet fleet stays a short
+    schedule. ``servers`` restricts the process to a subset of the fleet --
+    benchmarks use it to keep one server's injected deterministic divergence
+    out of the noise floor. Deterministic in ``seed``.
+    """
+    if not 0.0 <= rate <= 1.0:
+        raise ValueError(f"congestion rate must be in [0, 1], got {rate}")
+    rng = np.random.default_rng(seed)
+    idx = list(range(len(base))) if servers is None else list(servers)
+    events: list[DriftEvent] = []
+    congested: dict[int, float] = {}  # server -> active congestion factor
+    for seg in range(segments):
+        for s in idx:
+            if rng.random() < rate:
+                factor = float(rng.uniform(low, high))
+                if congested.get(s) != factor:
+                    events.append(DriftEvent(seg, s, congest_server(base[s], factor)))
+                    congested[s] = factor
+            elif s in congested:
+                events.append(DriftEvent(seg, s, base[s]))  # co-tenant left
+                del congested[s]
+    return DriftSchedule(tuple(events))
+
+
+def merge_schedules(*schedules: DriftSchedule) -> DriftSchedule:
+    """Overlay drift schedules (stable order within a segment; later
+    arguments win ties on the same server+segment, since ``specs_at``
+    applies events in sequence)."""
+    events = [ev for sch in schedules for ev in sch.events]
+    order = np.argsort([ev.segment for ev in events], kind="stable")
+    return DriftSchedule(tuple(events[i] for i in order))
+
+
 def gradual_decay(
     base: Sequence[ServerSpec],
     server: int,

@@ -501,6 +501,30 @@ class StreamingEstimator:
         self._dev = state
         self._dev_dirty = True
 
+    # -- posterior export / seed (fleet pooling) ---------------------------
+    def export_posterior(self) -> DeviceEstimatorState:
+        """Device snapshot of the full posterior (estimates + confidence).
+
+        What a pool hands to a server being split out: point estimates
+        (``L_t``, ``log_b``) *and* the accumulated exposure
+        (``n_pair_t``/``n_base``), so the split-out estimator starts exactly
+        as warm as the pool it left (``fleet.pool.PooledEstimatorBank``).
+        """
+        return self.device_state()
+
+    def seed_from(self, state: DeviceEstimatorState) -> None:
+        """Adopt an exported posterior as this estimator's state.
+
+        The inverse of :meth:`export_posterior`: the prior (and every
+        hyperparameter) stays this estimator's own -- only the posterior
+        state is replaced. Safe on banked estimators (the bank's stacked
+        copy is flushed first, then invalidated).
+        """
+        self._pull()  # flush any banked state before overwriting it
+        self._dev = DeviceEstimatorState(*state)
+        self._dev_dirty = True
+        self._mutated()
+
     def pair_confidence(self) -> np.ndarray:
         """Accumulated (decayed) exposure per pair, in co-run units [T, T]."""
         return self.n_pair.copy()
@@ -529,6 +553,23 @@ _update_bank = partial(
     static_argnames=("lr", "decay", "step_damp", "solo_eps", "max_lost_frac",
                      "use_pallas", "interpret"),
 )(_bank_core)
+
+
+@jax.jit
+def _remap_rows(block: RingBlock, row_map) -> RingBlock:
+    """Rewrite a block's server column through ``row_map`` (server -> row).
+
+    The whole of estimator pooling, as data movement: ``row_map[s]`` names
+    the bank row server ``s``'s observations update, so same-spec servers
+    sharing a row warm that row up with every member's telemetry, and a
+    ``-1`` entry (an evicted server) routes its rows to the core's dump
+    mask. Servers outside the map are dropped likewise.
+    """
+    n = row_map.shape[0]
+    s = block.server
+    ok = (s >= 0) & (s < n)
+    row = jnp.where(ok, row_map[jnp.clip(s, 0, n - 1)], -1)
+    return block._replace(ints=jnp.stack([block.wtype, row], axis=1))
 
 
 class EstimatorBank:
@@ -581,23 +622,55 @@ class EstimatorBank:
                 est._absorb_device(
                     DeviceEstimatorState(*(a[s] for a in self._stacked)))
 
-    def update_device(self, block: RingBlock, sync: bool = True):
-        """One fused observe -> estimate step for every server's estimator.
-
-        Rows update the estimator their ``server`` column names; rows with a
-        server outside [0, m) (including voided rows) are dropped. Returns
-        the total rows consumed (host int when ``sync``, device scalar
-        otherwise).
-        """
-        e0 = self.estimators[0]
+    def stacked_state(self) -> DeviceEstimatorState:
+        """The bank's live [m, ...] device state (stacking members on first
+        use). Between banked updates this IS the newest state; readers that
+        stay on device (the fleet detector's reference gather, posterior
+        copies) consume it directly instead of forcing a member flush."""
         if self._stacked is None:
             self._stacked = DeviceEstimatorState(
                 *(jnp.stack(parts)
                   for parts in zip(*(e.device_state() for e in self.estimators))))
+        return self._stacked
+
+    def copy_row(self, src: int, dst: int) -> None:
+        """Seed bank row ``dst`` from row ``src``'s posterior, on device.
+
+        The pool-split primitive: a server leaving a shared row takes the
+        pool's full posterior (estimates + confidence) with it, so it starts
+        exactly as warm as the pool it diverged from. Row ``dst``'s member
+        estimator keeps its own prior and hyperparameters.
+        """
+        m = len(self.estimators)
+        if not (0 <= src < m and 0 <= dst < m):
+            raise IndexError(f"copy_row({src}, {dst}) outside bank of {m}")
+        if src == dst:
+            return
+        st = self.stacked_state()
+        self._stacked = DeviceEstimatorState(*(a.at[dst].set(a[src]) for a in st))
+        self._dirty = True
+
+    def update_device(self, block: RingBlock, sync: bool = True, *,
+                      row_map=None):
+        """One fused observe -> estimate step for every server's estimator.
+
+        Rows update the estimator their ``server`` column names; rows with a
+        server outside [0, m) (including voided rows) are dropped. With
+        ``row_map`` (i32[n_servers], entries in [0, m) or -1), the server
+        column is first rewritten through the map -- the pooling hook: the
+        scatter indices inside the fused program then address *bank rows*
+        (pool ids), not servers, and several servers may share one row
+        (``fleet.pool.PooledEstimatorBank``). Returns the total rows
+        consumed (host int when ``sync``, device scalar otherwise).
+        """
+        e0 = self.estimators[0]
+        stacked = self.stacked_state()
+        if row_map is not None:
+            block = _remap_rows(block, jnp.asarray(row_map, jnp.int32))
         use_pallas = e0.scatter == "pallas" or (
             e0.scatter == "auto" and jax.default_backend() == "tpu")
         new, used = _update_bank(
-            self._stacked, block,
+            stacked, block,
             lr=float(e0.lr), decay=float(e0.decay),
             step_damp=float(e0.step_damp), solo_eps=float(e0.solo_eps),
             max_lost_frac=float(e0.max_lost_frac),

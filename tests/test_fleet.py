@@ -1,0 +1,467 @@
+"""Fleet health subsystem: pooling, CUSUM detection, eviction (ISSUE 5).
+
+Contracts under test:
+  * CUSUM chunk-invariance -- split-vs-merged residual batches leave the
+    detector state bitwise equal (the PR 4 EWMA contract, extended to the
+    detector's sequential scan).
+  * Pool split-then-reseed equivalence -- a split-out server starts from
+    exactly the pool posterior and diverges only with future telemetry.
+  * End-to-end eviction -- a ``gradual_decay``-to-zero server is detected,
+    masked out of candidate scoring (zero placements after detection), its
+    in-flight work requeued, and the fault-tolerance plane notified.
+  * One eviction threshold -- the straggler monitor and the fleet detector
+    route through ``criteria.eviction_rate_floor``.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs.base import MeshConfig
+from repro.core import (
+    M1,
+    AdaptiveEngine,
+    ConsolidationEngine,
+    Workload,
+    snap_to_grid,
+)
+from repro.core.criteria import DEGRADATION_LIMIT, eviction_rate_floor
+from repro.core.workload import FS_GRID, RS_GRID
+from repro.distributed.fault_tolerance import HeartbeatMonitor
+from repro.fleet import CusumState, DriftDetector, FleetController, PooledEstimatorBank
+from repro.telemetry import (
+    ObservationLog,
+    StreamingEstimator,
+    block_from_log,
+    gradual_decay,
+    stochastic_congestion,
+)
+
+from _hyp import given, settings, st
+
+T = len(RS_GRID) * len(FS_GRID)
+
+
+# --- synthetic observation blocks --------------------------------------------
+
+def _obs_log(rng, m=3, B=48, shift=None, types=6):
+    """A synthetic observation batch over ``m`` servers.
+
+    ``shift`` [m] adds a per-server offset to the log-rate -- the divergence
+    the detector is supposed to see.
+    """
+    t = rng.integers(0, types, B).astype(np.int32)
+    srv = rng.integers(0, m, B).astype(np.int32)
+    co = np.zeros((B, T))
+    y = np.zeros(B)
+    for b in range(B):
+        for c in rng.integers(0, types, rng.integers(0, 3)):
+            co[b, c] += 1.0
+        y[b] = -0.1 * co[b].sum() + rng.normal(0.0, 0.01)
+        if shift is not None:
+            y[b] += shift[srv[b]]
+    return ObservationLog(
+        wtype=t, server=srv, duration=np.ones(B), rate=np.exp(y),
+        geo_rate=np.exp(y), co_counts=co, lost_frac=np.zeros(B))
+
+
+def _slice_block(block, lo, hi):
+    return type(block)(*(np.asarray(a)[lo:hi] for a in block))
+
+
+def _rand_refs(rng, p):
+    log_b = jnp.asarray(rng.normal(0.0, 0.2, (p, T)), jnp.float32)
+    L_t = jnp.asarray(rng.normal(-0.05, 0.02, (p, T, T)), jnp.float32)
+    return log_b, L_t
+
+
+# --- CUSUM chunk invariance ---------------------------------------------------
+
+def _check_cusum_chunk_invariance(seed, splits=4):
+    """Split-vs-merged blocks leave the detector state bitwise equal.
+
+    The detector folds rows strictly in stream order (a sequential scan, no
+    reassociation), so chunking must not change a single bit of the state --
+    the same contract the PR 4 exposure-based EWMA test pins for the
+    estimator's confidence state.
+    """
+    rng = np.random.default_rng(seed)
+    m = 3
+    log_b, L_t = _rand_refs(rng, m)
+    row_map = np.asarray([0, 0, 2], np.int32)  # a pool of two + a solo row
+
+    log = _obs_log(rng, m=m, B=64, shift=np.array([0.0, -0.4, 0.1]))
+    block = block_from_log(log)
+    # void a few rows and push one server out of range: the masks must drop
+    # identical rows on both paths
+    scalars = np.asarray(block.scalars).copy()
+    scalars[::11, 3] = 0.0
+    ints = np.asarray(block.ints).copy()
+    ints[::13, 1] = m + 5
+    block = block._replace(scalars=jnp.asarray(scalars), ints=jnp.asarray(ints))
+
+    merged = DriftDetector(m=m)
+    split = DriftDetector(m=m)
+    merged.update(block, log_b, L_t, row_map)
+    bounds = np.linspace(0, 64, splits + 1).astype(int)
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        split.update(_slice_block(block, lo, hi), log_b, L_t, row_map)
+
+    for a, b, name in zip(merged.state, split.state, CusumState._fields):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"detector state {name}")
+
+
+def test_cusum_chunk_invariance():
+    _check_cusum_chunk_invariance(0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=1, max_value=10_000))
+def test_cusum_chunk_invariance_property(seed):
+    _check_cusum_chunk_invariance(seed, splits=1 + seed % 6)
+
+
+def test_cusum_empty_block_is_identity():
+    rng = np.random.default_rng(1)
+    det = DriftDetector(m=2)
+    log_b, L_t = _rand_refs(rng, 2)
+    before = [np.asarray(a).copy() for a in det.state]
+    used = det.update(_slice_block(block_from_log(_obs_log(rng, m=2)), 0, 0),
+                      log_b, L_t, np.arange(2, dtype=np.int32))
+    assert used == 0
+    for a, b in zip(before, det.state):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_cusum_detects_divergence_and_failure_level():
+    """A shifted server fires the split flag; its (raw) residual level
+    tracks the shift while healthy siblings stay quiet."""
+    rng = np.random.default_rng(2)
+    m = 4
+    log_b, L_t = _rand_refs(rng, m)
+    row_map = np.zeros(m, np.int32)  # one pool
+    det = DriftDetector(m=m)
+    # healthy warm-in: no flags
+    for _ in range(4):
+        det.update(block_from_log(_obs_log(rng, m=m)), log_b, L_t, row_map)
+    assert not det.split_flags().any()
+    assert not det.fail_flags().any()
+    # server 3 collapses to ~25% of its predicted rate: its pool-centered
+    # CUSUM fires within one batch, long before the healthy siblings (whose
+    # centered residuals carry only the dragged pool mean, ~shift/m)
+    shift = np.array([0.0, 0.0, 0.0, np.log(0.25)])
+    det.update(block_from_log(_obs_log(rng, m=m, shift=shift)),
+               log_b, L_t, row_map)
+    assert det.split_flags()[3] and not det.split_flags()[:3].any()
+    # more evidence: the raw level approximates the shift -> failure flag
+    # (raw, not centered: siblings stay clear even once their CUSUM drifts)
+    for _ in range(2):
+        det.update(block_from_log(_obs_log(rng, m=m, shift=shift)),
+                   log_b, L_t, row_map)
+    assert det.level_hat()[3] == pytest.approx(np.log(0.25), abs=0.35)
+    assert det.fail_flags()[3] and not det.fail_flags()[:3].any()
+
+
+# --- pooling ------------------------------------------------------------------
+
+def _estimators(n, **overrides):
+    kw = dict(T=T, prior_D=0.0, lr=0.5, decay=0.995, confidence_floor=2.0,
+              scatter="jnp")
+    kw.update(overrides)
+    return [StreamingEstimator(**kw) for _ in range(n)]
+
+
+def test_pooled_bank_routes_members_to_one_row():
+    """A pooled update equals one estimator consuming every member's rows --
+    the ~m x warm-up is literally shared statistics."""
+    rng = np.random.default_rng(3)
+    logs = [_obs_log(rng, m=3, B=64) for _ in range(4)]
+
+    pool = PooledEstimatorBank(_estimators(3), pools=["a", "a", "a"])
+    solo = _estimators(1)[0]
+    for log in logs:
+        used_p = pool.update_device(block_from_log(log))
+        merged = ObservationLog(**{**{f: getattr(log, f) for f in
+                                      ("wtype", "duration", "rate", "geo_rate",
+                                       "co_counts", "lost_frac")},
+                                   "server": np.zeros(len(log), np.int32)})
+        used_s = solo.update_device(block_from_log(merged))
+        assert used_p == used_s
+    lead = pool.estimator_for(2)  # all members resolve to the leader row
+    assert lead is pool.estimator_for(0) is pool.estimator_for(1)
+    np.testing.assert_allclose(lead.L, solo.L, atol=1e-6)
+    np.testing.assert_allclose(lead.log_b, solo.log_b, atol=1e-6)
+    assert lead.n_obs == solo.n_obs
+
+
+def test_pool_split_then_reseed_equivalence():
+    """The split-out row carries exactly the pool posterior at split time,
+    then diverges only with its own telemetry (the pool stays untouched)."""
+    rng = np.random.default_rng(4)
+    pool = PooledEstimatorBank(_estimators(3), pools=[0, 0, 0])
+    for _ in range(5):
+        pool.update_device(block_from_log(_obs_log(rng, m=3)))
+
+    snap = pool.estimator_for(2).export_posterior()
+    assert pool.split(2) and pool.members(2) == (2,)
+    assert pool.members(0) == (0, 1)
+    est2, est0 = pool.estimator_for(2), pool.estimator_for(0)
+    assert est2 is not est0
+    # seeded from the pool posterior: estimates AND confidence match
+    np.testing.assert_allclose(est2.L, est0.L, atol=1e-7)
+    np.testing.assert_allclose(est2.n_pair, est0.n_pair, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(snap.log_b), est2.log_b, atol=1e-6)
+
+    # rows for server 2 now update only row 2; the pool is untouched
+    log = _obs_log(rng, m=3, shift=np.array([0.0, 0.0, -0.5]))
+    only2 = log.select(log.server == 2)
+    pool_L_before = est0.L.copy()
+    pool.update_device(block_from_log(only2))
+    np.testing.assert_allclose(pool.estimator_for(0).L, pool_L_before,
+                               atol=1e-7)
+    assert not np.allclose(pool.estimator_for(2).L, pool_L_before, atol=1e-4)
+
+    # splitting a solo (or already-split) server is a no-op
+    assert not pool.split(2)
+
+    # seed_from restores an exported posterior exactly
+    est2.seed_from(snap)
+    np.testing.assert_allclose(est2.L, est0.L, atol=1e-7)
+
+
+def test_pool_leader_split_migrates_pool():
+    rng = np.random.default_rng(5)
+    pool = PooledEstimatorBank(_estimators(3), pools=[0, 0, 0])
+    pool.update_device(block_from_log(_obs_log(rng, m=3)))
+    lead_L = pool.estimator_for(0).L.copy()
+    assert pool.split(0)  # the leader leaves; the pool migrates to row 1
+    assert pool.last_migration == (0, 1)  # recorded for row-keyed consumers
+    assert pool.members(0) == (0,) and pool.members(1) == (1, 2)
+    np.testing.assert_allclose(pool.estimator_for(1).L, lead_L, atol=1e-7)
+    np.testing.assert_allclose(pool.estimator_for(0).L, lead_L, atol=1e-7)
+    # a non-leader split records no migration
+    assert pool.split(2) is False or pool.last_migration is None
+
+    # the detector moves its pool-centering EWMA along the same migration
+    det = DriftDetector(m=3)
+    log_b, L_t = _rand_refs(rng, 3)
+    det.update(block_from_log(_obs_log(rng, m=3)), log_b, L_t,
+               np.zeros(3, np.int32))
+    lvl0 = float(np.asarray(det.state.pool_level)[0])
+    assert lvl0 != 0.0
+    det.move_pool_row(0, 1)
+    moved = np.asarray(det.state.pool_level)
+    assert moved[1] == lvl0 and moved[0] == 0.0
+
+
+def test_pool_drop_stops_routing_but_keeps_reads():
+    rng = np.random.default_rng(6)
+    pool = PooledEstimatorBank(_estimators(3), pools=[0, 0, 0])
+    blk = block_from_log(_obs_log(rng, m=3, B=60))
+    pool.update_device(blk)
+    pool.drop(1)
+    assert pool.last_migration is None  # non-leader: pool row untouched
+    est = pool.estimator_for(1)  # reads still resolve -- to the live pool row
+    assert est is pool.estimator_for(0)
+    used = pool.update_device(block_from_log(_obs_log(rng, m=3, B=60)))
+    assert used < 60  # server 1's rows were dropped
+    assert pool.members(1) == ()
+    assert est is pool.estimator_for(1)
+    # dropping the leader migrates the survivors first
+    pool.drop(0)
+    assert pool.last_migration == (0, 2) and pool.members(2) == (2,)
+
+
+# --- candidate-scoring mask ---------------------------------------------------
+
+def _mini_trace(seed, n=12):
+    rng = np.random.default_rng(seed)
+    out, t = [], 0.0
+    for _ in range(n):
+        fs = float(rng.choice(FS_GRID[10:13]))
+        w = snap_to_grid(Workload(fs=fs, rs=float(rng.choice(RS_GRID[5:7])),
+                                  data_total=fs * 4))
+        t += float(rng.exponential(1e-5))
+        out.append((t, w))
+    return out
+
+
+def test_engine_active_mask_excludes_server():
+    engine = ConsolidationEngine([M1, M1])
+    trace = _mini_trace(7)
+    res_all = engine.run(trace, backend="jax")
+    assert any(p == 1 for p in res_all.placements)  # both servers in play
+
+    engine.set_active([True, False])
+    res_masked = engine.run(trace, backend="jax")
+    assert all(p != 1 for p in res_masked.placements)
+
+    # numpy oracle has no mask: refuse rather than silently ignore
+    with pytest.raises(ValueError, match="mask"):
+        engine.run(trace, backend="numpy")
+
+    # restoring the mask restores the placements
+    engine.set_active([True, True])
+    assert engine.run(trace, backend="jax").placements == res_all.placements
+
+    # the constructor takes the mask directly (one cluster build), and
+    # 'auto' resolves a masked engine to jax even on a short trace
+    ctor = ConsolidationEngine([M1, M1], active=[True, False])
+    res_ctor = ctor.run(trace)
+    assert res_ctor.backend == "jax"
+    assert all(p != 1 for p in res_ctor.placements)
+
+    # every scoring consumer honours the mask: local-search relocations
+    # never target the evicted server, and assignments on it are infeasible
+    from repro.core import evaluate_assignment, local_search_jax
+
+    cluster = ctor.cluster
+    counts = jnp.zeros((2, cluster.T), jnp.float32).at[0, 5].set(3.0)
+    moved, n_moves = local_search_jax(cluster, counts)
+    assert float(np.asarray(moved)[1].sum()) == 0.0
+    wtypes = jnp.asarray([5], jnp.int32)
+    _, ok_bad = evaluate_assignment(cluster, jnp.zeros_like(counts), wtypes,
+                                    jnp.asarray([1]))
+    _, ok_good = evaluate_assignment(cluster, jnp.zeros_like(counts), wtypes,
+                                     jnp.asarray([0]))
+    assert bool(ok_good) and not bool(ok_bad)
+
+
+# --- one eviction threshold ---------------------------------------------------
+
+def test_eviction_threshold_is_shared():
+    """Straggler policy and the fleet detector read one conversion of the
+    Eqn-4 limit; the boundary (exactly 2x slower) evicts on both."""
+    assert eviction_rate_floor() == pytest.approx(1.0 - DEGRADATION_LIMIT)
+    assert DriftDetector(m=2).fail_floor == eviction_rate_floor()
+    assert FleetController().fail_floor == eviction_rate_floor()
+    with pytest.raises(ValueError):
+        eviction_rate_floor(1.5)
+
+    mon = HeartbeatMonitor(n_hosts=3)
+    for h in range(2):
+        for t in range(10):
+            mon.heartbeat(h, now=t, step_time=1.0)
+    for t in range(10):
+        mon.heartbeat(2, now=t, step_time=2.0)  # exactly the 2x boundary
+    assert mon.stragglers() == [2]
+    assert mon.stragglers(limit=0.6) == []  # laxer limit: 2x is tolerable
+
+
+# --- drift scenario -----------------------------------------------------------
+
+def test_stochastic_congestion_schedule():
+    base = [M1, M1, M1]
+    sched = stochastic_congestion(base, rate=0.5, seed=9, segments=6)
+    assert sched.events  # a 50% rate over 18 draws congests something
+    twin = stochastic_congestion(base, rate=0.5, seed=9, segments=6)
+    assert sched == twin  # deterministic in the seed
+    assert all(0 <= ev.segment < 6 for ev in sched.events)
+    segs = [ev.segment for ev in sched.events]
+    assert segs == sorted(segs)  # ordered: later events override earlier
+    # congestion events actually move the spec; clears restore the base
+    for ev in sched.events:
+        if ":cong" in ev.spec.name:
+            assert ev.spec.shared_bw < base[ev.server].shared_bw
+        else:
+            assert ev.spec == base[ev.server]
+    assert stochastic_congestion(base, rate=0.0, seed=9).events == ()
+    # restriction keeps excluded servers un-touched
+    only12 = stochastic_congestion(base, rate=0.9, seed=9, servers=[1, 2])
+    assert {ev.server for ev in only12.events} <= {1, 2}
+    with pytest.raises(ValueError):
+        stochastic_congestion(base, rate=1.5)
+
+
+# --- end to end: decay -> detect -> evict -> requeue --------------------------
+
+def test_gradual_decay_eviction_end_to_end():
+    """The ISSUE 5 acceptance trace: a server decaying toward zero is
+    evicted, receives no placements afterwards, its in-flight work is
+    requeued, and the fault-tolerance plane is told."""
+    rng = np.random.default_rng(11)
+    seg, t = [], 0.0
+    for _ in range(14):
+        fs = float(rng.choice(FS_GRID[10:14]))
+        w = snap_to_grid(Workload(fs=fs, rs=float(rng.choice(RS_GRID[5:8])),
+                                  data_total=fs * 6))
+        t += float(rng.exponential(2e-5))
+        seg.append((t, w))
+    segments, failing = 6, 1
+    arrivals = [(t + k * 10.0, w) for k in range(segments) for t, w in seg]
+    servers = [M1, M1, M1]
+    drift = gradual_decay(servers, server=failing, rate=0.65, start=1,
+                          segments=segments)
+    fleet = FleetController(mesh=MeshConfig())
+    eng = AdaptiveEngine(servers, prior=0.0, decay=0.997, drift=drift,
+                         fleet=fleet)
+    assert eng.stream and eng.bank is None  # the controller owns the bank
+    res = eng.run(arrivals, segments=segments)
+
+    evicts = fleet.events_of("evict")
+    assert len(evicts) == 1 and evicts[0].server == failing
+    k_ev = evicts[0].segment
+    assert k_ev < segments - 1  # detected with segments to spare
+
+    # the result records the event where it fired
+    assert any(ev.kind == "evict" for ev in res.health[k_ev])
+    # zero placements on the failing server after detection
+    after = [p for r in res.segments[k_ev + 1:] for p in r.placements]
+    assert after and all(p != failing for p in after)
+    # in-flight work on the failing server was requeued into the next chunk
+    on_failing = sum(1 for p in res.segments[k_ev].placements if p == failing)
+    assert len(res.segments[k_ev + 1].placements) == len(seg) + on_failing
+    # fault-tolerance plane: marked dead + a composed remesh plan
+    assert not fleet.monitor.hosts[failing].alive
+    assert fleet.monitor.hosts[1 - failing].alive
+    assert len(fleet.plans) == 1 and fleet.plans[0].lost_fraction > 0
+    assert fleet.active_mask().tolist() == [True, False, True]
+    # the estimators keep serving reads for the evicted server
+    assert fleet.current_D()[failing].shape == (T, T)
+
+
+def test_never_evicts_last_server():
+    """A failing sibling is evicted; the lone survivor never is -- a sick
+    fleet still beats an empty one (and the pooled base route cannot fire
+    for a shared row, so a pool never evicts wholesale)."""
+    rng = np.random.default_rng(12)
+    fleet = FleetController(warmup_segments=0)
+    fleet.bind([M1, M1], _estimators(2))
+    for k in range(4):
+        fleet.observe(block_from_log(
+            _obs_log(rng, m=2, shift=np.array([0.0, -2.0]))), segment=k)
+    assert fleet.evicted() == (1,)
+    for k in range(4, 10):  # now the survivor collapses too: still kept
+        fleet.observe(block_from_log(
+            _obs_log(rng, m=2, shift=np.array([-2.0, -2.0]))), segment=k)
+    assert fleet.evicted() == (1,)
+    assert fleet.active_mask().tolist() == [True, False]
+
+
+def test_warmup_counts_controller_segments_not_caller_indices():
+    """Burn-in happens once per controller lifetime: a second run that
+    numbers its segments from 0 again must not re-trigger it (the model is
+    already warm, and due actions must not be delayed or wiped)."""
+    rng = np.random.default_rng(13)
+    fleet = FleetController(warmup_segments=2)
+    fleet.bind([M1, M1, M1], _estimators(3))
+    for k in range(2):  # first run: burn-in consumed
+        fleet.observe(block_from_log(_obs_log(rng, m=3)), segment=k)
+    # "second run" restarts segment numbering at 0: actions still fire
+    for k in range(3):
+        fleet.observe(block_from_log(
+            _obs_log(rng, m=3, shift=np.array([0.0, 0.0, -2.0]))), segment=k)
+        if fleet.evicted():
+            break
+    assert fleet.evicted() == (2,)
+
+
+def test_fleet_controller_binds_once():
+    fleet = FleetController()
+    AdaptiveEngine([M1, M1], fleet=fleet)
+    with pytest.raises(RuntimeError, match="bound"):
+        AdaptiveEngine([M1, M1], fleet=fleet)
+    unbound = FleetController()
+    with pytest.raises(RuntimeError, match="bind"):
+        unbound.active_mask()
