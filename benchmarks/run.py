@@ -70,6 +70,14 @@ def main() -> None:
     out_dir.mkdir(parents=True, exist_ok=True)
     meta = {"commit": git_commit(), "smoke": bool(args.smoke)}
 
+    if args.smoke:
+        # refuse to measure an impure hot path: the same gate CI runs as the
+        # static-analysis job (unbaselined findings -> SystemExit)
+        from repro.analysis import preflight
+
+        preflight()
+        print("analysis preflight: clean")
+
     print("name,us_per_call,derived")
 
     records: list[dict] = []

@@ -1,0 +1,118 @@
+"""Device-purity auditor: static invariant checks for the consolidation hot path.
+
+The ROADMAP's next frontier is a fully device-resident closed loop with "no
+host in the hot path" -- but nothing *proves* a hot path is host-free,
+retrace-free, or within Pallas VMEM budgets. Regressions creep silently: a
+per-segment ``np.asarray`` pull re-appears behind a property, a debug print
+survives into a jitted program, a donated buffer stops aliasing, a cache key
+starts churning. The paper's contribution is a *guaranteed floor* under
+consolidation (arXiv:1303.7270); this package is the analogous floor for the
+implementation -- a set of machine-checkable purity/shape/donation contracts
+over the code that claims to be device-resident.
+
+Three passes, one report:
+
+  ``jaxpr_audit``  lowers each registered hot entry point to its ClosedJaxpr
+                   and walks it: host callbacks, float64 leakage on device
+                   tiers, dynamic shapes, donation declared-but-unapplicable,
+                   and a Pallas VMEM/grid budget estimator over every
+                   ``pallas_call`` equation found in the trace.
+  ``ast_rules``    repo-specific AST lint: no ``np.*`` / ``.item()`` / host
+                   coercions / Python branching on traced values inside
+                   jitted functions (and ``while_loop``/``scan`` bodies), no
+                   reuse of a donated ring view after a push, and every
+                   ``pallas_call`` site must be covered by a registered
+                   budget entry.
+  ``retrace``      a compile-cache guard asserting a fixed multi-segment
+                   ``AdaptiveEngine`` run triggers at most one trace per
+                   distinct spec -- and zero on a rerun (the regression
+                   detector for the PR 4/5 engine-caching work).
+
+``python -m repro.analysis --baseline analysis-baseline.json`` emits a JSON
+report and fails on any finding not in the checked-in baseline; the baseline
+is seeded (ideally empty) by fixing current violations once. The same command
+runs as a CI gate and as the ``benchmarks/run.py --smoke`` preflight, so a
+bench run refuses to measure an impure hot path. DESIGN.md §12 documents the
+tier contract table and how to register a new hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Iterable, Sequence
+
+#: the checked-in baseline at the repo root (src/repro/analysis -> repo)
+BASELINE_PATH = pathlib.Path(__file__).resolve().parents[3] / "analysis-baseline.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One invariant violation, stable enough to baseline.
+
+    ``key()`` identifies a finding across runs (pass + rule + location);
+    ``detail`` is human context and deliberately excluded from the key so a
+    reworded message does not un-baseline an old finding.
+    """
+
+    analysis: str  # which pass: 'jaxpr' | 'ast' | 'vmem' | 'donation' | 'retrace'
+    rule: str  # machine-readable rule id, e.g. 'host-callback'
+    where: str  # entry-point name or file:line
+    detail: str = ""
+
+    def key(self) -> str:
+        return f"{self.analysis}:{self.rule}:{self.where}"
+
+    def render(self) -> str:
+        msg = f"[{self.analysis}/{self.rule}] {self.where}"
+        return f"{msg} -- {self.detail}" if self.detail else msg
+
+
+def load_baseline(path: "pathlib.Path | str | None" = None) -> set[str]:
+    """The set of baselined finding keys (empty when no file exists)."""
+    p = pathlib.Path(path) if path is not None else BASELINE_PATH
+    if not p.exists():
+        return set()
+    data = json.loads(p.read_text())
+    return set(data.get("findings", []))
+
+def write_baseline(findings: Sequence[Finding], path: "pathlib.Path | str | None" = None) -> None:
+    p = pathlib.Path(path) if path is not None else BASELINE_PATH
+    p.write_text(json.dumps(
+        {"findings": sorted({f.key() for f in findings})}, indent=2) + "\n")
+
+
+def new_findings(findings: Iterable[Finding], baseline: set[str]) -> list[Finding]:
+    """Findings not explained by the baseline (the CI failure set)."""
+    return [f for f in findings if f.key() not in baseline]
+
+
+def run_all(retrace: bool = True) -> tuple[list[Finding], dict]:
+    """Run every pass; returns (findings, stats) -- the CLI/preflight core."""
+    from . import ast_rules, jaxpr_audit
+    findings: list[Finding] = []
+    stats: dict = {}
+    findings += jaxpr_audit.run_jaxpr_audit(stats=stats)
+    findings += ast_rules.run_ast_rules(stats=stats)
+    if retrace:
+        from . import retrace as retrace_mod
+        findings += retrace_mod.run_retrace_audit(stats=stats)
+    return findings, stats
+
+
+def preflight(baseline: "pathlib.Path | str | None" = None, retrace: bool = True) -> None:
+    """Refuse to proceed (SystemExit) on unbaselined findings.
+
+    ``benchmarks/run.py --smoke`` calls this before measuring anything: a
+    bench number taken over an impure hot path (host callback, retrace churn,
+    VMEM overflow) is not a measurement of the system the contracts describe.
+    """
+    findings, _ = run_all(retrace=retrace)
+    fresh = new_findings(findings, load_baseline(baseline))
+    if fresh:
+        for f in fresh:
+            print(f"analysis preflight: {f.render()}")
+        raise SystemExit(
+            f"analysis preflight: {len(fresh)} unbaselined finding(s); "
+            "refusing to benchmark an impure hot path "
+            "(run `python -m repro.analysis` for the report)")

@@ -1,0 +1,70 @@
+"""``python -m repro.analysis``: run every pass, emit the JSON report.
+
+Exit status is the CI contract: 0 when every finding is explained by the
+baseline, 1 otherwise. ``--write-baseline`` triages the current findings
+into the baseline file (used once, at adoption, to seed it -- ideally
+empty); ``--no-retrace`` skips the compile-cache guard (the one pass that
+executes programs rather than just tracing them).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import (
+    BASELINE_PATH,
+    load_baseline,
+    new_findings,
+    run_all,
+    write_baseline,
+)
+
+
+def main(argv: "list[str] | None" = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="device-purity auditor: jaxpr + AST + retrace passes")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help=f"baseline JSON (default: {BASELINE_PATH.name} at the repo root)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the current findings as the new baseline and exit 0")
+    ap.add_argument("--no-retrace", action="store_true",
+                    help="skip the compile-cache guard pass (fast, trace-only run)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the full machine-readable report on stdout")
+    args = ap.parse_args(argv)
+
+    findings, stats = run_all(retrace=not args.no_retrace)
+    baseline = load_baseline(args.baseline)
+    fresh = new_findings(findings, baseline)
+
+    report = {
+        "findings": [vars(f) for f in findings],
+        "new": [f.key() for f in fresh],
+        "baselined": sorted(baseline),
+        "stats": stats,
+    }
+    if args.json:
+        print(json.dumps(report, indent=2))
+    else:
+        for f in findings:
+            mark = "NEW " if f in fresh else "base"
+            print(f"[{mark}] {f.render()}")
+        n_entries = len(stats.get("jaxpr", {}))
+        ast_stats = stats.get("ast", {})
+        print(f"audited {n_entries} hot entries, "
+              f"{ast_stats.get('jit_contexts', 0)} jitted contexts in "
+              f"{ast_stats.get('files', 0)} files, "
+              f"{ast_stats.get('pallas_sites', 0)} pallas sites: "
+              f"{len(findings)} finding(s), {len(fresh)} new")
+
+    if args.write_baseline:
+        write_baseline(findings, args.baseline)
+        print(f"baseline written ({len(findings)} finding(s))")
+        return 0
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

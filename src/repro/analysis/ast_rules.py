@@ -1,0 +1,408 @@
+"""Repo-specific AST lint: host habits that break inside a trace.
+
+The jaxpr audit (``jaxpr_audit``) proves properties of what the registered
+entry points *lower to*; this pass reads the source instead, so it covers
+every jitted function in the repo -- including ones no registry entry
+reaches -- and catches the mistakes before they ever trace:
+
+  np-on-traced       a ``np.*`` call fed a traced value inside a jitted
+                     function: numpy pulls the array to host (or fails),
+                     silently de-jitting the path.
+  host-item /        ``.item()`` / ``float()`` / ``int()`` / ``bool()`` on a
+  host-coercion      traced value: a device sync per call (the exact leak
+                     PR 4 removed from the per-segment loop).
+  traced-branch      Python ``if``/``while`` on a traced value: under jit
+                     this is a TracerBoolConversionError at best, a silently
+                     trace-time-frozen branch at worst (``jnp.where``/
+                     ``lax.cond`` is the device form).
+  traced-iteration   Python ``for`` directly over a traced array (iterating
+                     static containers -- pytrees, ``zip`` of NamedTuple
+                     fields -- is fine and not flagged).
+  stale-ring-view    reading a name bound from ``ObservationRing.view()``
+                     after a later ``push``/``push_trace`` on the same ring:
+                     pushes donate the buffers, so the view's arrays are
+                     deleted (``log.ObservationRing.view`` lifetime contract).
+  pallas-uncovered   a ``pl.pallas_call`` site in a file outside
+                     ``jaxpr_audit.PALLAS_COVERAGE``: every kernel must have
+                     a registered entry so its BlockSpecs pass the VMEM /
+                     grid-divisibility budget (the estimator runs on the
+                     *traced* grid_mapping, which is exact where an AST
+                     guess would not be).
+
+What counts as a jitted context (all discovered statically, per module):
+
+  * ``@jax.jit`` / ``@partial(jax.jit, static_argnames=...)`` decorated defs
+  * ``g = jax.jit(f)`` and ``g = partial(jax.jit, ...)(f)`` assignments
+  * bodies handed to ``lax.while_loop`` / ``scan`` / ``fori_loop`` /
+    ``cond`` / ``switch`` (resolved by name, including through lists)
+  * Pallas kernel bodies: the first argument of ``pl.pallas_call`` (resolved
+    through ``functools.partial(kernel, ...)`` bindings)
+
+Inside a context, taint starts at the non-static parameters (names listed in
+``static_argnames`` stay host values) and propagates through assignments.
+Shape metadata is *static by construction*: ``x.shape`` / ``.ndim`` /
+``.dtype`` / ``.size`` and anything derived from them never taints, which is
+what keeps ``if n_steps is None``, ``m, T = log_b.shape`` and
+``for k in range(K)`` clean without per-site suppressions.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+from typing import Iterable
+
+from . import Finding
+from .jaxpr_audit import PALLAS_COVERAGE
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[3]
+SRC_ROOT = REPO_ROOT / "src" / "repro"
+
+#: attributes that yield static (host) metadata even on a traced array
+SHAPE_ATTRS = frozenset({"shape", "ndim", "dtype", "size"})
+#: control-flow wrappers whose function-valued args are traced bodies
+TRACED_BODY_CALLS = frozenset(
+    {"while_loop", "scan", "fori_loop", "cond", "switch", "associative_scan"})
+HOST_COERCIONS = frozenset({"float", "int", "bool", "complex"})
+
+
+def _dotted(node) -> str:
+    """'jax.lax.while_loop' for nested Attribute chains ('' if not one)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jax_jit(node) -> bool:
+    return _dotted(node) in ("jax.jit", "jit")
+
+
+def _static_names_of_call(call: ast.Call) -> set[str]:
+    """static_argnames from a ``jax.jit(...)`` / ``partial(jax.jit, ...)``."""
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            names = set()
+            for el in ast.walk(kw.value):
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    names.add(el.value)
+            return names
+    return set()
+
+
+@dataclasses.dataclass
+class JitContext:
+    """One function body that runs under trace."""
+
+    fn: ast.FunctionDef
+    kind: str  # 'jit' | 'loop-body' | 'pallas-kernel'
+    static_names: set[str] = dataclasses.field(default_factory=set)
+    all_params_traced: bool = True
+
+
+def _param_names(fn: ast.FunctionDef, positional_only: bool = False) -> list[str]:
+    a = fn.args
+    params = list(a.posonlyargs) + list(a.args)
+    if not positional_only:
+        params += list(a.kwonlyargs)
+    return [p.arg for p in params]
+
+
+def discover_contexts(tree: ast.Module) -> list[JitContext]:
+    """Every jitted/traced function body in one module (see module doc)."""
+    defs: dict[str, ast.FunctionDef] = {}
+    partial_of: dict[str, str] = {}  # x = functools.partial(f, ...) -> f
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs[node.name] = node
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt, val = node.targets[0], node.value
+            if (isinstance(tgt, ast.Name) and isinstance(val, ast.Call)
+                    and _dotted(val.func).split(".")[-1] == "partial"
+                    and val.args and isinstance(val.args[0], ast.Name)):
+                partial_of[tgt.id] = val.args[0].id
+
+    out: dict[int, JitContext] = {}
+
+    def add(name_node, kind: str, static: set[str]):
+        name = name_node.id if isinstance(name_node, ast.Name) else None
+        if name is None and isinstance(name_node, ast.Call):
+            # partial(kernel, ...) inline
+            f = name_node
+            if (_dotted(f.func).split(".")[-1] == "partial" and f.args
+                    and isinstance(f.args[0], ast.Name)):
+                name = f.args[0].id
+        if name in partial_of:
+            name = partial_of[name]
+        fn = defs.get(name or "")
+        if fn is not None and id(fn) not in out:
+            out[id(fn)] = JitContext(fn, kind, static)
+
+    for node in ast.walk(tree):
+        # decorated defs
+        if isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                if _is_jax_jit(dec):
+                    out[id(node)] = JitContext(node, "jit", set())
+                elif isinstance(dec, ast.Call):
+                    if _is_jax_jit(dec.func):  # @jax.jit(...)
+                        out[id(node)] = JitContext(
+                            node, "jit", _static_names_of_call(dec))
+                    elif (_dotted(dec.func).split(".")[-1] == "partial"
+                          and dec.args and _is_jax_jit(dec.args[0])):
+                        out[id(node)] = JitContext(
+                            node, "jit", _static_names_of_call(dec))
+        if not isinstance(node, ast.Call):
+            continue
+        callee = _dotted(node.func)
+        leaf = callee.split(".")[-1]
+        # g = jax.jit(f, ...) / partial(jax.jit, ...)(f)
+        if _is_jax_jit(node.func) and node.args and isinstance(node.args[0], ast.Name):
+            add(node.args[0], "jit", _static_names_of_call(node))
+        if (isinstance(node.func, ast.Call) and _dotted(node.func.func).split(".")[-1] == "partial"
+                and node.func.args and _is_jax_jit(node.func.args[0])
+                and node.args and isinstance(node.args[0], ast.Name)):
+            add(node.args[0], "jit", _static_names_of_call(node.func))
+        # control-flow bodies (including lists of branches for switch)
+        if leaf in TRACED_BODY_CALLS and callee.split(".")[0] in ("jax", "lax"):
+            for arg in node.args:
+                if isinstance(arg, (ast.Name, ast.Call)):
+                    add(arg, "loop-body", set())
+                elif isinstance(arg, (ast.List, ast.Tuple)):
+                    for el in arg.elts:
+                        add(el, "loop-body", set())
+        # pallas kernels
+        if leaf == "pallas_call" and node.args:
+            add(node.args[0], "pallas-kernel", set())
+    return list(out.values())
+
+
+class _TaintLinter(ast.NodeVisitor):
+    """Walk one traced function body, propagating taint and flagging."""
+
+    def __init__(self, ctx: JitContext, rel: str,
+                 traced_body_ids: set[int]):
+        self.ctx = ctx
+        self.rel = rel
+        self.traced_body_ids = traced_body_ids  # defs that are loop bodies
+        # in loop bodies and pallas kernels arrays arrive positionally
+        # (carries, refs); keyword-only params are partial-bound config
+        pos_only = ctx.kind != "jit"
+        self.tainted: set[str] = {
+            p for p in _param_names(ctx.fn, positional_only=pos_only)
+            if p not in ctx.static_names}
+        self.findings: list[Finding] = []
+
+    def _flag(self, rule: str, node, detail: str):
+        self.findings.append(Finding(
+            "ast", rule, f"{self.rel}:{node.lineno}",
+            f"{detail} (in `{self.ctx.fn.name}`, {self.ctx.kind})"))
+
+    # -- taint classification ------------------------------------------------
+    def _is_tainted(self, node) -> bool:
+        t = self._is_tainted
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in SHAPE_ATTRS:
+                return False  # static metadata, even of a traced array
+            return t(node.value)
+        if isinstance(node, ast.Subscript):
+            return t(node.value)
+        if isinstance(node, ast.Call):
+            return any(map(t, node.args)) or any(
+                t(kw.value) for kw in node.keywords) or t(node.func)
+        if isinstance(node, (ast.BinOp,)):
+            return t(node.left) or t(node.right)
+        if isinstance(node, ast.BoolOp):
+            return any(map(t, node.values))
+        if isinstance(node, ast.Compare):
+            return t(node.left) or any(map(t, node.comparators))
+        if isinstance(node, ast.UnaryOp):
+            return t(node.operand)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(map(t, node.elts))
+        if isinstance(node, ast.IfExp):
+            return t(node.test) or t(node.body) or t(node.orelse)
+        if isinstance(node, ast.Starred):
+            return t(node.value)
+        if isinstance(node, (ast.GeneratorExp, ast.ListComp, ast.SetComp)):
+            return any(
+                isinstance(n, ast.Name) and n.id in self.tainted
+                for n in ast.walk(node))
+        return False
+
+    def _taint_target(self, target):
+        if isinstance(target, ast.Name):
+            self.tainted.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._taint_target(el)
+        elif isinstance(target, ast.Starred):
+            self._taint_target(target.value)
+
+    # -- statements ----------------------------------------------------------
+    def visit_Assign(self, node):
+        self.visit(node.value)
+        if self._is_tainted(node.value):
+            for tgt in node.targets:
+                self._taint_target(tgt)
+
+    def visit_AugAssign(self, node):
+        self.visit(node.value)
+        if self._is_tainted(node.value):
+            self._taint_target(node.target)
+
+    def visit_AnnAssign(self, node):
+        if node.value is not None:
+            self.visit(node.value)
+            if self._is_tainted(node.value):
+                self._taint_target(node.target)
+
+    def visit_If(self, node):
+        if self._is_tainted(node.test):
+            self._flag("traced-branch", node,
+                       "Python `if` on a traced value -- use jnp.where/lax.cond")
+        self.generic_visit(node)
+
+    def visit_While(self, node):
+        if self._is_tainted(node.test):
+            self._flag("traced-branch", node,
+                       "Python `while` on a traced value -- use lax.while_loop")
+        self.generic_visit(node)
+
+    def visit_For(self, node):
+        # only a *bare* traced array (Name/Attribute) flags: iterating static
+        # containers, pytrees, zip(...) of NamedTuple fields is host-legal
+        if isinstance(node.iter, (ast.Name, ast.Attribute)) and self._is_tainted(node.iter):
+            self._flag("traced-iteration", node,
+                       "Python `for` over a traced array -- use lax.scan/fori_loop")
+        self.generic_visit(node)
+
+    def visit_Call(self, node):
+        callee = _dotted(node.func)
+        root, leaf = (callee.split(".")[0], callee.split(".")[-1]) if callee else ("", "")
+        args_tainted = any(map(self._is_tainted, node.args)) or any(
+            self._is_tainted(kw.value) for kw in node.keywords)
+        if root in ("np", "numpy") and args_tainted:
+            self._flag("np-on-traced", node,
+                       f"`{callee}` on a traced value forces a host sync")
+        if (isinstance(node.func, ast.Attribute) and node.func.attr == "item"
+                and self._is_tainted(node.func.value)):
+            self._flag("host-item", node,
+                       "`.item()` on a traced value is a device sync")
+        if (isinstance(node.func, ast.Name) and node.func.id in HOST_COERCIONS
+                and args_tainted):
+            self._flag("host-coercion", node,
+                       f"`{node.func.id}()` on a traced value is a device sync")
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node):
+        if node is self.ctx.fn:
+            self.generic_visit(node)
+            return
+        # nested def: keep the enclosing taint (closures), add its own params
+        # as traced only when it is itself a registered traced body
+        if id(node) in self.traced_body_ids:
+            self.tainted.update(_param_names(node, positional_only=True))
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def run(self) -> list[Finding]:
+        self.visit(self.ctx.fn)
+        return self.findings
+
+
+# -- stale ring views ----------------------------------------------------------
+
+class _RingViewLinter(ast.NodeVisitor):
+    """Flag reads of a ``.view()`` binding after a later push on the same ring.
+
+    Statement order within one function body is a sound-enough
+    approximation: pushes donate the ring's buffers, deleting the arrays any
+    earlier view still references (``ObservationRing.view`` lifetime note).
+    """
+
+    def __init__(self, rel: str):
+        self.rel = rel
+        self.findings: list[Finding] = []
+
+    def visit_FunctionDef(self, node):
+        views: dict[str, str] = {}  # view var -> ring expression text
+        poisoned: dict[str, int] = {}  # view var -> push lineno
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Assign) and isinstance(sub.value, ast.Call):
+                call = sub.value
+                if (isinstance(call.func, ast.Attribute) and call.func.attr == "view"
+                        and len(sub.targets) == 1
+                        and isinstance(sub.targets[0], ast.Name)):
+                    views[sub.targets[0].id] = _dotted(call.func.value)
+            elif isinstance(sub, ast.Call) and isinstance(sub.func, ast.Attribute):
+                if sub.func.attr in ("push", "push_trace"):
+                    ring = _dotted(sub.func.value)
+                    for var, src in views.items():
+                        if src == ring and var not in poisoned:
+                            poisoned[var] = sub.lineno
+            elif isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load):
+                if sub.id in poisoned and sub.lineno > poisoned[sub.id]:
+                    self.findings.append(Finding(
+                        "ast", "stale-ring-view", f"{self.rel}:{sub.lineno}",
+                        f"`{sub.id}` (a ring view) read after the push at "
+                        f"line {poisoned[sub.id]} donated its buffers"))
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+
+# -- driver --------------------------------------------------------------------
+
+def iter_source_files() -> "Iterable[pathlib.Path]":
+    yield from sorted(SRC_ROOT.rglob("*.py"))
+
+
+def lint_file(path: pathlib.Path) -> tuple[list[Finding], dict]:
+    rel = str(path.relative_to(REPO_ROOT))
+    tree = ast.parse(path.read_text(), filename=rel)
+    contexts = discover_contexts(tree)
+    traced_ids = {id(c.fn) for c in contexts}
+    findings: list[Finding] = []
+    for ctx in contexts:
+        findings += _TaintLinter(ctx, rel, traced_ids).run()
+
+    ring = _RingViewLinter(rel)
+    ring.visit(tree)
+    findings += ring.findings
+
+    n_pallas = 0
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and _dotted(node.func).split(".")[-1] == "pallas_call"):
+            n_pallas += 1
+            if rel not in PALLAS_COVERAGE:
+                findings.append(Finding(
+                    "ast", "pallas-uncovered", f"{rel}:{node.lineno}",
+                    "pallas_call site outside jaxpr_audit.PALLAS_COVERAGE: "
+                    "register a HotEntry so its BlockSpecs are budget-checked"))
+    info = {"contexts": len(contexts), "pallas_sites": n_pallas}
+    return findings, info
+
+
+def run_ast_rules(stats: "dict | None" = None) -> list[Finding]:
+    findings: list[Finding] = []
+    n_files = n_ctx = n_sites = 0
+    for path in iter_source_files():
+        fs, info = lint_file(path)
+        findings += fs
+        n_files += 1
+        n_ctx += info["contexts"]
+        n_sites += info["pallas_sites"]
+    if stats is not None:
+        stats["ast"] = {"files": n_files, "jit_contexts": n_ctx,
+                        "pallas_sites": n_sites,
+                        "findings": len(findings)}
+    return findings

@@ -1,0 +1,154 @@
+"""Compile-cache guard: the hot loop must not re-trace.
+
+PRs 4/5 bought the closed loop its speed by making every per-segment program
+a jit-cache hit -- ``run_trace`` keyed on static (objective, scorer,
+n_steps, telemetry), identity-stable scorers (``make_scorer`` lru-cached),
+module-level jitted estimator/ring/detector programs. Any of those can
+silently regress: a scorer closure rebuilt per segment, a hyperparameter
+coerced to a fresh float becoming a new static key, a shape wobble in the
+ring. Each regression costs a full XLA compile *per segment* instead of
+per topology -- the difference between a control plane and a compiler loop.
+
+:class:`CompileCacheGuard` snapshots ``_cache_size()`` of every tracked
+jitted entry point around a block of work and reports the per-function
+trace deltas. :func:`run_retrace_audit` uses it twice on a small 3-segment
+``AdaptiveEngine`` (stream mode, 2 servers, equal segment shapes):
+
+  warm run    at most one new trace per tracked function -- the segments
+              share one shape, so a delta of 2+ means something in the
+              cache key churns per segment;
+  rerun       zero new traces anywhere, on the same engine instance --
+              the acceptance criterion (0-recompile on a 3-segment rerun).
+"""
+from __future__ import annotations
+
+from typing import Callable, Mapping
+
+import numpy as np
+
+from . import Finding
+
+
+def tracked_functions() -> "dict[str, Callable]":
+    """The jitted programs of the per-segment hot loop, by audit name.
+
+    Everything here runs at least once per segment in stream mode; a cache
+    miss on any of them is a per-segment compile. (Reads the live function
+    objects at call time so reloads/tests see current state.)
+    """
+    from ..core import engine_jax
+    from ..fleet import detect
+    from ..telemetry import estimator, log
+
+    return {
+        "core.engine_jax.run_trace": engine_jax.run_trace,
+        "telemetry.estimator._update_device": estimator._update_device,
+        "telemetry.estimator._update_bank": estimator._update_bank,
+        "telemetry.estimator._scatter_jnp_jit": estimator._scatter_jnp_jit,
+        "telemetry.estimator._remap_rows": estimator._remap_rows,
+        "telemetry.log._rows_from_trace_jit": log._rows_from_trace_jit,
+        "telemetry.log._ring_write_trace": log._ring_write_trace,
+        "telemetry.log._ring_write": log._ring_write,
+        "telemetry.log._ring_write_contig": log._ring_write_contig,
+        "fleet.detect._cusum_update": detect._cusum_update,
+    }
+
+
+class CompileCacheGuard:
+    """Context manager over jit compile-cache size deltas.
+
+    >>> with CompileCacheGuard() as guard:
+    ...     engine.run(arrivals, segments=3)
+    >>> guard.deltas  # {'core.engine_jax.run_trace': 1, ...} new traces
+    >>> guard.assert_max(0)  # raises on any recompile
+
+    Tracks :func:`tracked_functions` by default; pass ``functions`` (name ->
+    jitted callable exposing ``_cache_size``) to guard something else, e.g.
+    a single function in a unit test.
+    """
+
+    def __init__(self, functions: "Mapping[str, Callable] | None" = None):
+        self._functions = dict(functions) if functions is not None else tracked_functions()
+        self._before: dict[str, int] = {}
+        self.deltas: dict[str, int] = {}
+
+    @staticmethod
+    def _size(fn) -> int:
+        return int(fn._cache_size())
+
+    def __enter__(self) -> "CompileCacheGuard":
+        self._before = {name: self._size(f) for name, f in self._functions.items()}
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.deltas = {
+            name: self._size(f) - self._before[name]
+            for name, f in self._functions.items()}
+
+    def new_traces(self) -> dict[str, int]:
+        """Only the functions that actually re-traced (delta > 0)."""
+        return {k: v for k, v in self.deltas.items() if v > 0}
+
+    def assert_max(self, limit: int, context: str = "") -> None:
+        bad = {k: v for k, v in self.deltas.items() if v > limit}
+        if bad:
+            where = f" during {context}" if context else ""
+            raise AssertionError(
+                f"compile-cache guard{where}: traces exceeded limit {limit}: "
+                + ", ".join(f"{k} (+{v})" for k, v in sorted(bad.items())))
+
+
+def _small_adaptive_engine():
+    """A 2-server streaming AdaptiveEngine at audit scale (compiles in
+    seconds on CPU; every per-segment program still runs)."""
+    from ..core.engine import AdaptiveEngine
+    from ..core.server import M1, M2
+
+    return AdaptiveEngine([M1, M2], prior=0.0, scorer="jnp", stream=True,
+                          ring_capacity=64)
+
+
+def _audit_arrivals(n: int = 24):
+    """n arrivals over a few grid types, divisible into equal segments (all
+    segments then share one (m, n) trace shape -- one compile covers all)."""
+    from ..core.workload import FS_GRID, RS_GRID, Workload, snap_to_grid
+
+    arrivals = []
+    for i in range(n):
+        w = snap_to_grid(Workload(
+            fs=FS_GRID[(7 * i) % len(FS_GRID)], rs=RS_GRID[i % len(RS_GRID)],
+            data_total=64e6))
+        arrivals.append((0.25 * i, w))
+    return arrivals
+
+
+def run_retrace_audit(stats: "dict | None" = None,
+                      segments: int = 3) -> list[Finding]:
+    """Warm-run + rerun the reference adaptive loop under the guard."""
+    arrivals = _audit_arrivals(n=8 * segments)
+    engine = _small_adaptive_engine()
+
+    with CompileCacheGuard() as warm:
+        engine.run(arrivals, segments=segments)
+    with CompileCacheGuard() as rerun:
+        engine.run(arrivals, segments=segments)
+
+    findings = [
+        Finding("retrace", "per-segment-retrace", name,
+                f"{delta} traces in a warm {segments}-segment run of one "
+                "shape (expected at most 1: the cache key churns per segment)")
+        for name, delta in sorted(warm.new_traces().items()) if delta > 1
+    ] + [
+        Finding("retrace", "rerun-recompile", name,
+                f"{delta} new traces on an identical rerun (expected 0: "
+                "the warm run should have populated every cache)")
+        for name, delta in sorted(rerun.new_traces().items())
+    ]
+    if stats is not None:
+        stats["retrace"] = {
+            "segments": segments,
+            "warm_traces": warm.new_traces(),
+            "rerun_traces": rerun.new_traces(),
+            "rerun_total": int(np.sum(list(rerun.deltas.values()) or [0])),
+        }
+    return findings

@@ -45,6 +45,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Hashable, Literal, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import MeshConfig
@@ -59,6 +61,22 @@ from ..telemetry.estimator import StreamingEstimator
 from ..telemetry.log import RingBlock
 from .detect import DriftDetector
 from .pool import PooledEstimatorBank
+
+
+@jax.jit
+def _base_ratio(log_b, n_base, priors, read_row, min_exposure):
+    """Per-server base-rate / nominal-prior ratio, on device.
+
+    ``log_b``/``n_base``/``priors`` are bank-row tables [rows, T];
+    ``read_row`` i32[m] maps each server to the row it reads (its pool's
+    leader, or its own). The ratio is the solo-exposure-weighted geometric
+    mean of ``exp(log_b - prior)`` per type; rows with total exposure under
+    ``min_exposure`` report 1.0 (no evidence = healthy).
+    """
+    lb, w, pr = log_b[read_row], n_base[read_row], priors[read_row]  # [m, T]
+    tot = w.sum(axis=1)
+    ratio = jnp.exp((w * (lb - pr)).sum(axis=1) / jnp.maximum(tot, 1e-12))
+    return jnp.where(tot >= min_exposure, ratio, 1.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,6 +185,12 @@ class FleetController:
             min_exposure=self.min_exposure, max_lost_frac=self.max_lost_frac)
         self.monitor = HeartbeatMonitor(m, timeout_s=self._heartbeat_timeout)
         self._active = np.ones(m, bool)
+        # nominal per-row log base priors, stacked once: priors are fixed at
+        # construction, so the per-segment base-rate health read never has to
+        # touch the member estimators (or pull their state) again
+        self._logb_priors = jnp.asarray(
+            np.stack([e._logb_prior for e in self.pool.bank.estimators]),
+            jnp.float32)
         return self
 
     def _require_bound(self) -> None:
@@ -196,21 +220,18 @@ class FleetController:
         The *base* failure route: once a server runs solo (split out of its
         pool), its own estimator tracks its collapse and this ratio is the
         honest health read. Pooled servers report their pool's ratio.
+
+        Computed from the bank's live stacked state entirely on device --
+        one [m]-sized pull at the end, never the [rows, T] tables (the
+        host-sync leak the purity auditor exists to keep out).
         """
         self._require_bound()
         st = self.pool.bank.stacked_state()
-        log_b = np.asarray(st.log_b, np.float64)  # [rows, T]
-        n_base = np.asarray(st.n_base, np.float64)
-        out = np.ones(self.m)
-        for s in range(self.m):
-            row = int(self.pool._read_row[s])
-            w = n_base[row]
-            tot = w.sum()
-            if tot < self.min_exposure:
-                continue
-            prior = self.pool.estimators[row]._logb_prior
-            out[s] = float(np.exp((w * (log_b[row] - prior)).sum() / tot))
-        return out
+        ratio = _base_ratio(
+            st.log_b, st.n_base, self._logb_priors,
+            jnp.asarray(self.pool._read_row, jnp.int32),
+            jnp.float32(self.min_exposure))
+        return np.asarray(ratio, np.float64)
 
     # -- the per-segment step ---------------------------------------------
     def observe(self, block: RingBlock, segment: int) -> tuple[int, list[HealthEvent]]:
@@ -222,9 +243,14 @@ class FleetController:
         this call); events also accumulate on ``self.events``.
         """
         self._require_bound()
-        used = self.pool.update_device(block)
+        # both fused updates dispatch without blocking; the single int()
+        # below is the segment's one host sync (and it fences both programs
+        # -- the detector consumes the post-update refs, so its result is
+        # ordered after the bank's)
+        used_dev = self.pool.update_device(block, sync=False)
         log_b, L_t, row_map = self.pool.refs()
-        self.detector.update(block, log_b, L_t, row_map)
+        self.detector.update(block, log_b, L_t, row_map, sync=False)
+        used = int(used_dev)
         events: list[HealthEvent] = []
 
         # liveness plane: surviving servers heartbeat on the segment clock

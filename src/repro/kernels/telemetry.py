@@ -33,7 +33,10 @@ subsystem (``repro.fleet``) those indices are **pool ids** -- several servers
 remapped onto one shared estimator row (``EstimatorBank.update_device(...,
 row_map=...)``) -- so a pooled row's statistics accumulate every member's
 observations in the same pass. Rows remapped to -1 (evicted servers) ride the
-same out-of-range drop as padding.
+same out-of-range drop as padding. Indices *past* the table (>= T) are also
+dropped by the kernel, but no well-formed caller produces them -- in debug
+mode (``debug=True``, defaulting to ``interpret``) the wrapper pulls the
+eager types to the host and raises on any type >= T before launch.
 """
 from __future__ import annotations
 
@@ -41,6 +44,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 
@@ -75,7 +79,6 @@ def _pair_scatter_kernel(types_ref, cbar_ref, vals_ref, pair_ref, base_ref):
             preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def pair_scatter(
     types: jax.Array,  # i32[B] target grid type per observation
     cbar: jax.Array,  # f32[B, T] co-resident exposure rows
@@ -83,13 +86,49 @@ def pair_scatter(
     *,
     block_b: int = 128,
     interpret: bool = False,
+    debug: "bool | None" = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Sufficient statistics for one observation batch.
 
     ``vals`` of shape [B] returns ``(pair [T, T], base [T])`` (the original
     single-statistic contract); [K, B] returns ``(pair [K, T, T], base
     [K, T])`` with all K statistics accumulated in one batch stream.
+
+    ``debug`` (defaults to ``interpret``) enforces the index-space contract
+    before launch: *negative* types are part of the contract -- padding rows
+    and evicted pool ids deliberately select no column -- but a type ``>= T``
+    is never produced by a well-formed caller; it means a pool id or grid
+    type was misrouted past the table, and the silent-drop semantics would
+    swallow that observation. The check pulls ``types`` to the host, so it
+    only runs eagerly (skipped under an enclosing trace) and only when
+    ``debug`` is on.
     """
+    if debug is None:
+        debug = interpret
+    if debug and not isinstance(types, jax.core.Tracer):
+        T = cbar.shape[1]
+        t = np.asarray(types)
+        if t.size and int(t.max(initial=-1)) >= T:
+            bad = int(np.argmax(t >= T))
+            raise ValueError(
+                f"pair_scatter index-space contract violated: types[{bad}] = "
+                f"{int(t[bad])} >= T = {T}. Negative types (padding / evicted "
+                f"pool rows) are dropped by design, but an index past the "
+                f"table means a misrouted pool id or grid type -- the scatter "
+                f"would silently discard that observation.")
+    return _pair_scatter_impl(
+        types, cbar, vals, block_b=block_b, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def _pair_scatter_impl(
+    types: jax.Array,
+    cbar: jax.Array,
+    vals: jax.Array,
+    *,
+    block_b: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
     B, T = cbar.shape
     squeeze = vals.ndim == 1
     vals2 = vals[None, :] if squeeze else vals  # [K, B]

@@ -344,9 +344,19 @@ class StreamingEstimator:
         self._n_base = np.zeros(self.T)
         self._n_obs = 0
         self._dev: DeviceEstimatorState | None = None
-        self._dev_dirty = False
+        self._stale: set[str] = set()  # host fields behind the device mirror
         self._bank = None  # EstimatorBank holding this member, if any
         self._scatter = make_scatter(self.scatter)
+        # static update config, resolved once: the fused update's jit cache
+        # keys on these, so per-call float(...) coercions (or re-probing the
+        # backend) would rebuild the key on the per-segment hot path
+        self._hypers = dict(
+            lr=float(self.lr), decay=float(self.decay),
+            step_damp=float(self.step_damp), solo_eps=float(self.solo_eps),
+            max_lost_frac=float(self.max_lost_frac),
+            use_pallas=self.scatter == "pallas" or (
+                self.scatter == "auto" and jax.default_backend() == "tpu"),
+            interpret=jax.default_backend() != "tpu")
 
     # -- host <-> device state management ---------------------------------
     def _mutated(self) -> None:
@@ -354,18 +364,34 @@ class StreamingEstimator:
         if self._bank is not None:
             self._bank._invalidate()
 
-    def _pull(self) -> None:
-        """Sync the host state from the device mirror if it is ahead."""
+    #: host-canonical field names, in device-state order
+    _FIELDS = ("L", "log_b", "n_pair", "n_base", "n_obs")
+
+    def _pull(self, fields: "tuple[str, ...] | None" = None) -> None:
+        """Sync host fields from the device mirror where they are behind.
+
+        ``fields=None`` syncs everything; each property read passes only its
+        own field, so reading the [T] base-rate vector never pulls the
+        [T, T] pair tables across the device boundary (the selective-flush
+        half of the no-host-sync contract the purity auditor checks).
+        """
         if self._bank is not None:
             self._bank._flush()  # a banked update may hold the newest state
-        if self._dev_dirty:
-            dev = self._dev
+        want = self._stale if fields is None else (self._stale & set(fields))
+        if not want:
+            return
+        dev = self._dev
+        if "L" in want:
             self._L = np.asarray(dev.L_t, np.float64).T
+        if "log_b" in want:
             self._log_b = np.asarray(dev.log_b, np.float64)
+        if "n_pair" in want:
             self._n_pair = np.asarray(dev.n_pair_t, np.float64).T
+        if "n_base" in want:
             self._n_base = np.asarray(dev.n_base, np.float64)
+        if "n_obs" in want:
             self._n_obs = int(dev.n_obs)
-            self._dev_dirty = False
+        self._stale = self._stale - want
 
     def _host_write(self, name, value) -> None:
         self._pull()
@@ -373,17 +399,18 @@ class StreamingEstimator:
         self._mutated()
         setattr(self, "_" + name, value)
 
-    # host-canonical views: reading syncs from the device mirror, writing
-    # (the host update path, tests poking state) invalidates it
-    L = property(lambda s: (s._pull(), s._L)[1],
+    # host-canonical views: reading syncs *its own field* from the device
+    # mirror, writing (the host update path, tests poking state) pulls the
+    # rest and invalidates the mirror
+    L = property(lambda s: (s._pull(("L",)), s._L)[1],
                  lambda s, v: s._host_write("L", v))
-    log_b = property(lambda s: (s._pull(), s._log_b)[1],
+    log_b = property(lambda s: (s._pull(("log_b",)), s._log_b)[1],
                      lambda s, v: s._host_write("log_b", v))
-    n_pair = property(lambda s: (s._pull(), s._n_pair)[1],
+    n_pair = property(lambda s: (s._pull(("n_pair",)), s._n_pair)[1],
                       lambda s, v: s._host_write("n_pair", v))
-    n_base = property(lambda s: (s._pull(), s._n_base)[1],
+    n_base = property(lambda s: (s._pull(("n_base",)), s._n_base)[1],
                       lambda s, v: s._host_write("n_base", v))
-    n_obs = property(lambda s: (s._pull(), s._n_obs)[1],
+    n_obs = property(lambda s: (s._pull(("n_obs",)), s._n_obs)[1],
                      lambda s, v: s._host_write("n_obs", v))
 
     def device_state(self) -> DeviceEstimatorState:
@@ -480,17 +507,10 @@ class StreamingEstimator:
         ``sync=False`` so back-to-back updates pipeline without blocking.
         State stays on device until an estimate is read either way.
         """
-        use_pallas = self.scatter == "pallas" or (
-            self.scatter == "auto" and jax.default_backend() == "tpu")
-        interpret = jax.default_backend() != "tpu"
         new, used = _update_device(
-            self.device_state(), block, jnp.int32(server),
-            lr=float(self.lr), decay=float(self.decay),
-            step_damp=float(self.step_damp), solo_eps=float(self.solo_eps),
-            max_lost_frac=float(self.max_lost_frac),
-            use_pallas=use_pallas, interpret=interpret)
+            self.device_state(), block, jnp.int32(server), **self._hypers)
         self._dev = new
-        self._dev_dirty = True
+        self._stale = set(self._FIELDS)
         self._mutated()
         return int(used) if sync else used
 
@@ -499,7 +519,7 @@ class StreamingEstimator:
     def _absorb_device(self, state: DeviceEstimatorState) -> None:
         """Adopt externally-updated device state (see ``EstimatorBank``)."""
         self._dev = state
-        self._dev_dirty = True
+        self._stale = set(self._FIELDS)
 
     # -- posterior export / seed (fleet pooling) ---------------------------
     def export_posterior(self) -> DeviceEstimatorState:
@@ -522,7 +542,7 @@ class StreamingEstimator:
         """
         self._pull()  # flush any banked state before overwriting it
         self._dev = DeviceEstimatorState(*state)
-        self._dev_dirty = True
+        self._stale = set(self._FIELDS)
         self._mutated()
 
     def pair_confidence(self) -> np.ndarray:
@@ -607,6 +627,8 @@ class EstimatorBank:
         self.estimators = list(estimators)
         self._stacked: DeviceEstimatorState | None = None
         self._dirty = False  # stacked state is ahead of the members
+        # shared static update config (asserted equal above), resolved once
+        self._hypers = dict(e0._hypers)
         for e in self.estimators:
             e._bank = self
 
@@ -663,18 +685,10 @@ class EstimatorBank:
         (``fleet.pool.PooledEstimatorBank``). Returns the total rows
         consumed (host int when ``sync``, device scalar otherwise).
         """
-        e0 = self.estimators[0]
         stacked = self.stacked_state()
         if row_map is not None:
             block = _remap_rows(block, jnp.asarray(row_map, jnp.int32))
-        use_pallas = e0.scatter == "pallas" or (
-            e0.scatter == "auto" and jax.default_backend() == "tpu")
-        new, used = _update_bank(
-            stacked, block,
-            lr=float(e0.lr), decay=float(e0.decay),
-            step_damp=float(e0.step_damp), solo_eps=float(e0.solo_eps),
-            max_lost_frac=float(e0.max_lost_frac),
-            use_pallas=use_pallas, interpret=jax.default_backend() != "tpu")
+        new, used = _update_bank(stacked, block, **self._hypers)
         self._stacked = new
         self._dirty = True
         return int(used) if sync else used
