@@ -14,6 +14,7 @@ sizes enough to finish in CI while still exercising the full code path.
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import pathlib
 import subprocess
@@ -22,6 +23,7 @@ import traceback
 
 from . import (
     adaptive_regret,
+    closed_loop,
     fig6_llc_loss,
     fig9_greedy_vs_optimal,
     fig12_single_workload,
@@ -44,6 +46,7 @@ MODULES = [
     ("telemetry", telemetry_throughput),
     ("fleet", fleet_health),
     ("roofline", roofline_table),
+    ("closedloop", closed_loop),
 ]
 
 
@@ -63,6 +66,9 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="run benches whose tag contains this")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced problem sizes (the CI PR gate)")
+    ap.add_argument("--profile", action="store_true",
+                    help="modules that support it dump a jax.profiler trace "
+                         "(closed_loop: one warm device-loop dispatch)")
     ap.add_argument("--out-dir", default=str(pathlib.Path(__file__).resolve().parents[1]),
                     help="directory for BENCH_<suite>.json records")
     args = ap.parse_args()
@@ -94,7 +100,10 @@ def main() -> None:
             continue
         records = []
         try:
-            mod.run(emit, smoke=args.smoke)
+            kwargs = {}
+            if "profile" in inspect.signature(mod.run).parameters:
+                kwargs["profile"] = args.profile
+            mod.run(emit, smoke=args.smoke, **kwargs)
         except Exception as e:  # noqa: BLE001 -- report and continue
             failures.append((tag, e))
             traceback.print_exc()

@@ -254,6 +254,49 @@ def _build_ring_push():
     return fn, (buf, trace, arr_type, jnp.int32(0))
 
 
+def _build_closed_loop():
+    from ..core.closed_loop import (
+        ClosedLoopConfig,
+        LoopCarry,
+        SegmentIn,
+        run_closed_loop,
+    )
+    from ..fleet.detect import CusumState
+    from ..telemetry.estimator import DeviceEstimatorState
+    from ..telemetry.log import RingBlock
+
+    m, n_seg, S_cap, cap = 4, 4, 4, 256
+    R = n_seg  # requeue capacity: one segment's worth, as the engine packs it
+    cluster = _cluster(m)
+    dyn_stack = jax.tree_util.tree_map(lambda a: a[None], _dynamics(m))
+    bank = DeviceEstimatorState(
+        L_t=_f32((m, _T, _T)), log_b=_f32((m, _T)),
+        n_pair_t=_f32((m, _T, _T)), n_base=_f32((m, _T)),
+        n_obs=jnp.zeros((m,), jnp.int32))
+    ring = RingBlock(
+        ints=jnp.full((cap, 2), -1, jnp.int32),
+        scalars=jnp.zeros((cap, 6), jnp.float32),
+        co=jnp.zeros((cap, _T), jnp.float32))
+    carry = LoopCarry(
+        bank=bank, det=CusumState.zeros(m),
+        row_map=jnp.arange(m, dtype=jnp.int32),
+        read_row=jnp.arange(m, dtype=jnp.int32),
+        active=jnp.ones((m,), bool), seen=jnp.int32(0),
+        req_type=jnp.zeros((R,), jnp.int32),
+        req_bytes=jnp.ones((R,), jnp.float32), req_n=jnp.int32(0),
+        ring=ring, ring_ptr=jnp.int32(0), ring_total=jnp.int32(0))
+    xs = SegmentIn(
+        arr_time=_f32((S_cap, n_seg), 0.5),
+        arr_type=jnp.tile(jnp.arange(n_seg, dtype=jnp.int32) % _T, (S_cap, 1)),
+        arr_bytes=_f32((S_cap, n_seg), 1e6),
+        dyn_idx=jnp.zeros((S_cap,), jnp.int32),
+        seg_valid=jnp.ones((S_cap,), bool))
+    Lp_t, logb = _f32((m, _T, _T)), _f32((m, _T))
+    config = ClosedLoopConfig(fleet=True)
+    fn = lambda c, d, lp, lb, cr, x: run_closed_loop(c, d, lp, lb, cr, x, config)
+    return fn, (cluster, dyn_stack, Lp_t, logb, carry, xs)
+
+
 def _build_consolidation_scores():
     from ..kernels.consolidation import consolidation_scores
 
@@ -333,6 +376,8 @@ REGISTRY: tuple[HotEntry, ...] = (
     HotEntry("fleet.detect.cusum_update", TIER_DEVICE, _build_cusum_update),
     HotEntry("telemetry.log.ring_push", TIER_DEVICE, _build_ring_push,
              donated=True),
+    HotEntry("core.closed_loop.run_closed_loop", TIER_DEVICE,
+             _build_closed_loop),
     HotEntry("kernels.consolidation.consolidation_scores", TIER_DEVICE,
              _build_consolidation_scores, pallas=True),
     HotEntry("kernels.telemetry.pair_scatter", TIER_DEVICE, _build_pair_scatter,

@@ -36,12 +36,13 @@ def tracked_functions() -> "dict[str, Callable]":
     miss on any of them is a per-segment compile. (Reads the live function
     objects at call time so reloads/tests see current state.)
     """
-    from ..core import engine_jax
+    from ..core import closed_loop, engine_jax
     from ..fleet import detect
     from ..telemetry import estimator, log
 
     return {
         "core.engine_jax.run_trace": engine_jax.run_trace,
+        "core.closed_loop.run_closed_loop": closed_loop.run_closed_loop,
         "telemetry.estimator._update_device": estimator._update_device,
         "telemetry.estimator._update_bank": estimator._update_bank,
         "telemetry.estimator._scatter_jnp_jit": estimator._scatter_jnp_jit,
@@ -133,6 +134,20 @@ def run_retrace_audit(stats: "dict | None" = None,
     with CompileCacheGuard() as rerun:
         engine.run(arrivals, segments=segments)
 
+    # device-resident loop: one compile must cover every segment count in
+    # an S_cap bucket. The warm run compiles at segments=4; reruns at 2 and
+    # 3 segments (same power-of-two bucket, same per-segment shape) must add
+    # zero traces anywhere -- a delta means the padded-scan shapes or the
+    # static config churn with the segment count.
+    n_seg = 8
+    dev_engine = _small_adaptive_engine()
+    dev_arrivals = _audit_arrivals(n=n_seg * 4)
+    with CompileCacheGuard() as dev_warm:
+        dev_engine.run(dev_arrivals, segments=4, device_loop=True)
+    with CompileCacheGuard() as dev_rerun:
+        dev_engine.run(dev_arrivals[:n_seg * 2], segments=2, device_loop=True)
+        dev_engine.run(dev_arrivals[:n_seg * 3], segments=3, device_loop=True)
+
     findings = [
         Finding("retrace", "per-segment-retrace", name,
                 f"{delta} traces in a warm {segments}-segment run of one "
@@ -143,6 +158,12 @@ def run_retrace_audit(stats: "dict | None" = None,
                 f"{delta} new traces on an identical rerun (expected 0: "
                 "the warm run should have populated every cache)")
         for name, delta in sorted(rerun.new_traces().items())
+    ] + [
+        Finding("retrace", "device-loop-recompile", name,
+                f"{delta} new traces running 2- and 3-segment device loops "
+                "after a warm 4-segment run (expected 0: segment counts in "
+                "one S_cap bucket share a compilation)")
+        for name, delta in sorted(dev_rerun.new_traces().items())
     ]
     if stats is not None:
         stats["retrace"] = {
@@ -150,5 +171,7 @@ def run_retrace_audit(stats: "dict | None" = None,
             "warm_traces": warm.new_traces(),
             "rerun_traces": rerun.new_traces(),
             "rerun_total": int(np.sum(list(rerun.deltas.values()) or [0])),
+            "device_warm_traces": dev_warm.new_traces(),
+            "device_rerun_traces": dev_rerun.new_traces(),
         }
     return findings

@@ -12,6 +12,7 @@ Public API (stable):
                                                   loop (repro.telemetry)
   score_candidates, make_scorer                -- shared Q x m scoring iface
   PackedDynamics, run_trace, corun_rates       -- device engine internals
+  ClosedLoopConfig, run_closed_loop            -- fused multi-segment loop
   PackedCluster, greedy_sequence_jax, brute_force_jax, score_candidates_jnp
                                                -- jitted allocation paths
   ClusterState, greedy_place, greedy_sequence, brute_force, OnlineScheduler
@@ -76,6 +77,7 @@ from .engine import (
     score_candidates,
 )
 from .engine_jax import PackedDynamics, corun_rates, local_search_jax, run_trace
+from .closed_loop import ClosedLoopConfig, run_closed_loop
 from .scheduler import OnlineScheduler, ScheduleResult
 from .server import M1, M2, PAPER_CLUSTER, TPU_V5E_HOST, TPU_V5E_POD256, ServerSpec
 from .simulator import (

@@ -484,9 +484,13 @@ class AdaptiveEngine:
         # segment-engine cache: under an unchanged world (drift is None, or a
         # schedule window with no event) only the D-matrices move between
         # segments, so the engine -- and with it the PackedDynamics tables and
-        # the jitted trace programs keyed on them -- is reused via set_D
-        self._seg_engine: ConsolidationEngine | None = None
-        self._seg_specs: tuple[ServerSpec, ...] | None = None
+        # the jitted trace programs keyed on them -- is reused via set_D.
+        # Keyed by (specs, active-mask): drift schedules revisit worlds and
+        # evictions change the mask between visits, and either a single-slot
+        # cache or a specs-only key would rebuild (or cross-wire) engines on
+        # the revisit. PackedDynamics is mask-independent, so it caches on
+        # specs alone and is shared by all mask variants of a world.
+        self._engine_cache: dict[tuple, ConsolidationEngine] = {}
         self._dyn_cache: dict[tuple[ServerSpec, ...], PackedDynamics] = {}
 
         priors: list[np.ndarray | float]
@@ -550,9 +554,11 @@ class AdaptiveEngine:
         specs = (tuple(self.drift.specs_at(self.servers, segment))
                  if self.drift is not None else self.servers)
         mask = self.fleet.active_mask() if self.fleet is not None else None
-        if self._seg_engine is not None and specs == self._seg_specs:
-            self._seg_engine.set_D(self.current_D(), active=mask)
-            return self._seg_engine
+        key = (specs, None if mask is None else mask.tobytes())
+        engine = self._engine_cache.get(key)
+        if engine is not None:
+            engine.set_D(self.current_D(), active=mask)
+            return engine
         engine = ConsolidationEngine(
             list(specs), D=self.current_D(), alpha=self.alpha,
             objective=self.objective, backend="jax", scorer=self.scorer,
@@ -561,7 +567,7 @@ class AdaptiveEngine:
             engine._dyn = self._dyn_cache[specs]
         else:
             self._dyn_cache[specs] = engine.dyn  # builds the tables once
-        self._seg_engine, self._seg_specs = engine, specs
+        self._engine_cache[key] = engine
         return engine
 
     # -- the loop ---------------------------------------------------------
@@ -570,6 +576,8 @@ class AdaptiveEngine:
         arrivals: Sequence[tuple[float, Workload]],
         segments: int = 8,
         on_segment: Callable[[int, EngineResult, "AdaptiveEngine"], None] | None = None,
+        *,
+        device_loop: bool = False,
     ) -> AdaptiveResult:
         """Alternate ``segments`` trace chunks with estimator refreshes.
 
@@ -585,7 +593,24 @@ class AdaptiveEngine:
         the next segment's chunk. An eviction fired by the *final* segment
         has no next chunk; its in-flight work stays reported in that
         segment's result.
+
+        ``device_loop=True`` compiles the whole multi-segment cycle into
+        one device program (``core.closed_loop``) instead of alternating
+        host and device per segment -- same decisions, same final state, a
+        fraction of the dispatch overhead. It requires stream mode, an
+        arrival count divisible by ``segments``, structure-preserving drift
+        (``llc_bytes``/``llc_tolerance`` fixed), and no ``on_segment``
+        callback (there is no host between segments to call it from); this
+        host-alternating path remains the reference oracle (DESIGN.md
+        section 13).
         """
+        if device_loop:
+            if on_segment is not None:
+                raise ValueError(
+                    "device_loop=True runs all segments in one compiled "
+                    "program; there is no per-segment host point for "
+                    "on_segment -- use the host-alternating path")
+            return self._run_device_loop(arrivals, segments)
         ordered = sorted(arrivals, key=lambda tw: tw[0])
         bounds = np.linspace(0, len(ordered), segments + 1).astype(int)
         results, n_obs, t_starts, health = [], [], [], []
@@ -629,4 +654,203 @@ class AdaptiveEngine:
             if on_segment is not None:
                 on_segment(k, res, self)
         return AdaptiveResult(tuple(results), tuple(n_obs), tuple(t_starts),
+                              tuple(health))
+
+    # -- the fused device-resident loop -----------------------------------
+    def _run_device_loop(
+        self, arrivals: Sequence[tuple[float, Workload]], segments: int
+    ) -> AdaptiveResult:
+        """One ``run_closed_loop`` dispatch for the whole multi-segment run.
+
+        Host work is strictly prologue (pack arrivals/dynamics, snapshot the
+        live estimator/detector/pool state into the scan carry) and epilogue
+        (unpack per-segment results, mirror the final carry back into the
+        host objects via ``FleetController.adopt_device_outcome`` /
+        ``PooledEstimatorBank.adopt_rows``). Per-segment ``EngineResult``s
+        carry no ``observations``/``stream_block``: the telemetry was
+        consumed inside the program (the ring holds the bounded history).
+        """
+        from ..fleet.detect import CusumState
+        from .closed_loop import (
+            ClosedLoopConfig,
+            LoopCarry,
+            SegmentIn,
+            run_closed_loop,
+        )
+
+        if not self.stream:
+            raise ValueError("device_loop=True requires stream mode "
+                             "(stream=True or a fleet controller)")
+        n = len(arrivals)
+        if n == 0 or segments <= 0 or n % segments != 0:
+            raise ValueError(
+                f"device_loop=True needs a non-empty arrival trace divisible "
+                f"by segments (got {n} arrivals / {segments} segments); the "
+                f"host-alternating path handles ragged chunks")
+        m = len(self.servers)
+        n_seg = n // segments
+        R = n_seg  # requeue capacity: one segment's worth of in-flight work
+        if R + n_seg > self.ring.capacity:
+            raise ValueError(
+                f"segment size {n_seg} (+{R} requeue slots) exceeds the "
+                f"telemetry ring capacity {self.ring.capacity}")
+        e0 = self.estimators[0]
+        if any(e.confidence_floor != e0.confidence_floor
+               for e in self.estimators):
+            raise ValueError("device_loop=True blends every row's D with one "
+                             "confidence_floor; estimators disagree")
+
+        ordered = sorted(arrivals, key=lambda tw: tw[0])
+        times = np.asarray([t for t, _ in ordered], np.float64)
+        wtypes = np.asarray([type_index(w) for _, w in ordered], np.int32)
+        nbytes = np.asarray([w.data_total for _, w in ordered], np.float64)
+
+        # segments bucket to a power-of-two count (padding masked by
+        # seg_valid) so warm runs across different segment counts of the
+        # same fleet hit one compilation
+        S_cap = 4
+        while S_cap < segments:
+            S_cap *= 2
+        arr_time = np.zeros((S_cap, n_seg), np.float32)
+        arr_type = np.zeros((S_cap, n_seg), np.int32)
+        arr_bytes = np.ones((S_cap, n_seg), np.float32)
+        t0s = []
+        for k in range(segments):
+            sl = slice(k * n_seg, (k + 1) * n_seg)
+            t0 = float(times[k * n_seg])
+            t0s.append(t0)
+            arr_time[k] = times[sl] - t0
+            arr_type[k] = wtypes[sl]
+            arr_bytes[k] = nbytes[sl]
+
+        # per-segment worlds, deduplicated into one stacked dynamics bank;
+        # the compiled cluster's structural tables must hold for all of them
+        structural = [(s.llc_bytes, s.llc_tolerance) for s in self.servers]
+        spec_of: dict[tuple[ServerSpec, ...], int] = {}
+        dyn_idx = np.zeros(S_cap, np.int32)
+        for k in range(segments):
+            specs = (tuple(self.drift.specs_at(self.servers, k))
+                     if self.drift is not None else self.servers)
+            if [(s.llc_bytes, s.llc_tolerance) for s in specs] != structural:
+                raise ValueError(
+                    "device_loop=True compiles one cluster for all segments: "
+                    "drift may not change llc_bytes/llc_tolerance (run the "
+                    "host-alternating path for structural drift)")
+            dyn_idx[k] = spec_of.setdefault(specs, len(spec_of))
+        for specs in spec_of:
+            if specs not in self._dyn_cache:
+                self._dyn_cache[specs] = PackedDynamics.build(list(specs))
+        dyn_stack = jax.tree_util.tree_map(
+            lambda *a: jnp.stack(a), *(self._dyn_cache[s] for s in spec_of))
+        cluster = PackedCluster.build(
+            list(self.servers),
+            [np.zeros((GRID_T, GRID_T), np.float32)] * m, self.alpha)
+
+        Lp_t = jnp.asarray(
+            np.stack([e._L_prior.T for e in self.estimators]), jnp.float32)
+        logb_priors = jnp.asarray(
+            np.stack([e._logb_prior for e in self.estimators]), jnp.float32)
+
+        scorer = None if self.scorer == "jnp" else make_scorer(self.scorer)
+        h = e0._hypers
+        est_h = dict(
+            lr=h["lr"], decay=h["decay"], step_damp=h["step_damp"],
+            solo_eps=h["solo_eps"], est_max_lost_frac=h["max_lost_frac"],
+            use_pallas=h["use_pallas"], interpret=h["interpret"])
+        fc = self.fleet
+        if fc is not None:
+            fc._require_bound()
+            config = ClosedLoopConfig(
+                objective=self.objective, scorer=scorer, fleet=True,
+                warmup_segments=fc.warmup_segments, cusum_k=fc.cusum_k,
+                cusum_h=fc.cusum_h, level_decay=fc.level_decay,
+                fail_floor=fc.fail_floor, min_exposure=fc.min_exposure,
+                det_max_lost_frac=fc.max_lost_frac,
+                confidence_floor=float(e0.confidence_floor), **est_h)
+            carry0 = LoopCarry(
+                bank=fc.pool.bank.stacked_state(), det=fc.detector.state,
+                row_map=jnp.asarray(fc.pool.row_of, jnp.int32),
+                read_row=jnp.asarray(fc.pool._read_row, jnp.int32),
+                active=jnp.asarray(fc._active),
+                seen=jnp.int32(fc._segments_seen),
+                req_type=jnp.zeros((R,), jnp.int32),
+                req_bytes=jnp.ones((R,), jnp.float32),
+                req_n=jnp.int32(0),
+                ring=self.ring._buf, ring_ptr=jnp.int32(self.ring.ptr),
+                ring_total=jnp.int32(self.ring.total))
+        else:
+            config = ClosedLoopConfig(
+                objective=self.objective, scorer=scorer, fleet=False,
+                confidence_floor=float(e0.confidence_floor), **est_h)
+            carry0 = LoopCarry(
+                bank=self.bank.stacked_state(), det=CusumState.zeros(m),
+                row_map=jnp.arange(m, dtype=jnp.int32),
+                read_row=jnp.arange(m, dtype=jnp.int32),
+                active=jnp.ones(m, bool), seen=jnp.int32(0),
+                req_type=jnp.zeros((R,), jnp.int32),
+                req_bytes=jnp.ones((R,), jnp.float32),
+                req_n=jnp.int32(0),
+                ring=self.ring._buf, ring_ptr=jnp.int32(self.ring.ptr),
+                ring_total=jnp.int32(self.ring.total))
+        xs = SegmentIn(
+            arr_time=jnp.asarray(arr_time), arr_type=jnp.asarray(arr_type),
+            arr_bytes=jnp.asarray(arr_bytes), dyn_idx=jnp.asarray(dyn_idx),
+            seg_valid=jnp.asarray(np.arange(S_cap) < segments))
+
+        final, ys = run_closed_loop(
+            cluster, dyn_stack, Lp_t, logb_priors, carry0, xs, config)
+        ys = jax.tree_util.tree_map(np.asarray, ys)
+
+        # failures surface before any state is adopted, leaving the host
+        # objects where they were (the failed run never happened)
+        if ys.deadlock[:segments].any():
+            raise RuntimeError(
+                "deadlock: queued workloads fit no empty server")
+        if ys.req_overflow[:segments].any():
+            raise RuntimeError(
+                f"eviction requeued more than one segment's worth of work "
+                f"({R} slots); run the host-alternating path")
+
+        results, n_obs = [], []
+        for k in range(segments):
+            nv = int(ys.n_valid[k])
+            t0 = t0s[k]
+            placement = ys.placement[k][:nv]
+            pt = ys.place_time[k][:nv].astype(np.float64)
+            ft = ys.finish_time[k][:nv].astype(np.float64)
+            pt = np.where(pt >= 0.0, pt + t0, pt)
+            ft = np.where(np.isfinite(ft), ft + t0, ft)
+            results.append(EngineResult(
+                placements=tuple(int(p) if p != QUEUED else None
+                                 for p in placement),
+                was_queued=tuple(bool(q) for q in ys.was_queued[k][:nv]),
+                place_times=tuple(float(t) for t in pt),
+                finish_times=tuple(float(t) for t in ft),
+                makespan=float(ys.makespan[k]) + t0,
+                max_observed_degradation=float(ys.max_deg[k]),
+                backend="jax"))
+            n_obs.append(int(ys.used[k]))
+
+        if fc is not None:
+            outcomes = [
+                dict(segment=k, split_fired=ys.split_fired[k],
+                     split_stat=ys.split_stat[k],
+                     evict_fired=ys.evict_fired[k],
+                     evict_stat=ys.evict_stat[k],
+                     evict_route=ys.evict_route[k],
+                     active_after=ys.active_after[k])
+                for k in range(segments)]
+            per_seg = fc.adopt_device_outcome(
+                final.bank, final.det, np.asarray(final.row_map),
+                np.asarray(final.read_row), np.asarray(final.active),
+                outcomes)
+            health = [tuple(evs) for evs in per_seg]
+        else:
+            self.bank._stacked = final.bank
+            self.bank._dirty = True
+            health = [() for _ in range(segments)]
+        self.ring._buf = final.ring
+        self.ring.ptr = int(final.ring_ptr)
+        self.ring.total = int(final.ring_total)
+        return AdaptiveResult(tuple(results), tuple(n_obs), tuple(t0s),
                               tuple(health))

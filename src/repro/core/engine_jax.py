@@ -187,44 +187,29 @@ def _slot_rates(dyn, ldiag_keep, ldiag_lost, overflow, colog_keep, colog_lost, s
     return jnp.take_along_axis(base, t, axis=1) * jnp.exp(logslow)  # [m, K]
 
 
-@partial(jax.jit, static_argnames=("objective", "scorer", "n_steps", "telemetry"))
-def run_trace(
+def _trace_segment(
     cluster: PackedCluster,
     dyn: PackedDynamics,
-    arr_time: jax.Array,  # f32[n], non-decreasing
+    arr_time: jax.Array,  # f32[n], non-decreasing over the first n_valid
     arr_type: jax.Array,  # i32[n] grid types
     arr_bytes: jax.Array,  # f32[n] data_total per arrival
+    n_valid: jax.Array,  # i32 scalar: arrivals actually present (<= n)
     *,
     objective: str = "sum_avg",
     scorer: Scorer | None = None,
     n_steps: int | None = None,
     telemetry: bool = False,
 ) -> EngineTrace:
-    """Run one arrival trace to completion entirely on device.
+    """Trace body of :func:`run_trace`, with a *traced* arrival count.
 
-    Every iteration is one micro-event; 4n + 8 steps are provably enough (n
-    arrivals, <= n completions, <= n successful drain placements, and one
-    failed drain check per completion), the loop exits early once all work
-    has completed, and the whole loop jit-compiles once per (m, n) shape.
-
-    Placements and queue decisions reproduce the float64 oracle: canonical
-    per-server sum refreshes keep same-spec servers bitwise-tied, and
-    ``argmin_with_margin`` resolves sub-margin score/finish-time ties to the
-    lowest index exactly like the oracle's strict-improvement loops.
-
-    ``scorer=None`` uses the engine's incremental evaluation of the shared
-    scoring contract (O(Q m T) with no counts @ D re-reduction); passing an
-    explicit backend (e.g. the Pallas kernel via ``engine.make_scorer``)
-    routes every candidate batch through it instead.
-
-    ``telemetry=True`` additionally emits the fixed-shape observation log the
-    streaming D-estimator consumes (``repro.telemetry``): per arrival, the
-    time-integrated co-resident type counts over its run (``obs_co`` [n, T],
-    excluding the workload itself) and the time it spent while its server was
-    past the physical TDP (``obs_lost`` [n]). Both integrate between
-    micro-events, so partial co-residency overlaps are weighted exactly by
-    their duration. Off by default: the accumulation adds an O(m K T) scatter
-    per time-advancing event, and the static flag compiles it out entirely.
+    ``n = arr_time.shape[0]`` stays the static capacity (slot counts, step
+    budget, scatter sentinels), while ``n_valid`` bounds how many arrivals
+    the event loop consumes. The device-resident closed loop
+    (``core.closed_loop``) scans this body over segments whose real size
+    varies per step inside one fixed-capacity compilation; padding rows past
+    ``n_valid`` are never arrived, so their trace outputs keep the initial
+    sentinels (placement QUEUED, finish inf) and ``n_valid = 0`` exits at
+    iteration zero. Plain (un-jitted) so callers embed it in their own jit.
     """
     n = int(arr_time.shape[0])
     m, K = cluster.m, n
@@ -419,7 +404,7 @@ def run_trace(
         st = place_if(st, found, q, server, arr_type[q], arr_bytes[q], st.now,
                       queue_on_fail=False)
         no_active = ~jnp.any(st.slot_type >= 0)
-        dead = ~found & no_active & (st.ai >= n) & jnp.any(st.queued)
+        dead = ~found & no_active & (st.ai >= n_valid) & jnp.any(st.queued)
         return st._replace(draining=found, deadlock=st.deadlock | dead)
 
     def finish_branch(st, rates, tt):
@@ -456,7 +441,7 @@ def run_trace(
 
     def is_done(st):
         return st.deadlock | (
-            (st.ai >= n) & ~jnp.any(st.slot_type >= 0) & ~jnp.any(st.queued))
+            (st.ai >= n_valid) & ~jnp.any(st.slot_type >= 0) & ~jnp.any(st.queued))
 
     def body(carry):
         st, it = carry
@@ -471,10 +456,10 @@ def run_trace(
 
         tt = jnp.where(active, st.slot_rem / rates, jnp.inf)
         t_fin = st.now + jnp.min(tt)
-        t_arr = jnp.where(st.ai < n, arr_time[jnp.clip(st.ai, 0, n - 1)], jnp.inf)
+        t_arr = jnp.where(st.ai < n_valid, arr_time[jnp.clip(st.ai, 0, n - 1)], jnp.inf)
         any_active = jnp.any(active)
         queue_any = jnp.any(st.queued)
-        drain = st.draining | (queue_any & ~any_active & (st.ai >= n))
+        drain = st.draining | (queue_any & ~any_active & (st.ai >= n_valid))
         branch = jnp.where(drain, 0, jnp.where(any_active & (t_fin <= t_arr), 1, 2))
         st = jax.lax.switch(
             branch, [drain_branch, finish_branch, arrive_branch], st, rates, tt)
@@ -488,6 +473,51 @@ def run_trace(
     return EngineTrace(st.placement, st.was_queued, st.place_time, st.finish_time,
                        st.makespan, st.max_deg, st.deadlock, st.obs_co, st.obs_lost,
                        st.obs_logr)
+
+
+@partial(jax.jit, static_argnames=("objective", "scorer", "n_steps", "telemetry"))
+def run_trace(
+    cluster: PackedCluster,
+    dyn: PackedDynamics,
+    arr_time: jax.Array,  # f32[n], non-decreasing
+    arr_type: jax.Array,  # i32[n] grid types
+    arr_bytes: jax.Array,  # f32[n] data_total per arrival
+    *,
+    objective: str = "sum_avg",
+    scorer: Scorer | None = None,
+    n_steps: int | None = None,
+    telemetry: bool = False,
+) -> EngineTrace:
+    """Run one arrival trace to completion entirely on device.
+
+    Every iteration is one micro-event; 4n + 8 steps are provably enough (n
+    arrivals, <= n completions, <= n successful drain placements, and one
+    failed drain check per completion), the loop exits early once all work
+    has completed, and the whole loop jit-compiles once per (m, n) shape.
+
+    Placements and queue decisions reproduce the float64 oracle: canonical
+    per-server sum refreshes keep same-spec servers bitwise-tied, and
+    ``argmin_with_margin`` resolves sub-margin score/finish-time ties to the
+    lowest index exactly like the oracle's strict-improvement loops.
+
+    ``scorer=None`` uses the engine's incremental evaluation of the shared
+    scoring contract (O(Q m T) with no counts @ D re-reduction); passing an
+    explicit backend (e.g. the Pallas kernel via ``engine.make_scorer``)
+    routes every candidate batch through it instead.
+
+    ``telemetry=True`` additionally emits the fixed-shape observation log the
+    streaming D-estimator consumes (``repro.telemetry``): per arrival, the
+    time-integrated co-resident type counts over its run (``obs_co`` [n, T],
+    excluding the workload itself) and the time it spent while its server was
+    past the physical TDP (``obs_lost`` [n]). Both integrate between
+    micro-events, so partial co-residency overlaps are weighted exactly by
+    their duration. Off by default: the accumulation adds an O(m K T) scatter
+    per time-advancing event, and the static flag compiles it out entirely.
+    """
+    return _trace_segment(
+        cluster, dyn, arr_time, arr_type, arr_bytes,
+        jnp.int32(arr_time.shape[0]), objective=objective, scorer=scorer,
+        n_steps=n_steps, telemetry=telemetry)
 
 
 # --- array-native local search (core/refine.py's device backend) ----------------

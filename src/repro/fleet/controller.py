@@ -43,7 +43,8 @@ engine binds it to the fleet's servers and estimators it already builds.
 from __future__ import annotations
 
 import dataclasses
-from typing import Hashable, Literal, Sequence
+import math
+from typing import Hashable, Literal, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -57,9 +58,9 @@ from ..distributed.fault_tolerance import (
     ReMeshPlan,
     plan_elastic_remesh,
 )
-from ..telemetry.estimator import StreamingEstimator
+from ..telemetry.estimator import DeviceEstimatorState, StreamingEstimator
 from ..telemetry.log import RingBlock
-from .detect import DriftDetector
+from .detect import CusumState, DriftDetector
 from .pool import PooledEstimatorBank
 
 
@@ -77,6 +78,229 @@ def _base_ratio(log_b, n_base, priors, read_row, min_exposure):
     tot = w.sum(axis=1)
     ratio = jnp.exp((w * (lb - pr)).sum(axis=1) / jnp.maximum(tot, 1e-12))
     return jnp.where(tot >= min_exposure, ratio, 1.0)
+
+
+class FleetStepOut(NamedTuple):
+    """One traced controller step's outcome (see :func:`fleet_step`)."""
+
+    bank: DeviceEstimatorState  # post-action stacked bank [m rows]
+    det: CusumState  # post-action detector state
+    row_map: jax.Array  # i32[m] update routing (-1 = dropped)
+    read_row: jax.Array  # i32[m] read routing (survives drops)
+    active: jax.Array  # bool[m] placement eligibility
+    split_fired: jax.Array  # bool[m]
+    split_stat: jax.Array  # f32[m] CUSUM max per server, pre-reset
+    evict_fired: jax.Array  # bool[m]
+    evict_stat: jax.Array  # f32[m] level-vs-median or log base ratio
+    evict_route: jax.Array  # bool[m] True = level route, False = base route
+
+
+def fleet_step(
+    bank: DeviceEstimatorState,
+    det: CusumState,
+    row_map: jax.Array,
+    read_row: jax.Array,
+    active: jax.Array,
+    logb_priors: jax.Array,
+    act_ok: jax.Array,
+    *,
+    h: float,
+    level_decay: float,
+    fail_floor: float,
+    min_exposure: float,
+) -> FleetStepOut:
+    """``FleetController.observe``'s decision logic as a traceable program.
+
+    The exact split-then-evict policy of :meth:`FleetController.observe`,
+    with every pool action (``PooledEstimatorBank.split``/``drop`` plus the
+    detector's pool-row migration) expressed as pure array ops, so the
+    device-resident closed loop (``core.closed_loop``) can run the whole
+    observe -> estimate -> detect -> act cycle without a host round trip.
+    Hyperparameters are static Python floats -- the function is plain (not
+    jitted) and inlines into its caller's trace.
+
+    Sequencing matches the host exactly: flags/level/ratio/median are
+    snapshots taken before each action loop (as ``observe`` precomputes
+    them), while pool membership evolves *live* inside the loops (as the
+    host's live ``row_of`` does) -- two flagged members of one pool split in
+    index order against the topology the earlier split left behind.
+    ``act_ok`` False turns the whole step into routing/identity (warm-up
+    segments, padded segments).
+
+    Every bank write inside the action loops is a pure row *copy* (seeding
+    a departing row with the pool posterior), so the loops never touch the
+    [rows, T, T] tables: they carry a row-provenance map ``src_of`` (final
+    content of row r = input row ``src_of[r]``; copies compose as
+    ``src_of[dst] = src_of[src]``) over [m]-sized arrays only, and one
+    gather applies all copies at the end -- skipped entirely (``lax.cond``)
+    on the common no-action segment. The base-rate read between the loops
+    resolves content through the same map (``log_b[src_of[read_row]]``)
+    while keeping the *nominal* prior per reading row (``priors[read_row]``,
+    as the host's fixed ``_logb_priors`` stack does).
+
+    The whole action machinery sits behind one ``lax.cond``: the pre-action
+    screen (flags, level hits, base hits against pre-action state) decides
+    *exactly* whether any split or eviction can fire -- the first action to
+    fire would see pre-action state, so "no action under pre-action state"
+    means no action at all -- and the quiet segment (the steady state) pays
+    for two [m]-length loop dispatches only when something actually moves.
+    """
+    m = int(row_map.shape[0])
+    rows_cap = int(bank.log_b.shape[0])
+    rows_n = int(det.pool_level.shape[0])
+    idx_m = jnp.arange(m, dtype=jnp.int32)
+    ident = jnp.arange(rows_cap, dtype=jnp.int32)
+
+    def migrate_pool_rows(det, src, do, new):
+        # the detector's pool-centering EWMA rows follow a leader migration
+        # (DriftDetector.move_pool_row); OOB index drops the write otherwise
+        v_l = det.pool_level[src]
+        v_n = det.pool_n[src]
+        mdst = jnp.where(do, new, rows_n)
+        msrc = jnp.where(do, src, rows_n)
+        return det._replace(
+            pool_level=det.pool_level.at[mdst].set(v_l).at[msrc].set(0.0),
+            pool_n=det.pool_n.at[mdst].set(v_n).at[msrc].set(0.0))
+
+    # -- snapshots: the host precomputes these before acting, and the split
+    # loop touches none of their inputs (det.n/level and active survive it),
+    # so they serve the action loops and the pre-action screen alike
+    split_stat = det.stat.max(axis=1)  # [m]
+    flags = (split_stat >= h) & active & act_ok
+    exposure = det.n  # f32[m]
+    level = jnp.where(
+        exposure > 0.0,
+        det.level / jnp.maximum((1.0 - level_decay) * exposure, 1e-12),
+        0.0)
+    seen = active & (exposure > 0.0)
+    cnt = seen.sum()
+    sv = jnp.sort(jnp.where(seen, level, jnp.inf))
+    med = jnp.where(
+        cnt > 0,
+        0.5 * (sv[jnp.clip((cnt - 1) // 2, 0, m - 1)]
+               + sv[jnp.clip(cnt // 2, 0, m - 1)]),
+        0.0)
+    level_hits = ((exposure >= min_exposure)
+                  & (level - med <= math.log(fail_floor)) & act_ok)
+
+    def base_ratio(src_of, read_row):
+        # _base_ratio on the (post-split) bank, content resolved through
+        # src_of; the prior stays the reading row's own
+        rr = jnp.clip(read_row, 0, rows_cap - 1)
+        lb, wexp = bank.log_b[src_of[rr]], bank.n_base[src_of[rr]]
+        tot = wexp.sum(axis=1)
+        ratio = jnp.exp((wexp * (lb - logb_priors[rr])).sum(axis=1)
+                        / jnp.maximum(tot, 1e-12))
+        return jnp.where(tot >= jnp.float32(min_exposure), ratio, 1.0)
+
+    # -- the screen: can anything fire against pre-action state? -----------
+    ratio0 = base_ratio(ident, read_row)
+    row_live = row_map >= 0
+    size0 = ((row_map[:, None] == row_map[None, :])
+             & row_live[None, :] & row_live[:, None]).sum(axis=1)
+    gate0 = active & (active.sum() > 1) & act_ok
+    maybe_evict = gate0 & (level_hits
+                           | ((size0 == 1) & (ratio0 <= fail_floor)))
+    take_slow = jnp.any(flags) | jnp.any(maybe_evict)
+
+    def split_body(s, carry):
+        src_of, det, row_map, read_row, fired = carry
+        row = row_map[s]
+        members = (row_map == row) & (row_map >= 0)
+        can = flags[s] & (row >= 0) & (members.sum() > 1)
+        is_leader = can & (row == s)
+        others = members & (idx_m != s)
+        new = jnp.min(jnp.where(others, idx_m, m)).astype(jnp.int32)
+        # seed the departing row with the pool posterior: leader split copies
+        # src -> new (the pool migrates, the leader keeps src); non-leader
+        # split copies src -> s (the member leaves with the shared state)
+        src = jnp.clip(row, 0, rows_cap - 1)
+        cp = jnp.where(can, jnp.where(is_leader, new, s), rows_cap)
+        src_of = src_of.at[cp].set(src_of[src])
+        move = is_leader & others
+        row_map = jnp.where(move, new, row_map)
+        read_row = jnp.where(move, new, read_row)
+        nl = jnp.where(can & ~is_leader, s, m)
+        row_map = row_map.at[nl].set(s)
+        read_row = read_row.at[nl].set(s)
+        det = migrate_pool_rows(det, src, is_leader, new)
+        # CUSUM evidence was acted on (or is the solo estimator's to
+        # absorb): reset the stat pair for every *flagged* server, split or
+        # not -- the residual level keeps its history across the split
+        det = det._replace(stat=det.stat.at[jnp.where(flags[s], s, m)].set(0.0))
+        fired = fired.at[jnp.where(can, s, m)].set(True)
+        return src_of, det, row_map, read_row, fired
+
+    def slow(args):
+        bank, det, row_map, read_row, active = args
+        src_of, det, row_map, read_row, split_fired = jax.lax.fori_loop(
+            0, m, split_body,
+            (ident, det, row_map, read_row, jnp.zeros((m,), bool)))
+
+        # -- failures: level route vs fleet median, base route vs nominal --
+        ratio = base_ratio(src_of, read_row)
+
+        def evict_body(s, carry):
+            src_of, det, row_map, read_row, active, fired, stats = carry
+            row = row_map[s]
+            members = (row_map == row) & (row_map >= 0)
+            size = members.sum()
+            gate = active[s] & (active.sum() > 1) & act_ok
+            base_hit = (size == 1) & (ratio[s] <= fail_floor)
+            fire = gate & (level_hits[s] | base_hit)
+            # an evicted leader detaches its survivors first (drop ->
+            # split): the pool migrates to the next member's row, src -> new
+            is_leader = fire & (row == s) & (size > 1)
+            others = members & (idx_m != s)
+            new = jnp.min(jnp.where(others, idx_m, m)).astype(jnp.int32)
+            src = jnp.clip(row, 0, rows_cap - 1)
+            cp = jnp.where(is_leader, new, rows_cap)
+            src_of = src_of.at[cp].set(src_of[src])
+            move = is_leader & others
+            row_map = jnp.where(move, new, row_map)
+            read_row = jnp.where(move, new, read_row)
+            det = migrate_pool_rows(det, src, is_leader, new)
+            # the drop itself: routing -1, mask False, detector rows reset
+            # (read_row keeps resolving to the last live row, as on host)
+            di = jnp.where(fire, s, m)
+            row_map = row_map.at[di].set(-1)
+            active = active.at[di].set(False)
+            det = det._replace(stat=det.stat.at[di].set(0.0),
+                               level=det.level.at[di].set(0.0),
+                               n=det.n.at[di].set(0.0))
+            fired = fired.at[di].set(True)
+            stats = stats.at[di].set(
+                jnp.where(level_hits[s], level[s] - med, jnp.log(ratio[s])))
+            return src_of, det, row_map, read_row, active, fired, stats
+
+        src_of, det, row_map, read_row, active, evict_fired, evict_stat = (
+            jax.lax.fori_loop(
+                0, m, evict_body,
+                (src_of, det, row_map, read_row, active,
+                 jnp.zeros((m,), bool), jnp.zeros((m,), jnp.float32))))
+
+        bank2 = jax.lax.cond(
+            jnp.any(src_of != ident),
+            lambda b: DeviceEstimatorState(*(a[src_of] for a in b)),
+            lambda b: b,
+            bank)
+        return FleetStepOut(
+            bank=bank2, det=det, row_map=row_map, read_row=read_row,
+            active=active, split_fired=split_fired, split_stat=split_stat,
+            evict_fired=evict_fired, evict_stat=evict_stat,
+            evict_route=level_hits)
+
+    def fast(args):
+        bank, det, row_map, read_row, active = args
+        quiet = jnp.zeros((m,), bool)
+        return FleetStepOut(
+            bank=bank, det=det, row_map=row_map, read_row=read_row,
+            active=active, split_fired=quiet, split_stat=split_stat,
+            evict_fired=quiet, evict_stat=jnp.zeros((m,), jnp.float32),
+            evict_route=level_hits)
+
+    return jax.lax.cond(take_slow, slow, fast,
+                        (bank, det, row_map, read_row, active))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -319,6 +543,67 @@ class FleetController:
 
         self.events.extend(events)
         return used, events
+
+    def adopt_device_outcome(
+        self,
+        bank_state: DeviceEstimatorState,
+        det_state: CusumState,
+        row_map: np.ndarray,
+        read_row: np.ndarray,
+        active: np.ndarray,
+        outcomes: Sequence[dict],
+    ) -> list[list[HealthEvent]]:
+        """Mirror a device-resident closed-loop run into host fleet state.
+
+        ``core.closed_loop`` runs :func:`fleet_step` inside its scan; this
+        swallows the run's final arrays whole (routing via
+        ``pool.adopt_rows``, mask, detector state, stacked bank) and replays
+        only the *host-side* per-segment bookkeeping the device cannot
+        carry: heartbeats on the segment clock, the burn-in counter,
+        :class:`HealthEvent` records, ``mark_dead`` and re-mesh plans per
+        eviction. ``outcomes`` is one dict per real segment, ascending, with
+        the ``FleetStepOut`` decision arrays pulled to numpy. Returns the
+        events per segment (also accumulated on ``self.events``).
+        """
+        self._require_bound()
+        per_segment: list[list[HealthEvent]] = []
+        entry_active = self._active.copy()
+        for out in outcomes:
+            seg = int(out["segment"])
+            for s in range(self.m):
+                if entry_active[s]:
+                    self.monitor.heartbeat(s, now=float(seg))
+            self._segments_seen += 1
+            events: list[HealthEvent] = []
+            stat = np.asarray(out["split_stat"], np.float64)
+            for s in map(int, np.flatnonzero(out["split_fired"])):
+                events.append(HealthEvent(
+                    "split", s, seg, float(stat[s]),
+                    detail=f"cusum {stat[s]:.2f} >= h {self.detector.h:g}"))
+            est = np.asarray(out["evict_stat"], np.float64)
+            route = np.asarray(out["evict_route"], bool)
+            for s in map(int, np.flatnonzero(out["evict_fired"])):
+                stat_val = float(est[s])
+                detail = ("residual level vs fleet median" if route[s]
+                          else "estimated base") + (
+                    f" {np.exp(stat_val):.3f} <= floor {self.fail_floor:g}")
+                events.append(HealthEvent("evict", s, seg, stat_val,
+                                          detail=detail))
+                self.monitor.mark_dead(s)
+                if self.mesh is not None:
+                    plan = plan_elastic_remesh(self.mesh, [s])
+                    if plan is not None:
+                        self.plans.append(plan)
+                        self.mesh = plan.new  # consecutive failures compose
+            self.events.extend(events)
+            per_segment.append(events)
+            entry_active = np.asarray(out["active_after"], bool).copy()
+        self.pool.adopt_rows(row_map, read_row)
+        self._active = np.asarray(active, bool).copy()
+        self.detector.state = CusumState(*det_state)
+        self.pool.bank._stacked = DeviceEstimatorState(*bank_state)
+        self.pool.bank._dirty = True
+        return per_segment
 
     def _follow_migration(self) -> None:
         """Keep the detector's pool-centering rows aligned with a pool that

@@ -69,6 +69,16 @@ class CusumState(NamedTuple):
     pool_level: jax.Array  # f32[m rows] EWMA of each pool row's residual
     pool_n: jax.Array  # f32[m rows] decayed exposure behind ``pool_level``
 
+    @classmethod
+    def zeros(cls, m: int, rows: "int | None" = None) -> "CusumState":
+        """Fresh all-zero state for ``m`` servers (``rows`` pool rows)."""
+        rows = m if rows is None else rows
+        return cls(stat=jnp.zeros((m, 2), jnp.float32),
+                   level=jnp.zeros(m, jnp.float32),
+                   n=jnp.zeros(m, jnp.float32),
+                   pool_level=jnp.zeros(rows, jnp.float32),
+                   pool_n=jnp.zeros(rows, jnp.float32))
+
 
 @partial(jax.jit,
          static_argnames=("k", "level_decay", "max_lost_frac"))
@@ -196,13 +206,7 @@ class DriftDetector:
             self.fail_floor = eviction_rate_floor()
         if not 0.0 < self.fail_floor < 1.0:
             raise ValueError(f"fail_floor must be in (0, 1), got {self.fail_floor}")
-        self.state = CusumState(
-            stat=jnp.zeros((self.m, 2), jnp.float32),
-            level=jnp.zeros(self.m, jnp.float32),
-            n=jnp.zeros(self.m, jnp.float32),
-            pool_level=jnp.zeros(self.m, jnp.float32),
-            pool_n=jnp.zeros(self.m, jnp.float32),
-        )
+        self.state = CusumState.zeros(self.m)
 
     # -- updates -----------------------------------------------------------
     def update(self, block: RingBlock, log_b, L_t, row_map, sync: bool = True):

@@ -167,6 +167,20 @@ class PooledEstimatorBank:
         self._row_map = jnp.asarray(self.row_of)
         return True
 
+    def adopt_rows(self, row_of, read_row) -> None:
+        """Adopt routing computed off-host.
+
+        The device-resident closed loop (``core.closed_loop``) applies
+        splits and drops as array ops inside its scan; after the run the
+        host mirror swallows the final maps whole instead of replaying each
+        action. Any pending ``last_migration`` is cleared -- per-row
+        consumer state was already moved on device.
+        """
+        self.last_migration = None
+        self.row_of = np.asarray(row_of, np.int32).copy()
+        self._read_row = np.asarray(read_row, np.int32).copy()
+        self._row_map = jnp.asarray(self.row_of)
+
     def drop(self, server: int) -> None:
         """Stop routing ``server``'s observations anywhere (eviction).
 

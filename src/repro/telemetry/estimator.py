@@ -161,6 +161,18 @@ class DeviceEstimatorState(NamedTuple):
     n_obs: "object"  # i32 scalar observations consumed
 
 
+def _blend_prior_t(L_t, n_pair_t, L_prior_t, confidence_floor):
+    """``estimate_D``'s confidence blend, in target-major device form.
+
+    Below the floor the pair estimate falls back linearly (in accumulated
+    exposure) to the prior -- exactly the host read's blend, kept plain so
+    the device-resident closed loop (``core.closed_loop``) embeds it in its
+    own trace instead of pulling [T, T] tables to the host every segment.
+    """
+    w = jnp.minimum(n_pair_t / confidence_floor, 1.0)
+    return w * L_t + (1.0 - w) * L_prior_t
+
+
 def _bank_core(
     state: DeviceEstimatorState,  # arrays carry a leading server axis [m, ...]
     block: RingBlock,
@@ -172,6 +184,7 @@ def _bank_core(
     max_lost_frac: float,
     use_pallas: bool,
     interpret: bool,
+    sparse_tables: bool = False,
 ):
     """The fused observe -> estimate step: m per-server estimators, one pass.
 
@@ -184,6 +197,14 @@ def _bank_core(
     so the batch streams once regardless of m. The single-estimator
     ``_update_device`` is this program with m = 1 (no duplicated twin to
     drift out of parity). Returns (new_state, used_total).
+
+    ``sparse_tables`` routes the [m, T, T] table updates through scatters
+    that touch only the <= B (server, type) rows the batch names, instead
+    of dense full-table accumulators -- numerically identical (same
+    contributions, same in-order summation; untouched entries skip a
+    ``* 1.0`` / ``+ 0.0``), but O(B T) instead of O(m T^2) per call. The
+    device-resident closed loop runs with it on; the host-alternating path
+    keeps the dense form that the purity/x64 audits pin.
     """
     L_t, log_b, n_pair_t, n_base, n_obs = state
     m, T = log_b.shape
@@ -202,7 +223,14 @@ def _bank_core(
                          decay ** (n_used[None, :].astype(jnp.float32) - rank), 0.0)
         w = w_bm.sum(axis=1)  # [B]: each row has at most one server column
         sdecay = decay ** n_used.astype(jnp.float32)  # [m]
-        n_pair_t = n_pair_t * sdecay[:, None, None]
+        if sparse_tables:
+            # untouched servers have n_used = 0 -> sdecay exactly 1.0: decay
+            # only the rows present, once each (first occurrence per server)
+            first = onehot_s & (rank == 1.0)
+            fi = jnp.where(first.any(axis=1), s_clip, m)  # OOB drops the rest
+            n_pair_t = n_pair_t.at[fi].multiply(sdecay[s_clip][:, None, None])
+        else:
+            n_pair_t = n_pair_t * sdecay[:, None, None]
         n_base = n_base * sdecay[:, None]
     else:
         w = valid.astype(jnp.float32)
@@ -242,6 +270,25 @@ def _bank_core(
 
         pair, _ = pair_scatter(tt, block.co, stats, interpret=interpret)
         pair_t = pair.swapaxes(1, 2)[:, None]  # [K, 1, T(t), T(u)]
+        L_t = L_t + lr * pair_t[0] / (pair_t[1] + step_damp)
+        n_pair_t = n_pair_t + pair_t[1]
+    elif sparse_tables:
+        # accumulate per distinct (server, type) key into compact [B, T]
+        # slots (each row folds into its key's first occurrence, in row
+        # order -- the same in-order duplicate summation as the dense
+        # scatter below), then one row-scatter applies the damped step to
+        # exactly the rows the batch names
+        B = block.co.shape[0]
+        contrib = block.co[None, :, :] * stats[:, :, None]  # [K, B, T(u)]
+        key = s_clip * (T + 1) + tt
+        idx_b = jnp.arange(B, dtype=jnp.int32)
+        fo = jnp.min(jnp.where(key[None, :] == key[:, None],
+                               idx_b[None, :], B), axis=1)  # first occurrence
+        slots = jnp.zeros((2, B, T), jnp.float32).at[:, fo].add(contrib)
+        delta = lr * slots[0] / (slots[1] + step_damp)
+        ls = jnp.where(idx_b == fo, s_clip, m)  # dups/OOB rows drop
+        L_t = L_t.at[ls, tt].add(delta)  # tt = T (dump) drops too
+        n_pair_t = n_pair_t.at[ls, tt].add(slots[1])
     else:
         # CPU/GPU lowering: a duplicate-index scatter-add touches only the
         # O(B T) contributing elements (~200x less work at T = 230 than the
@@ -249,8 +296,8 @@ def _bank_core(
         contrib = block.co[None, :, :] * stats[:, :, None]  # [K, B, T(u)]
         acc = jnp.zeros((2, m, T + 1, T), jnp.float32).at[:, s_clip, tt].add(contrib)
         pair_t = acc[:, :, :T]  # [K, m, T(t), T(u)]
-    L_t = L_t + lr * pair_t[0] / (pair_t[1] + step_damp)
-    n_pair_t = n_pair_t + pair_t[1]
+        L_t = L_t + lr * pair_t[0] / (pair_t[1] + step_damp)
+        n_pair_t = n_pair_t + pair_t[1]
 
     new = DeviceEstimatorState(L_t, log_b, n_pair_t, n_base, n_obs + n_used)
     return new, n_used.sum()
@@ -571,7 +618,7 @@ class StreamingEstimator:
 _update_bank = partial(
     jax.jit,
     static_argnames=("lr", "decay", "step_damp", "solo_eps", "max_lost_frac",
-                     "use_pallas", "interpret"),
+                     "use_pallas", "interpret", "sparse_tables"),
 )(_bank_core)
 
 

@@ -254,6 +254,22 @@ def _ring_write_trace(
     return _write_rows_contig(buf, block, ptr), block
 
 
+def _ring_write_masked(buf: RingBlock, block: RingBlock, ptr, n_valid) -> RingBlock:
+    """Masked modular ring write: rows [0, n_valid) land at [ptr, ptr +
+    n_valid) mod capacity, the rest scatter out of bounds and are dropped.
+
+    Plain (un-jitted) on purpose: the device-resident closed loop embeds it
+    in its own scan, where the written row count is a *traced* quantity --
+    the jitted pushes below keep their static-shape fast paths.
+    """
+    cap = buf.ints.shape[0]
+    n = block.ints.shape[0]
+    i = jnp.arange(n, dtype=jnp.int32)
+    idx = jnp.where(i < n_valid, (ptr + i) % cap, cap)
+    return RingBlock(*(b.at[idx].set(v.astype(b.dtype))
+                       for b, v in zip(buf, block)))
+
+
 @partial(jax.jit, donate_argnums=(0,))
 def _ring_write(buf: RingBlock, block: RingBlock, ptr: jax.Array) -> RingBlock:
     """Scatter ``block``'s rows into the ring at [ptr, ptr + n) mod capacity."""
