@@ -1,0 +1,121 @@
+"""Metrics-plane overhead: device loop with in-carry counters on vs off.
+
+The PR-8 tentpole threads a ``MetricFrame`` (counters, high-water gauges,
+log-binned histograms, per-server columns) through the fused closed loop's
+carry. The instrumentation is a handful of scatter-adds per event against a
+scan body dominated by the O(m*T^2) estimator update, so it should be close
+to free -- this benchmark holds it to that claim.
+
+Protocol mirrors ``benchmarks/closed_loop.py``: identical arrivals, separate
+engines per configuration (one compile cache each, no cross-warming), warm
+once to exclude compilation, then min-of-reps wall clock per full device-loop
+run. The acceptance gate is metrics-on overhead <= 5% of the metrics-off
+per-segment time at the 16-server tier.
+
+Two honesty checks ride along: the metrics-on run's counters are compared
+against host-visible oracle counts (arrivals/segments/placements from the
+returned segments), and the on-run's frame is flattened into the BENCH
+records via ``snapshot_records`` so the JSON shows what a run report carries.
+
+``--smoke`` shrinks to the 3-server tier with a handful of segments.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.base import MeshConfig
+from repro.core import M1, AdaptiveEngine, Workload, snap_to_grid
+from repro.core.workload import FS_GRID, RS_GRID
+from repro.fleet import FleetController
+from repro.obs import metrics as M
+from repro.obs.report import snapshot_records
+
+#: (servers, jobs per segment, segments); the 16-server row is the gate
+TIERS = [(4, 1, 64), (16, 1, 64)]
+GATE_M, GATE_FRAC = 16, 0.05
+REPS = 5
+
+
+def _arrivals(seed: int, n_seg: int, segments: int, gap: float = 2e-5):
+    rng = np.random.default_rng(seed)
+    seg, t = [], 0.0
+    for _ in range(n_seg):
+        fs = float(rng.choice(FS_GRID[10:14]))
+        w = snap_to_grid(Workload(fs=fs, rs=float(rng.choice(RS_GRID[5:8])),
+                                  data_total=fs * 6))
+        t += float(rng.exponential(gap))
+        seg.append((t, w))
+    return [(t + k * 10.0, w) for k in range(segments) for t, w in seg]
+
+
+def _engine(m: int) -> AdaptiveEngine:
+    return AdaptiveEngine([M1] * m, prior=0.0, decay=1.0,
+                          fleet=FleetController(mesh=MeshConfig()),
+                          ring_capacity=256)
+
+
+def _time_path(m, n_seg, segments, metrics, reps=REPS):
+    arr = _arrivals(0, n_seg, segments)
+    eng = _engine(m)
+    eng.run(arr, segments=segments, device_loop=True, metrics=metrics)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = eng.run(arr, segments=segments, device_loop=True,
+                      metrics=metrics)
+        ts.append(time.perf_counter() - t0)
+    return min(ts) / segments, res
+
+
+def _check_counters(res, n_arrivals: int, segments: int) -> "list[str]":
+    """Frame counters vs the host-visible oracle of the same run."""
+    frame = res.metrics
+    placed = sum(
+        1 for seg in res.segments for p in seg.placements if p is not None)
+    oracle = {"arrivals": n_arrivals, "segments": segments,
+              "placements": placed}
+    return [f"{name}: frame {M.counter_value(frame, name)} != oracle {want}"
+            for name, want in oracle.items()
+            if M.counter_value(frame, name) != want]
+
+
+def _tier(emit, m, n_seg, segments, tag):
+    off_s, _ = _time_path(m, n_seg, segments, metrics=False)
+    on_s, on_res = _time_path(m, n_seg, segments, metrics=True)
+    overhead = on_s / off_s - 1.0
+    emit(f"obs/off_{tag}", off_s * 1e6,
+         f"m={m};jobs_per_seg={n_seg};segments={segments};"
+         f"segs_per_s={1.0 / off_s:.1f}", unit="us_per_segment")
+    emit(f"obs/on_{tag}", on_s * 1e6,
+         f"m={m};jobs_per_seg={n_seg};segments={segments};"
+         f"segs_per_s={1.0 / on_s:.1f}", unit="us_per_segment")
+    emit(f"obs/overhead_{tag}", overhead,
+         f"m={m};on/off-1;"
+         + (f"gate=<= {GATE_FRAC:.0%}" if m == GATE_M else "info"),
+         unit="frac")
+    mismatches = _check_counters(on_res, n_seg * segments, segments)
+    emit(f"obs/counters_exact_{tag}", float(not mismatches),
+         ";".join(mismatches) if mismatches
+         else f"m={m};arrivals/segments/placements match host oracle",
+         unit="bool")
+    return overhead, on_res
+
+
+def run(emit, smoke: bool = False):
+    if smoke:
+        overhead, on_res = _tier(emit, 3, 2, 6, "m3")
+        for name, value, unit in snapshot_records(on_res.metrics):
+            emit(name, value, "smoke device-loop metrics snapshot", unit=unit)
+        return
+    gate_res = None
+    for m, n_seg, segments in TIERS:
+        overhead, on_res = _tier(emit, m, n_seg, segments, f"m{m}")
+        if m == GATE_M:
+            gate_res = (overhead, on_res)
+    overhead, on_res = gate_res
+    emit("obs/gate_16server", float(overhead <= GATE_FRAC),
+         f"overhead_m16={overhead:.4f};bar={GATE_FRAC}", unit="bool")
+    for name, value, unit in snapshot_records(on_res.metrics):
+        emit(name, value, "16-server device-loop metrics snapshot", unit=unit)

@@ -29,6 +29,7 @@ from . import (
     fig12_single_workload,
     fig34_consolidation,
     fleet_health,
+    obs_overhead,
     roofline_table,
     scale_scheduler,
     table2_greedy_example,
@@ -47,6 +48,7 @@ MODULES = [
     ("fleet", fleet_health),
     ("roofline", roofline_table),
     ("closedloop", closed_loop),
+    ("obs", obs_overhead),
 ]
 
 

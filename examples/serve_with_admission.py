@@ -1,6 +1,10 @@
 """Serving example: batched prefill+decode for a small model, gated by the
 paper's consolidation admission (criteria of §V on the pod fleet).
 
+Admission runs with the ``repro.obs`` metrics plane on, so the driver prints
+a p50/p99 waiting-time and slowdown table next to the placements -- the
+paper's utilization-floor criterion reported as a live serving SLO.
+
     PYTHONPATH=src python examples/serve_with_admission.py
 """
 from repro.launch.serve import main as serve

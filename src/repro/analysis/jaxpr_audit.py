@@ -297,6 +297,70 @@ def _build_closed_loop():
     return fn, (cluster, dyn_stack, Lp_t, logb, carry, xs)
 
 
+def _build_run_trace_metrics():
+    """The metrics-instrumented event loop: same shapes as the plain entry,
+    but with the in-carry MetricFrame threaded through -- the instrumentation
+    must satisfy the same device-purity contract as the loop it measures."""
+    from ..core.engine_jax import run_trace
+
+    m, n = 4, 16
+    cluster, dyn = _cluster(m), _dynamics(m)
+    arr_time = jnp.cumsum(_f32((n,), 0.5))
+    arr_type = jnp.arange(n, dtype=jnp.int32) % _T
+    arr_bytes = _f32((n,), 1e6)
+    fn = lambda c, d, t, ty, b: run_trace(
+        c, d, t, ty, b, telemetry=True, metrics=True)
+    return fn, (cluster, dyn, arr_time, arr_type, arr_bytes)
+
+
+def _build_closed_loop_metrics():
+    """Metrics-instrumented multi-segment loop (fleet + metrics on): the
+    merge/count/observe ops in the scan body are part of the hot path when
+    the flag is set, so they get their own registry row."""
+    from ..core.closed_loop import (
+        ClosedLoopConfig,
+        LoopCarry,
+        SegmentIn,
+        run_closed_loop,
+    )
+    from ..fleet.detect import CusumState
+    from ..obs import metrics as obs_metrics
+    from ..telemetry.estimator import DeviceEstimatorState
+    from ..telemetry.log import RingBlock
+
+    m, n_seg, S_cap, cap = 4, 4, 4, 256
+    R = n_seg
+    cluster = _cluster(m)
+    dyn_stack = jax.tree_util.tree_map(lambda a: a[None], _dynamics(m))
+    bank = DeviceEstimatorState(
+        L_t=_f32((m, _T, _T)), log_b=_f32((m, _T)),
+        n_pair_t=_f32((m, _T, _T)), n_base=_f32((m, _T)),
+        n_obs=jnp.zeros((m,), jnp.int32))
+    ring = RingBlock(
+        ints=jnp.full((cap, 2), -1, jnp.int32),
+        scalars=jnp.zeros((cap, 6), jnp.float32),
+        co=jnp.zeros((cap, _T), jnp.float32))
+    carry = LoopCarry(
+        bank=bank, det=CusumState.zeros(m),
+        row_map=jnp.arange(m, dtype=jnp.int32),
+        read_row=jnp.arange(m, dtype=jnp.int32),
+        active=jnp.ones((m,), bool), seen=jnp.int32(0),
+        req_type=jnp.zeros((R,), jnp.int32),
+        req_bytes=jnp.ones((R,), jnp.float32), req_n=jnp.int32(0),
+        ring=ring, ring_ptr=jnp.int32(0), ring_total=jnp.int32(0),
+        metrics=obs_metrics.zeros(m))
+    xs = SegmentIn(
+        arr_time=_f32((S_cap, n_seg), 0.5),
+        arr_type=jnp.tile(jnp.arange(n_seg, dtype=jnp.int32) % _T, (S_cap, 1)),
+        arr_bytes=_f32((S_cap, n_seg), 1e6),
+        dyn_idx=jnp.zeros((S_cap,), jnp.int32),
+        seg_valid=jnp.ones((S_cap,), bool))
+    Lp_t, logb = _f32((m, _T, _T)), _f32((m, _T))
+    config = ClosedLoopConfig(fleet=True, metrics=True)
+    fn = lambda c, d, lp, lb, cr, x: run_closed_loop(c, d, lp, lb, cr, x, config)
+    return fn, (cluster, dyn_stack, Lp_t, logb, carry, xs)
+
+
 def _build_consolidation_scores():
     from ..kernels.consolidation import consolidation_scores
 
@@ -378,6 +442,10 @@ REGISTRY: tuple[HotEntry, ...] = (
              donated=True),
     HotEntry("core.closed_loop.run_closed_loop", TIER_DEVICE,
              _build_closed_loop),
+    HotEntry("engine_jax.run_trace[metrics]", TIER_DEVICE,
+             _build_run_trace_metrics),
+    HotEntry("core.closed_loop.run_closed_loop[metrics]", TIER_DEVICE,
+             _build_closed_loop_metrics),
     HotEntry("kernels.consolidation.consolidation_scores", TIER_DEVICE,
              _build_consolidation_scores, pallas=True),
     HotEntry("kernels.telemetry.pair_scatter", TIER_DEVICE, _build_pair_scatter,

@@ -148,6 +148,26 @@ def run_retrace_audit(stats: "dict | None" = None,
         dev_engine.run(dev_arrivals[:n_seg * 2], segments=2, device_loop=True)
         dev_engine.run(dev_arrivals[:n_seg * 3], segments=3, device_loop=True)
 
+    # metrics plane: ``metrics=True`` is one more static key on run_trace /
+    # one more field in the ClosedLoopConfig hash, so the first metrics run
+    # legitimately traces once per function -- after that the instrumented
+    # program must be exactly as cache-stable as the bare one. A metrics
+    # rerun (host alternating segments, then device loops at 2/3 segments
+    # inside the warm 4-segment bucket) must add ZERO traces.
+    obs_engine = _small_adaptive_engine()
+    with CompileCacheGuard() as obs_warm:
+        obs_engine.run(arrivals, segments=segments, metrics=True)
+    with CompileCacheGuard() as obs_rerun:
+        obs_engine.run(arrivals, segments=segments, metrics=True)
+    obs_dev = _small_adaptive_engine()
+    with CompileCacheGuard() as obs_dev_warm:
+        obs_dev.run(dev_arrivals, segments=4, device_loop=True, metrics=True)
+    with CompileCacheGuard() as obs_dev_rerun:
+        obs_dev.run(dev_arrivals[:n_seg * 2], segments=2, device_loop=True,
+                    metrics=True)
+        obs_dev.run(dev_arrivals[:n_seg * 3], segments=3, device_loop=True,
+                    metrics=True)
+
     findings = [
         Finding("retrace", "per-segment-retrace", name,
                 f"{delta} traces in a warm {segments}-segment run of one "
@@ -164,6 +184,23 @@ def run_retrace_audit(stats: "dict | None" = None,
                 "after a warm 4-segment run (expected 0: segment counts in "
                 "one S_cap bucket share a compilation)")
         for name, delta in sorted(dev_rerun.new_traces().items())
+    ] + [
+        Finding("retrace", "metrics-retrace", name,
+                f"{delta} traces in a warm metrics-on {segments}-segment run "
+                "(expected at most 1: the MetricFrame ops churn the cache "
+                "key per segment)")
+        for name, delta in sorted(obs_warm.new_traces().items()) if delta > 1
+    ] + [
+        Finding("retrace", "metrics-rerun-recompile", name,
+                f"{delta} new traces on an identical metrics-on rerun "
+                "(expected 0: instrumentation must not erode cache stability)")
+        for name, delta in sorted(obs_rerun.new_traces().items())
+    ] + [
+        Finding("retrace", "metrics-device-loop-recompile", name,
+                f"{delta} new traces running metrics-on 2- and 3-segment "
+                "device loops after a warm metrics-on 4-segment run "
+                "(expected 0)")
+        for name, delta in sorted(obs_dev_rerun.new_traces().items())
     ]
     if stats is not None:
         stats["retrace"] = {
@@ -173,5 +210,11 @@ def run_retrace_audit(stats: "dict | None" = None,
             "rerun_total": int(np.sum(list(rerun.deltas.values()) or [0])),
             "device_warm_traces": dev_warm.new_traces(),
             "device_rerun_traces": dev_rerun.new_traces(),
+            "metrics_warm_traces": obs_warm.new_traces(),
+            "metrics_rerun_traces": obs_rerun.new_traces(),
+            "metrics_rerun_total": int(
+                np.sum(list(obs_rerun.deltas.values()) or [0])),
+            "metrics_device_warm_traces": obs_dev_warm.new_traces(),
+            "metrics_device_rerun_traces": obs_dev_rerun.new_traces(),
         }
     return findings

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 
 from ..fleet.controller import fleet_step
 from ..fleet.detect import CusumState, _cusum_update
+from ..obs import metrics as obs_metrics
 from ..telemetry.estimator import (
     DeviceEstimatorState,
     _bank_core,
@@ -95,6 +96,10 @@ class ClosedLoopConfig:
     est_max_lost_frac: float = 0.5
     use_pallas: bool = False
     interpret: bool = True
+    # thread an obs.MetricFrame through the carry (engine event metrics +
+    # per-segment split/evict/requeue/ring/D-refresh accounting); off keeps
+    # LoopCarry.metrics = None and the compiled program byte-identical
+    metrics: bool = False
 
 
 class LoopCarry(NamedTuple):
@@ -112,6 +117,7 @@ class LoopCarry(NamedTuple):
     ring: RingBlock  # telemetry ring buffer [capacity, ...]
     ring_ptr: jax.Array  # i32 ring write cursor
     ring_total: jax.Array  # i32 rows ever pushed
+    metrics: "obs_metrics.MetricFrame | None" = None  # in-carry metrics plane
 
 
 class SegmentIn(NamedTuple):
@@ -234,21 +240,24 @@ def run_closed_loop(
                  jax.tree_util.tree_map(lambda a: a[x.dyn_idx], dyn_stack))
 
         # the segment's event loop, telemetry on
-        trace = _trace_segment(
-            cluster_k, dyn_k, a_time, a_type, a_bytes, n_valid,
-            objective=config.objective, scorer=config.scorer, telemetry=True)
+        with jax.named_scope("obs.segment_event_loop"):
+            trace = _trace_segment(
+                cluster_k, dyn_k, a_time, a_type, a_bytes, n_valid,
+                objective=config.objective, scorer=config.scorer,
+                telemetry=True, metrics=config.metrics)
 
         # observe -> estimate: the same fused banked update the host path
         # dispatches (remap through the pool routing, fold the block);
         # sparse_tables keeps the in-scan cost at O(B T) per step
-        block = _rows_from_trace(trace, a_type)
-        rblock = _remap_rows(block, carry.row_map)
-        bank, used = _bank_core(
-            carry.bank, rblock,
-            lr=config.lr, decay=config.decay, step_damp=config.step_damp,
-            solo_eps=config.solo_eps, max_lost_frac=config.est_max_lost_frac,
-            use_pallas=config.use_pallas, interpret=config.interpret,
-            sparse_tables=True)
+        with jax.named_scope("obs.estimate"):
+            block = _rows_from_trace(trace, a_type)
+            rblock = _remap_rows(block, carry.row_map)
+            bank, used = _bank_core(
+                carry.bank, rblock,
+                lr=config.lr, decay=config.decay, step_damp=config.step_damp,
+                solo_eps=config.solo_eps, max_lost_frac=config.est_max_lost_frac,
+                use_pallas=config.use_pallas, interpret=config.interpret,
+                sparse_tables=True)
 
         seen = carry.seen + x.seg_valid.astype(jnp.int32)
         if config.fleet:
@@ -306,13 +315,46 @@ def run_closed_loop(
         # and invalid rows alike -- exactly n_valid rows land)
         ring = _ring_write_masked(carry.ring, block, carry.ring_ptr, n_valid)
 
+        req_cnt = jnp.minimum(n_req, R)
+        if config.metrics:
+            # fold the segment's engine frame into the run frame, then add
+            # the closed-loop-level accounting the host used to keep
+            mf = obs_metrics.merge(carry.metrics, trace.metrics)
+            mf = obs_metrics.count(mf, "segments", x.seg_valid.astype(jnp.int32))
+            mf = obs_metrics.count(mf, "splits",
+                                   jnp.sum(split_fired, dtype=jnp.int32))
+            mf = obs_metrics.count(mf, "evictions",
+                                   jnp.sum(evict_fired, dtype=jnp.int32))
+            mf = obs_metrics.count(mf, "requeues", req_cnt)
+            mf = obs_metrics.count(mf, "ring_rows", n_valid)
+            # extent of the incremental D re-blend: block rows naming a
+            # live (bank row, type) pair -- the columns refresh_D targets
+            touched = jnp.sum((a_type >= 0) & (a_type < cluster.T)
+                              & (rblock.server >= 0) & (rblock.server < m),
+                              dtype=jnp.int32)
+            mf = obs_metrics.count(mf, "d_cols_refreshed", touched)
+            if config.fleet:
+                mf = obs_metrics.observe(
+                    mf, "cusum_level", split_stat,
+                    weight=(carry.active & x.seg_valid).astype(jnp.float32))
+            mf = obs_metrics.gauge_max(
+                mf, "ring_occupancy_peak",
+                jnp.minimum(carry.ring_total + n_valid, cap).astype(jnp.float32))
+            mf = obs_metrics.gauge_max(
+                mf, "evicted_peak", jnp.sum(~active, dtype=jnp.float32))
+            mf = obs_metrics.gauge_max(
+                mf, "requeue_peak", req_cnt.astype(jnp.float32))
+        else:
+            mf = carry.metrics
+
         carry2 = LoopCarry(
             bank=bank, det=det, row_map=row_map, read_row=read_row,
             active=active, seen=seen,
             req_type=req_type, req_bytes=req_bytes,
-            req_n=jnp.minimum(n_req, R),
+            req_n=req_cnt,
             ring=ring, ring_ptr=(carry.ring_ptr + n_valid) % cap,
-            ring_total=carry.ring_total + n_valid)
+            ring_total=carry.ring_total + n_valid,
+            metrics=mf)
         out_k = SegmentOut(
             placement=trace.placement, was_queued=trace.was_queued,
             place_time=trace.place_time, finish_time=trace.finish_time,

@@ -51,6 +51,9 @@ from .engine_jax import QUEUED, PackedDynamics, Scorer, run_trace
 from .scheduler import OnlineScheduler
 from .server import ServerSpec
 from .workload import FS_GRID, RS_GRID, Workload, type_index
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
+from ..obs.metrics import MetricFrame
 from ..telemetry.estimator import EstimatorBank, ScatterName, StreamingEstimator
 from ..telemetry.log import (
     ObservationLog,
@@ -131,6 +134,9 @@ class EngineResult:
     #: never left the device -- what AdaptiveEngine's stream mode folds into
     #: its ObservationRing
     stream_block: RingBlock | None = None
+    #: in-carry metrics plane (run(metrics=True)): queue depth, waiting time,
+    #: Eqn-4 headroom, slowdown, per-server floor violations (repro.obs)
+    metrics: MetricFrame | None = None
 
     @property
     def queued_indices(self) -> tuple[int, ...]:
@@ -242,6 +248,7 @@ class ConsolidationEngine:
         backend: Backend | None = None,
         *,
         telemetry: bool | Literal["host", "device"] = False,
+        metrics: bool = False,
     ) -> EngineResult:
         """Simulate arrivals [(time, workload)] to completion of all work.
 
@@ -258,29 +265,39 @@ class ConsolidationEngine:
         ``ObservationRing`` / ``StreamingEstimator.update_device``).
         Telemetry is emitted by the device engine's event loop, so it
         requires (and, under 'auto', selects) the jax backend.
+
+        ``metrics=True`` threads the ``repro.obs`` MetricFrame through the
+        event loop and attaches it as ``result.metrics`` (waiting-time /
+        headroom / slowdown histograms, queue depth, per-server floor
+        violations). Like telemetry, a device-engine feature: 'auto' selects
+        jax for it.
         """
         if telemetry not in (False, True, "host", "device"):
             raise ValueError(f"unknown telemetry mode {telemetry!r}")
         backend = backend or self.backend
         masked = self._active is not None and not self._active.all()
         if backend == "auto":
-            # telemetry and the fleet-health mask are device-engine features:
-            # 'auto' selects jax for them regardless of trace length
-            backend = ("jax" if telemetry or masked
+            # telemetry, metrics, and the fleet-health mask are device-engine
+            # features: 'auto' selects jax for them regardless of trace length
+            backend = ("jax" if telemetry or masked or metrics
                        or len(arrivals) >= AUTO_JAX_THRESHOLD else "numpy")
         if backend not in ("jax", "numpy"):
             raise ValueError(f"unknown engine backend {backend!r}")
         if telemetry and backend != "jax":
             raise ValueError("telemetry requires the jax engine backend")
+        if metrics and backend != "jax":
+            raise ValueError("metrics requires the jax engine backend")
         if backend == "numpy" and masked:
             raise ValueError("server masking (set_active) requires the jax "
                              "engine backend; the numpy oracle has no mask")
         if not arrivals:
             obs = (ObservationLog.empty(self.cluster.T)
                    if telemetry in (True, "host") else None)
-            return EngineResult((), (), (), (), 0.0, 0.0, backend, obs)
+            frame = obs_metrics.zeros(len(self.servers)) if metrics else None
+            return EngineResult((), (), (), (), 0.0, 0.0, backend, obs,
+                                metrics=frame)
         if backend == "jax":
-            return self._run_jax(arrivals, telemetry=telemetry)
+            return self._run_jax(arrivals, telemetry=telemetry, metrics=metrics)
         return self._run_oracle(arrivals)
 
     # -- device backend ---------------------------------------------------
@@ -288,6 +305,7 @@ class ConsolidationEngine:
         self,
         arrivals: Sequence[tuple[float, Workload]],
         telemetry: bool | Literal["host", "device"] = False,
+        metrics: bool = False,
     ) -> EngineResult:
         n = len(arrivals)
         times = np.asarray([t for t, _ in arrivals], np.float64)
@@ -305,7 +323,8 @@ class ConsolidationEngine:
         scorer = None if self.scorer == "jnp" else make_scorer(self.scorer)
         trace = run_trace(
             self.cluster, self.dyn, arr_time, arr_type, arr_bytes,
-            objective=self.objective, scorer=scorer, telemetry=bool(telemetry))
+            objective=self.objective, scorer=scorer, telemetry=bool(telemetry),
+            metrics=metrics)
         if bool(trace.deadlock):
             raise RuntimeError("deadlock: queued workloads fit no empty server")
         # observation records are per-run; the trace's arrival-sorted order is
@@ -334,6 +353,7 @@ class ConsolidationEngine:
             backend="jax",
             observations=obs,
             stream_block=block,
+            metrics=trace.metrics,
         )
 
     # -- reference oracle -------------------------------------------------
@@ -390,6 +410,13 @@ class AdaptiveResult:
     #: fleet-health events fired after each segment (empty without a fleet
     #: controller): splits and evictions, in the order they were taken
     health: "tuple[tuple[HealthEvent, ...], ...]" = ()
+    #: merged run-level MetricFrame (run(metrics=True)): the per-segment
+    #: engine frames folded together plus the closed-loop accounting
+    #: (segments/splits/evictions/requeues/ring occupancy). The counters
+    #: shared with ``health`` match it exactly; the cusum_level histogram
+    #: and d_cols_refreshed counter are device-loop-only (the host path
+    #: rebuilds D wholesale and keeps detector stats in host objects)
+    metrics: MetricFrame | None = None
 
     @property
     def makespans(self) -> tuple[float, ...]:
@@ -578,6 +605,7 @@ class AdaptiveEngine:
         on_segment: Callable[[int, EngineResult, "AdaptiveEngine"], None] | None = None,
         *,
         device_loop: bool = False,
+        metrics: bool = False,
     ) -> AdaptiveResult:
         """Alternate ``segments`` trace chunks with estimator refreshes.
 
@@ -603,6 +631,13 @@ class AdaptiveEngine:
         callback (there is no host between segments to call it from); this
         host-alternating path remains the reference oracle (DESIGN.md
         section 13).
+
+        ``metrics=True`` threads the ``repro.obs`` MetricFrame through every
+        segment and attaches the merged run frame as ``result.metrics``; the
+        split/evict/requeue counters bit-match ``result.health`` on both
+        paths. On the device loop the frame rides the scan carry; here it is
+        merged per segment on the host -- same decision-level counters, with
+        the device-only extras noted on :class:`AdaptiveResult`.
         """
         if device_loop:
             if on_segment is not None:
@@ -610,7 +645,9 @@ class AdaptiveEngine:
                     "device_loop=True runs all segments in one compiled "
                     "program; there is no per-segment host point for "
                     "on_segment -- use the host-alternating path")
-            return self._run_device_loop(arrivals, segments)
+            return self._run_device_loop(arrivals, segments, metrics=metrics)
+        m = len(self.servers)
+        frame = obs_metrics.zeros(m) if metrics else None
         ordered = sorted(arrivals, key=lambda tw: tw[0])
         bounds = np.linspace(0, len(ordered), segments + 1).astype(int)
         results, n_obs, t_starts, health = [], [], [], []
@@ -626,7 +663,7 @@ class AdaptiveEngine:
             if self.stream:
                 # fleet-scale path: the segment's rows go trace -> ring ->
                 # one banked estimator update without leaving the device
-                res = engine.run(chunk, telemetry="device")
+                res = engine.run(chunk, telemetry="device", metrics=metrics)
                 used = 0
                 if res.stream_block is not None:
                     # estimators consume the segment's FULL block; the ring
@@ -644,9 +681,32 @@ class AdaptiveEngine:
                     else:
                         used = self.bank.update_device(res.stream_block)
             else:
-                res = engine.run(chunk, telemetry=True)
+                res = engine.run(chunk, telemetry=True, metrics=metrics)
                 used = sum(est.update(res.observations.for_server(s))
                            for s, est in enumerate(self.estimators))
+            if metrics:
+                # the same closed-loop accounting the device scan keeps in
+                # its carry, from the host's own bookkeeping
+                frame = obs_metrics.merge(frame, res.metrics)
+                frame = obs_metrics.count(frame, "segments", 1)
+                frame = obs_metrics.count(
+                    frame, "splits",
+                    sum(1 for ev in events if ev.kind == "split"))
+                frame = obs_metrics.count(
+                    frame, "evictions",
+                    sum(1 for ev in events if ev.kind == "evict"))
+                frame = obs_metrics.count(frame, "requeues", len(requeue))
+                frame = obs_metrics.gauge_max(
+                    frame, "requeue_peak", float(len(requeue)))
+                if self.stream:
+                    frame = obs_metrics.count(frame, "ring_rows", len(chunk))
+                    frame = obs_metrics.gauge_max(
+                        frame, "ring_occupancy_peak",
+                        float(min(self.ring.total, self.ring.capacity)))
+                if self.fleet is not None:
+                    frame = obs_metrics.gauge_max(
+                        frame, "evicted_peak",
+                        float((~self.fleet.active_mask()).sum()))
             results.append(res)
             n_obs.append(used)
             t_starts.append(chunk[0][0] if chunk else 0.0)
@@ -654,11 +714,12 @@ class AdaptiveEngine:
             if on_segment is not None:
                 on_segment(k, res, self)
         return AdaptiveResult(tuple(results), tuple(n_obs), tuple(t_starts),
-                              tuple(health))
+                              tuple(health), metrics=frame)
 
     # -- the fused device-resident loop -----------------------------------
     def _run_device_loop(
-        self, arrivals: Sequence[tuple[float, Workload]], segments: int
+        self, arrivals: Sequence[tuple[float, Workload]], segments: int,
+        *, metrics: bool = False,
     ) -> AdaptiveResult:
         """One ``run_closed_loop`` dispatch for the whole multi-segment run.
 
@@ -669,6 +730,13 @@ class AdaptiveEngine:
         ``PooledEstimatorBank.adopt_rows``). Per-segment ``EngineResult``s
         carry no ``observations``/``stream_block``: the telemetry was
         consumed inside the program (the ring holds the bounded history).
+
+        The three host phases are wrapped in ``repro.obs.trace`` spans
+        (``closed_loop.pack`` / ``.dispatch`` / ``.epilogue``) so profiler
+        traces and span logs separate packing and adoption cost from the
+        blocking dispatch (which includes compilation on a cold cache).
+        With ``metrics=True`` the MetricFrame rides the scan carry and the
+        merged run frame is returned on ``AdaptiveResult.metrics``.
         """
         from ..fleet.detect import CusumState
         from .closed_loop import (
@@ -700,106 +768,114 @@ class AdaptiveEngine:
             raise ValueError("device_loop=True blends every row's D with one "
                              "confidence_floor; estimators disagree")
 
-        ordered = sorted(arrivals, key=lambda tw: tw[0])
-        times = np.asarray([t for t, _ in ordered], np.float64)
-        wtypes = np.asarray([type_index(w) for _, w in ordered], np.int32)
-        nbytes = np.asarray([w.data_total for _, w in ordered], np.float64)
+        with obs_trace.span("closed_loop.pack", segments=segments, m=m):
+            ordered = sorted(arrivals, key=lambda tw: tw[0])
+            times = np.asarray([t for t, _ in ordered], np.float64)
+            wtypes = np.asarray([type_index(w) for _, w in ordered], np.int32)
+            nbytes = np.asarray([w.data_total for _, w in ordered], np.float64)
 
-        # segments bucket to a power-of-two count (padding masked by
-        # seg_valid) so warm runs across different segment counts of the
-        # same fleet hit one compilation
-        S_cap = 4
-        while S_cap < segments:
-            S_cap *= 2
-        arr_time = np.zeros((S_cap, n_seg), np.float32)
-        arr_type = np.zeros((S_cap, n_seg), np.int32)
-        arr_bytes = np.ones((S_cap, n_seg), np.float32)
-        t0s = []
-        for k in range(segments):
-            sl = slice(k * n_seg, (k + 1) * n_seg)
-            t0 = float(times[k * n_seg])
-            t0s.append(t0)
-            arr_time[k] = times[sl] - t0
-            arr_type[k] = wtypes[sl]
-            arr_bytes[k] = nbytes[sl]
+            # segments bucket to a power-of-two count (padding masked by
+            # seg_valid) so warm runs across different segment counts of the
+            # same fleet hit one compilation
+            S_cap = 4
+            while S_cap < segments:
+                S_cap *= 2
+            arr_time = np.zeros((S_cap, n_seg), np.float32)
+            arr_type = np.zeros((S_cap, n_seg), np.int32)
+            arr_bytes = np.ones((S_cap, n_seg), np.float32)
+            t0s = []
+            for k in range(segments):
+                sl = slice(k * n_seg, (k + 1) * n_seg)
+                t0 = float(times[k * n_seg])
+                t0s.append(t0)
+                arr_time[k] = times[sl] - t0
+                arr_type[k] = wtypes[sl]
+                arr_bytes[k] = nbytes[sl]
 
-        # per-segment worlds, deduplicated into one stacked dynamics bank;
-        # the compiled cluster's structural tables must hold for all of them
-        structural = [(s.llc_bytes, s.llc_tolerance) for s in self.servers]
-        spec_of: dict[tuple[ServerSpec, ...], int] = {}
-        dyn_idx = np.zeros(S_cap, np.int32)
-        for k in range(segments):
-            specs = (tuple(self.drift.specs_at(self.servers, k))
-                     if self.drift is not None else self.servers)
-            if [(s.llc_bytes, s.llc_tolerance) for s in specs] != structural:
-                raise ValueError(
-                    "device_loop=True compiles one cluster for all segments: "
-                    "drift may not change llc_bytes/llc_tolerance (run the "
-                    "host-alternating path for structural drift)")
-            dyn_idx[k] = spec_of.setdefault(specs, len(spec_of))
-        for specs in spec_of:
-            if specs not in self._dyn_cache:
-                self._dyn_cache[specs] = PackedDynamics.build(list(specs))
-        dyn_stack = jax.tree_util.tree_map(
-            lambda *a: jnp.stack(a), *(self._dyn_cache[s] for s in spec_of))
-        cluster = PackedCluster.build(
-            list(self.servers),
-            [np.zeros((GRID_T, GRID_T), np.float32)] * m, self.alpha)
+            # per-segment worlds, deduplicated into one stacked dynamics bank;
+            # the compiled cluster's structural tables must hold for all of them
+            structural = [(s.llc_bytes, s.llc_tolerance) for s in self.servers]
+            spec_of: dict[tuple[ServerSpec, ...], int] = {}
+            dyn_idx = np.zeros(S_cap, np.int32)
+            for k in range(segments):
+                specs = (tuple(self.drift.specs_at(self.servers, k))
+                         if self.drift is not None else self.servers)
+                if [(s.llc_bytes, s.llc_tolerance) for s in specs] != structural:
+                    raise ValueError(
+                        "device_loop=True compiles one cluster for all segments: "
+                        "drift may not change llc_bytes/llc_tolerance (run the "
+                        "host-alternating path for structural drift)")
+                dyn_idx[k] = spec_of.setdefault(specs, len(spec_of))
+            for specs in spec_of:
+                if specs not in self._dyn_cache:
+                    self._dyn_cache[specs] = PackedDynamics.build(list(specs))
+            dyn_stack = jax.tree_util.tree_map(
+                lambda *a: jnp.stack(a), *(self._dyn_cache[s] for s in spec_of))
+            cluster = PackedCluster.build(
+                list(self.servers),
+                [np.zeros((GRID_T, GRID_T), np.float32)] * m, self.alpha)
 
-        Lp_t = jnp.asarray(
-            np.stack([e._L_prior.T for e in self.estimators]), jnp.float32)
-        logb_priors = jnp.asarray(
-            np.stack([e._logb_prior for e in self.estimators]), jnp.float32)
+            Lp_t = jnp.asarray(
+                np.stack([e._L_prior.T for e in self.estimators]), jnp.float32)
+            logb_priors = jnp.asarray(
+                np.stack([e._logb_prior for e in self.estimators]), jnp.float32)
 
-        scorer = None if self.scorer == "jnp" else make_scorer(self.scorer)
-        h = e0._hypers
-        est_h = dict(
-            lr=h["lr"], decay=h["decay"], step_damp=h["step_damp"],
-            solo_eps=h["solo_eps"], est_max_lost_frac=h["max_lost_frac"],
-            use_pallas=h["use_pallas"], interpret=h["interpret"])
-        fc = self.fleet
-        if fc is not None:
-            fc._require_bound()
-            config = ClosedLoopConfig(
-                objective=self.objective, scorer=scorer, fleet=True,
-                warmup_segments=fc.warmup_segments, cusum_k=fc.cusum_k,
-                cusum_h=fc.cusum_h, level_decay=fc.level_decay,
-                fail_floor=fc.fail_floor, min_exposure=fc.min_exposure,
-                det_max_lost_frac=fc.max_lost_frac,
-                confidence_floor=float(e0.confidence_floor), **est_h)
-            carry0 = LoopCarry(
-                bank=fc.pool.bank.stacked_state(), det=fc.detector.state,
-                row_map=jnp.asarray(fc.pool.row_of, jnp.int32),
-                read_row=jnp.asarray(fc.pool._read_row, jnp.int32),
-                active=jnp.asarray(fc._active),
-                seen=jnp.int32(fc._segments_seen),
-                req_type=jnp.zeros((R,), jnp.int32),
-                req_bytes=jnp.ones((R,), jnp.float32),
-                req_n=jnp.int32(0),
-                ring=self.ring._buf, ring_ptr=jnp.int32(self.ring.ptr),
-                ring_total=jnp.int32(self.ring.total))
-        else:
-            config = ClosedLoopConfig(
-                objective=self.objective, scorer=scorer, fleet=False,
-                confidence_floor=float(e0.confidence_floor), **est_h)
-            carry0 = LoopCarry(
-                bank=self.bank.stacked_state(), det=CusumState.zeros(m),
-                row_map=jnp.arange(m, dtype=jnp.int32),
-                read_row=jnp.arange(m, dtype=jnp.int32),
-                active=jnp.ones(m, bool), seen=jnp.int32(0),
-                req_type=jnp.zeros((R,), jnp.int32),
-                req_bytes=jnp.ones((R,), jnp.float32),
-                req_n=jnp.int32(0),
-                ring=self.ring._buf, ring_ptr=jnp.int32(self.ring.ptr),
-                ring_total=jnp.int32(self.ring.total))
-        xs = SegmentIn(
-            arr_time=jnp.asarray(arr_time), arr_type=jnp.asarray(arr_type),
-            arr_bytes=jnp.asarray(arr_bytes), dyn_idx=jnp.asarray(dyn_idx),
-            seg_valid=jnp.asarray(np.arange(S_cap) < segments))
+            scorer = None if self.scorer == "jnp" else make_scorer(self.scorer)
+            h = e0._hypers
+            est_h = dict(
+                lr=h["lr"], decay=h["decay"], step_damp=h["step_damp"],
+                solo_eps=h["solo_eps"], est_max_lost_frac=h["max_lost_frac"],
+                use_pallas=h["use_pallas"], interpret=h["interpret"])
+            frame0 = obs_metrics.zeros(m) if metrics else None
+            fc = self.fleet
+            if fc is not None:
+                fc._require_bound()
+                config = ClosedLoopConfig(
+                    objective=self.objective, scorer=scorer, fleet=True,
+                    warmup_segments=fc.warmup_segments, cusum_k=fc.cusum_k,
+                    cusum_h=fc.cusum_h, level_decay=fc.level_decay,
+                    fail_floor=fc.fail_floor, min_exposure=fc.min_exposure,
+                    det_max_lost_frac=fc.max_lost_frac,
+                    confidence_floor=float(e0.confidence_floor),
+                    metrics=metrics, **est_h)
+                carry0 = LoopCarry(
+                    bank=fc.pool.bank.stacked_state(), det=fc.detector.state,
+                    row_map=jnp.asarray(fc.pool.row_of, jnp.int32),
+                    read_row=jnp.asarray(fc.pool._read_row, jnp.int32),
+                    active=jnp.asarray(fc._active),
+                    seen=jnp.int32(fc._segments_seen),
+                    req_type=jnp.zeros((R,), jnp.int32),
+                    req_bytes=jnp.ones((R,), jnp.float32),
+                    req_n=jnp.int32(0),
+                    ring=self.ring._buf, ring_ptr=jnp.int32(self.ring.ptr),
+                    ring_total=jnp.int32(self.ring.total),
+                    metrics=frame0)
+            else:
+                config = ClosedLoopConfig(
+                    objective=self.objective, scorer=scorer, fleet=False,
+                    confidence_floor=float(e0.confidence_floor),
+                    metrics=metrics, **est_h)
+                carry0 = LoopCarry(
+                    bank=self.bank.stacked_state(), det=CusumState.zeros(m),
+                    row_map=jnp.arange(m, dtype=jnp.int32),
+                    read_row=jnp.arange(m, dtype=jnp.int32),
+                    active=jnp.ones(m, bool), seen=jnp.int32(0),
+                    req_type=jnp.zeros((R,), jnp.int32),
+                    req_bytes=jnp.ones((R,), jnp.float32),
+                    req_n=jnp.int32(0),
+                    ring=self.ring._buf, ring_ptr=jnp.int32(self.ring.ptr),
+                    ring_total=jnp.int32(self.ring.total),
+                    metrics=frame0)
+            xs = SegmentIn(
+                arr_time=jnp.asarray(arr_time), arr_type=jnp.asarray(arr_type),
+                arr_bytes=jnp.asarray(arr_bytes), dyn_idx=jnp.asarray(dyn_idx),
+                seg_valid=jnp.asarray(np.arange(S_cap) < segments))
 
-        final, ys = run_closed_loop(
-            cluster, dyn_stack, Lp_t, logb_priors, carry0, xs, config)
-        ys = jax.tree_util.tree_map(np.asarray, ys)
+        with obs_trace.span("closed_loop.dispatch", segments=segments, m=m,
+                            s_cap=S_cap):
+            final, ys = run_closed_loop(
+                cluster, dyn_stack, Lp_t, logb_priors, carry0, xs, config)
+            ys = jax.tree_util.tree_map(np.asarray, ys)
 
         # failures surface before any state is adopted, leaving the host
         # objects where they were (the failed run never happened)
@@ -811,46 +887,51 @@ class AdaptiveEngine:
                 f"eviction requeued more than one segment's worth of work "
                 f"({R} slots); run the host-alternating path")
 
-        results, n_obs = [], []
-        for k in range(segments):
-            nv = int(ys.n_valid[k])
-            t0 = t0s[k]
-            placement = ys.placement[k][:nv]
-            pt = ys.place_time[k][:nv].astype(np.float64)
-            ft = ys.finish_time[k][:nv].astype(np.float64)
-            pt = np.where(pt >= 0.0, pt + t0, pt)
-            ft = np.where(np.isfinite(ft), ft + t0, ft)
-            results.append(EngineResult(
-                placements=tuple(int(p) if p != QUEUED else None
-                                 for p in placement),
-                was_queued=tuple(bool(q) for q in ys.was_queued[k][:nv]),
-                place_times=tuple(float(t) for t in pt),
-                finish_times=tuple(float(t) for t in ft),
-                makespan=float(ys.makespan[k]) + t0,
-                max_observed_degradation=float(ys.max_deg[k]),
-                backend="jax"))
-            n_obs.append(int(ys.used[k]))
+        with obs_trace.span("closed_loop.epilogue", segments=segments):
+            results, n_obs = [], []
+            for k in range(segments):
+                nv = int(ys.n_valid[k])
+                t0 = t0s[k]
+                placement = ys.placement[k][:nv]
+                pt = ys.place_time[k][:nv].astype(np.float64)
+                ft = ys.finish_time[k][:nv].astype(np.float64)
+                pt = np.where(pt >= 0.0, pt + t0, pt)
+                ft = np.where(np.isfinite(ft), ft + t0, ft)
+                results.append(EngineResult(
+                    placements=tuple(int(p) if p != QUEUED else None
+                                     for p in placement),
+                    was_queued=tuple(bool(q) for q in ys.was_queued[k][:nv]),
+                    place_times=tuple(float(t) for t in pt),
+                    finish_times=tuple(float(t) for t in ft),
+                    makespan=float(ys.makespan[k]) + t0,
+                    max_observed_degradation=float(ys.max_deg[k]),
+                    backend="jax"))
+                n_obs.append(int(ys.used[k]))
 
-        if fc is not None:
-            outcomes = [
-                dict(segment=k, split_fired=ys.split_fired[k],
-                     split_stat=ys.split_stat[k],
-                     evict_fired=ys.evict_fired[k],
-                     evict_stat=ys.evict_stat[k],
-                     evict_route=ys.evict_route[k],
-                     active_after=ys.active_after[k])
-                for k in range(segments)]
-            per_seg = fc.adopt_device_outcome(
-                final.bank, final.det, np.asarray(final.row_map),
-                np.asarray(final.read_row), np.asarray(final.active),
-                outcomes)
-            health = [tuple(evs) for evs in per_seg]
-        else:
-            self.bank._stacked = final.bank
-            self.bank._dirty = True
-            health = [() for _ in range(segments)]
-        self.ring._buf = final.ring
-        self.ring.ptr = int(final.ring_ptr)
-        self.ring.total = int(final.ring_total)
+            if fc is not None:
+                outcomes = [
+                    dict(segment=k, split_fired=ys.split_fired[k],
+                         split_stat=ys.split_stat[k],
+                         evict_fired=ys.evict_fired[k],
+                         evict_stat=ys.evict_stat[k],
+                         evict_route=ys.evict_route[k],
+                         active_after=ys.active_after[k])
+                    for k in range(segments)]
+                per_seg = fc.adopt_device_outcome(
+                    final.bank, final.det, np.asarray(final.row_map),
+                    np.asarray(final.read_row), np.asarray(final.active),
+                    outcomes)
+                health = [tuple(evs) for evs in per_seg]
+            else:
+                self.bank._stacked = final.bank
+                self.bank._dirty = True
+                health = [() for _ in range(segments)]
+            self.ring._buf = final.ring
+            self.ring.ptr = int(final.ring_ptr)
+            self.ring.total = int(final.ring_total)
+            log = obs_trace.active_log()
+            if metrics and log is not None:
+                log.snapshot("closed_loop.metrics",
+                             obs_metrics.snapshot(final.metrics))
         return AdaptiveResult(tuple(results), tuple(n_obs), tuple(t0s),
-                              tuple(health))
+                              tuple(health), metrics=final.metrics)

@@ -64,6 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import metrics as obs_metrics
 from .binpack_jax import (
     PackedCluster,
     argmin_with_margin,
@@ -144,6 +145,9 @@ class EngineState(NamedTuple):
     obs_co: jax.Array  # f32[n, T] time-integrated co-resident type counts
     obs_lost: jax.Array  # f32[n] time spent past the physical TDP
     obs_logr: jax.Array  # f32[n] time-integrated log instantaneous rate
+    # in-carry metrics plane; None (an empty pytree) unless metrics=True, so
+    # the uninstrumented program is byte-identical to the pre-metrics jaxpr
+    metrics: "obs_metrics.MetricFrame | None" = None
 
 
 class EngineTrace(NamedTuple):
@@ -159,6 +163,7 @@ class EngineTrace(NamedTuple):
     obs_co: jax.Array  # f32[n, T] (zeros unless telemetry=True)
     obs_lost: jax.Array  # f32[n] (zeros unless telemetry=True)
     obs_logr: jax.Array  # f32[n] (zeros unless telemetry=True)
+    metrics: "obs_metrics.MetricFrame | None" = None  # None unless metrics=True
 
 
 def corun_rates(
@@ -199,6 +204,7 @@ def _trace_segment(
     scorer: Scorer | None = None,
     n_steps: int | None = None,
     telemetry: bool = False,
+    metrics: bool = False,
 ) -> EngineTrace:
     """Trace body of :func:`run_trace`, with a *traced* arrival count.
 
@@ -250,6 +256,7 @@ def _trace_segment(
         obs_co=jnp.zeros((n, cluster.T), jnp.float32),
         obs_lost=jnp.zeros((n,), jnp.float32),
         obs_logr=jnp.zeros((n,), jnp.float32),
+        metrics=obs_metrics.zeros(m) if metrics else None,
     )
 
     def score_fast(st, wtypes):
@@ -334,7 +341,7 @@ def _trace_segment(
         k = jnp.where(found, jnp.argmax(free), K)  # K == n: a free slot exists
         on_place = jnp.where(found, idx, n)  # n / K index -> scatter dropped
         on_fail = jnp.where(found, n, idx) if queue_on_fail else n
-        return st._replace(
+        st = st._replace(
             slot_type=st.slot_type.at[server, k].set(wtype),
             slot_rem=st.slot_rem.at[server, k].set(nbytes),
             slot_arr=st.slot_arr.at[server, k].set(idx),
@@ -343,6 +350,30 @@ def _trace_segment(
             placement=st.placement.at[on_place].set(server),
             place_time=st.place_time.at[on_place].set(t),
         )
+        if metrics:
+            placed = found.astype(jnp.int32)
+            mf = obs_metrics.count(st.metrics, "placements", placed)
+            if queue_on_fail:  # arrival-time commit: the §V queue decision
+                mf = obs_metrics.count(mf, "queued", 1 - placed)
+            else:  # drain-window commit
+                mf = obs_metrics.count(mf, "drain_placements", placed)
+            w = found.astype(jnp.float32)
+            mf = obs_metrics.observe(
+                mf, "waiting_time", t - arr_time[jnp.clip(idx, 0, n - 1)],
+                weight=w)
+            # Eqn-4 headroom of the committed server, post-commit: how much
+            # of the degradation budget this placement left on the table
+            d_pred = jnp.clip(st.col0[server] - diag[server], 0.0, 1.0)
+            present = st.counts[server] > 0
+            maxd_s = jnp.max(jnp.where(present, d_pred, -jnp.inf))
+            maxd_s = jnp.where(jnp.any(present), maxd_s, 0.0)
+            mf = obs_metrics.observe(
+                mf, "headroom", cluster.degradation_limit - maxd_s, weight=w)
+            mf = obs_metrics.add_server(
+                mf, "placements",
+                jax.nn.one_hot(jnp.where(found, server, m), m, dtype=jnp.float32))
+            st = st._replace(metrics=mf)
+        return st
 
     def advance(st, rates, dt):
         active = st.slot_type >= 0
@@ -405,6 +436,13 @@ def _trace_segment(
                       queue_on_fail=False)
         no_active = ~jnp.any(st.slot_type >= 0)
         dead = ~found & no_active & (st.ai >= n_valid) & jnp.any(st.queued)
+        if metrics:
+            mf = obs_metrics.count(st.metrics, "drain_steps", 1)
+            mf = obs_metrics.count(
+                mf, "drain_full_scans", (~found_w & (qlen > W)).astype(jnp.int32))
+            mf = obs_metrics.count(
+                mf, "deadlocks", (dead & ~st.deadlock).astype(jnp.int32))
+            st = st._replace(metrics=mf)
         return st._replace(draining=found, deadlock=st.deadlock | dead)
 
     def finish_branch(st, rates, tt):
@@ -420,6 +458,19 @@ def _trace_segment(
         idx = st.slot_arr[s_fin, k_fin]
         wtype = st.slot_type[s_fin, k_fin]
         st = apply_delta(st, s_fin, wtype, -1.0)
+        if metrics:
+            # observed slowdown = actual duration / solo duration on the
+            # server that ran it -- the serving-SLO quantity next to waiting
+            srate = dyn.solo[s_fin, jnp.clip(wtype, 0)]
+            solo_dur = arr_bytes[jnp.clip(idx, 0, n - 1)] / jnp.maximum(
+                srate, jnp.float32(1e-30))
+            actual = t_fin - st.place_time[idx]
+            mf = obs_metrics.count(st.metrics, "finishes", 1)
+            mf = obs_metrics.observe(
+                mf, "slowdown", actual / jnp.maximum(solo_dur, jnp.float32(1e-30)))
+            mf = obs_metrics.add_server(
+                mf, "finishes", jax.nn.one_hot(s_fin, m, dtype=jnp.float32))
+            st = st._replace(metrics=mf)
         return st._replace(
             now=t_fin,
             makespan=t_fin,
@@ -433,6 +484,8 @@ def _trace_segment(
         del tt
         t_arr = arr_time[st.ai]
         st = advance(st, rates, t_arr - st.now)._replace(now=t_arr)
+        if metrics:
+            st = st._replace(metrics=obs_metrics.count(st.metrics, "arrivals", 1))
         wtype, nbytes = arr_type[st.ai], arr_bytes[st.ai]
         servers, ok = greedy_pick(st, wtype[None])
         st = place_if(st, ok[0], st.ai, servers[0], wtype, nbytes, t_arr,
@@ -453,6 +506,19 @@ def _trace_segment(
         solo = jnp.take_along_axis(dyn.solo, jnp.clip(st.slot_type, 0), axis=1)
         deg = jnp.where(active, 1.0 - rates / solo, -jnp.inf)
         st = st._replace(max_deg=jnp.maximum(st.max_deg, jnp.max(deg, initial=-jnp.inf)))
+        if metrics:
+            qdepth = jnp.sum(st.queued, dtype=jnp.float32)
+            mf = obs_metrics.count(st.metrics, "events", 1)
+            mf = obs_metrics.observe(mf, "queue_depth", qdepth)
+            mf = obs_metrics.gauge_max(mf, "queue_peak", qdepth)
+            # utilization-floor violations: events where a slot's *observed*
+            # degradation exceeded the paper's limit, per server
+            mf = obs_metrics.add_server(
+                mf, "floor_violations",
+                jnp.any(deg > cluster.degradation_limit, axis=1).astype(jnp.float32))
+            mf = obs_metrics.add_server(
+                mf, "busy_events", jnp.any(active, axis=1).astype(jnp.float32))
+            st = st._replace(metrics=mf)
 
         tt = jnp.where(active, st.slot_rem / rates, jnp.inf)
         t_fin = st.now + jnp.min(tt)
@@ -472,10 +538,11 @@ def _trace_segment(
     st, _ = jax.lax.while_loop(cond, body, (st0, jnp.int32(0)))
     return EngineTrace(st.placement, st.was_queued, st.place_time, st.finish_time,
                        st.makespan, st.max_deg, st.deadlock, st.obs_co, st.obs_lost,
-                       st.obs_logr)
+                       st.obs_logr, st.metrics)
 
 
-@partial(jax.jit, static_argnames=("objective", "scorer", "n_steps", "telemetry"))
+@partial(jax.jit,
+         static_argnames=("objective", "scorer", "n_steps", "telemetry", "metrics"))
 def run_trace(
     cluster: PackedCluster,
     dyn: PackedDynamics,
@@ -487,6 +554,7 @@ def run_trace(
     scorer: Scorer | None = None,
     n_steps: int | None = None,
     telemetry: bool = False,
+    metrics: bool = False,
 ) -> EngineTrace:
     """Run one arrival trace to completion entirely on device.
 
@@ -513,11 +581,18 @@ def run_trace(
     micro-events, so partial co-residency overlaps are weighted exactly by
     their duration. Off by default: the accumulation adds an O(m K T) scatter
     per time-advancing event, and the static flag compiles it out entirely.
+
+    ``metrics=True`` threads an ``obs.MetricFrame`` through the event loop
+    (queue depth per event, waiting time / Eqn-4 headroom at commit, drain
+    occupancy, observed slowdown at finish, per-server floor violations) and
+    returns it on ``EngineTrace.metrics``. Purely additive to the carry:
+    decisions are unchanged, and with the flag off the slot is ``None`` --
+    an empty pytree -- so the compiled program is byte-identical.
     """
     return _trace_segment(
         cluster, dyn, arr_time, arr_type, arr_bytes,
         jnp.int32(arr_time.shape[0]), objective=objective, scorer=scorer,
-        n_steps=n_steps, telemetry=telemetry)
+        n_steps=n_steps, telemetry=telemetry, metrics=metrics)
 
 
 # --- array-native local search (core/refine.py's device backend) ----------------

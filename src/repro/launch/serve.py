@@ -30,7 +30,7 @@ from ..models.params import materialize
 from .mesh import make_host_mesh
 
 
-def admission_check(arch: str, n_streams: int) -> list[int | None]:
+def admission_check(arch: str, n_streams: int, *, metrics: bool = False):
     """Admit `n_streams` request streams onto the serving hosts through the
     unified ConsolidationEngine (the paper's online operating model, §V).
 
@@ -39,16 +39,25 @@ def admission_check(arch: str, n_streams: int) -> list[int | None]:
     engine runs the arrive -> score -> place-or-queue loop; ``None`` means
     the stream was not admitted on arrival and had to queue for capacity
     (criterion 1).
+
+    ``metrics=True`` threads the ``repro.obs`` MetricFrame through the
+    admission run and returns ``(placements, frame)`` -- the frame's
+    waiting-time and slowdown histograms are the serving-SLO substrate the
+    ROADMAP's continuous front-end reports p50/p99 from (``None`` frame on
+    deadlock: the run never completed).
     """
     engine = ConsolidationEngine([TPU_V5E_HOST, TPU_V5E_HOST])
     stream = Workload(fs=64 * MB, rs=256 * KB, name=f"serve:{arch}")
     try:
-        result = engine.run([(0.0, stream)] * n_streams)
+        result = engine.run([(0.0, stream)] * n_streams, metrics=metrics)
     except RuntimeError:
         # deadlock (stream fits no empty host): admit nothing rather than
         # crash the serving driver at startup
-        return [None] * n_streams
-    return [None if q else p for p, q in zip(result.placements, result.was_queued)]
+        placements = [None] * n_streams
+        return (placements, None) if metrics else placements
+    placements = [None if q else p
+                  for p, q in zip(result.placements, result.was_queued)]
+    return (placements, result.metrics) if metrics else placements
 
 
 def main(argv=None):
@@ -61,8 +70,16 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    placements = admission_check(args.arch, 1)
-    print(f"consolidation admission: stream -> pod {placements[0]}")
+    placements, frame = admission_check(args.arch, args.requests, metrics=True)
+    print(f"consolidation admission: {args.requests} stream(s) -> pods "
+          f"{placements}")
+    if frame is not None:
+        # the paper's utilization-floor criterion as a live serving SLO:
+        # waiting time (s) and slowdown (x solo) percentiles of admission
+        from ..obs.report import percentile_table
+
+        print("admission SLO percentiles:")
+        print(percentile_table(frame, ("waiting_time", "slowdown")))
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)

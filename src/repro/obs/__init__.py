@@ -1,0 +1,70 @@
+"""repro.obs: the observability plane (DESIGN.md §14).
+
+Three layers, hot to cold:
+
+``metrics``   fixed-shape metric state (:class:`MetricFrame`) that rides
+              *inside* the jitted loops -- counters, high-water gauges,
+              log-spaced streaming histograms, a per-server block -- with
+              pure ``count/observe/merge`` ops and host-side percentile
+              extraction. Enabled per run by a static ``metrics=`` flag on
+              the engines; off means the carried slot is ``None`` (an empty
+              pytree) and the compiled program is byte-identical.
+``trace``     host-side structured spans around the phases that *surround*
+              the device programs (pack/dispatch/epilogue), emitted both as
+              ``jax.profiler`` annotations (so ``--profile`` traces are
+              navigable) and as an optional JSONL span+snapshot log stamped
+              with the git commit.
+``report``    renders a run report (counter/gauge/percentile tables,
+              per-server utilization-floor violations, fleet health-event
+              timeline) from an ``EngineResult``/``AdaptiveResult``, and
+              flattens frames into ``BENCH_*.json`` records.
+
+``python -m repro.obs --selfcheck`` exercises the histogram math and the
+report path end to end; CI runs it in the static-analysis job.
+"""
+from .metrics import (
+    COUNTERS,
+    GAUGES,
+    HIST_BINS,
+    HISTOGRAMS,
+    PER_SERVER,
+    HistSpec,
+    MetricFrame,
+    add_server,
+    count,
+    counter_value,
+    gauge_max,
+    gauge_value,
+    hist_counts,
+    merge,
+    observe,
+    percentiles,
+    snapshot,
+    zeros,
+)
+from .trace import SpanLog, disable_tracing, enable_tracing, span
+
+__all__ = [
+    "COUNTERS",
+    "GAUGES",
+    "HIST_BINS",
+    "HISTOGRAMS",
+    "PER_SERVER",
+    "HistSpec",
+    "MetricFrame",
+    "SpanLog",
+    "add_server",
+    "count",
+    "counter_value",
+    "disable_tracing",
+    "enable_tracing",
+    "gauge_max",
+    "gauge_value",
+    "hist_counts",
+    "merge",
+    "observe",
+    "percentiles",
+    "snapshot",
+    "span",
+    "zeros",
+]

@@ -1,0 +1,151 @@
+"""CLI: run reports and the metrics-plane selfcheck.
+
+  python -m repro.obs              render a run report from a small canned
+                                   adaptive run (2 servers, metrics on)
+  python -m repro.obs --json       same, as a JSON snapshot
+  python -m repro.obs --selfcheck  verify the histogram/percentile math, the
+                                   chunk-invariant merge, counter exactness
+                                   against a host-visible engine result, and
+                                   the report render; exit 1 on any failure
+                                   (CI runs this in the static-analysis job)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+from . import metrics as M
+from . import report
+
+
+def _log_tol(spec: M.HistSpec) -> float:
+    """Percentile agreement tolerance in log space: 1.5 bin widths (one bin
+    of quantization plus interpolation slack at bin boundaries)."""
+    return 1.5 * np.log(spec.bin_ratio())
+
+
+def _check_percentiles(failures: "list[str]") -> None:
+    rng = np.random.default_rng(0)
+    for spec in M.HISTOGRAMS:
+        # log-uniform samples strictly inside the spec's range
+        lo, hi = spec.lo * spec.bin_ratio(), spec.hi / spec.bin_ratio()
+        vals = np.exp(rng.uniform(np.log(lo), np.log(hi), size=4096))
+        frame = M.observe(M.zeros(1), spec.name, vals.astype(np.float32))
+        est = M.percentiles(frame, spec.name, (50.0, 95.0, 99.0))
+        ref = np.percentile(vals, [50.0, 95.0, 99.0])
+        err = np.abs(np.log(est) - np.log(ref))
+        if not (err <= _log_tol(spec)).all():
+            failures.append(
+                f"percentiles[{spec.name}]: est {est} vs numpy {ref} "
+                f"(log error {err}, tol {_log_tol(spec):.4f})")
+
+
+def _check_merge(failures: "list[str]") -> None:
+    rng = np.random.default_rng(1)
+    spec = M.HISTOGRAMS[0]
+    vals = np.exp(rng.uniform(np.log(spec.lo), np.log(spec.hi),
+                              size=999)).astype(np.float32)
+    whole = M.observe(M.zeros(2), spec.name, vals)
+    whole = M.count(whole, "events", 999)
+    parts = M.zeros(2)
+    for chunk in np.array_split(vals, 7):
+        part = M.observe(M.zeros(2), spec.name, chunk)
+        part = M.count(part, "events", len(chunk))
+        parts = M.merge(parts, part)
+    if not (np.array_equal(np.asarray(whole.hist), np.asarray(parts.hist))
+            and np.array_equal(np.asarray(whole.counters),
+                               np.asarray(parts.counters))):
+        failures.append("merge: split-and-merge frame != single-pass frame "
+                        "(chunk invariance broken)")
+
+
+def _canned_run():
+    from ..core.engine import ConsolidationEngine
+    from ..core.server import M1, M2
+    from ..core.workload import FS_GRID, RS_GRID, Workload, snap_to_grid
+
+    arrivals = []
+    for i in range(12):
+        w = snap_to_grid(Workload(
+            fs=FS_GRID[(5 * i) % len(FS_GRID)], rs=RS_GRID[i % len(RS_GRID)],
+            data_total=48e6))
+        arrivals.append((0.5 * i, w))
+    engine = ConsolidationEngine([M1, M2], backend="jax")
+    return engine.run(arrivals, metrics=True)
+
+
+def _check_engine_counters(failures: "list[str]") -> None:
+    res = _canned_run()
+    frame = res.metrics
+    oracle = {
+        "arrivals": len(res.placements),
+        "placements": sum(1 for p in res.placements if p is not None),
+        "queued": sum(1 for q in res.was_queued if q),
+        "finishes": sum(1 for t in res.finish_times if np.isfinite(t)),
+        "deadlocks": 0,
+    }
+    for name, want in oracle.items():
+        got = M.counter_value(frame, name)
+        if got != want:
+            failures.append(f"counter[{name}]: frame says {got}, "
+                            f"host result says {want}")
+    per_server = M.server_values(frame, "placements")
+    for s in range(2):
+        want = sum(1 for p in res.placements if p == s)
+        if int(per_server[s]) != want:
+            failures.append(f"per_server placements[{s}]: frame says "
+                            f"{int(per_server[s])}, host result says {want}")
+    # every placement contributes exactly one waiting-time/headroom sample
+    for hist in ("waiting_time", "headroom"):
+        total = int(M.hist_counts(frame, hist).sum())
+        if total != oracle["placements"]:
+            failures.append(f"hist[{hist}]: {total} samples != "
+                            f"{oracle['placements']} placements")
+    try:
+        text = report.render_report(res, title="selfcheck")
+    except Exception as e:  # pragma: no cover - render must not throw
+        failures.append(f"render_report raised {e!r}")
+        return
+    for needle in ("counters:", "percentiles:", "per-server:", "waiting_time"):
+        if needle not in text:
+            failures.append(f"render_report output missing {needle!r}")
+
+
+def selfcheck() -> int:
+    failures: list[str] = []
+    for name, check in (("percentiles-vs-numpy", _check_percentiles),
+                        ("merge-chunk-invariance", _check_merge),
+                        ("engine-counter-exactness", _check_engine_counters)):
+        before = len(failures)
+        check(failures)
+        status = "ok" if len(failures) == before else "FAIL"
+        print(f"obs selfcheck: {name:<28} {status}")
+    for f in failures:
+        print(f"  FAIL: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main(argv: "list[str] | None" = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="metrics-plane run reports and selfcheck")
+    parser.add_argument("--selfcheck", action="store_true",
+                        help="verify histogram/merge/counter invariants")
+    parser.add_argument("--json", action="store_true",
+                        help="print the metric snapshot as JSON")
+    args = parser.parse_args(argv)
+    if args.selfcheck:
+        return selfcheck()
+    res = _canned_run()
+    if args.json:
+        print(json.dumps(M.snapshot(res.metrics), indent=2))
+    else:
+        print(report.render_report(res, title="canned consolidation run"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

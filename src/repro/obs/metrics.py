@@ -1,0 +1,277 @@
+"""Device-resident metrics plane: counters, gauges, histograms in the carry.
+
+The paper's consolidation criterion is an observability claim -- per-server
+throughput "never falls below a predefined utilization level" -- but the
+device-resident engine keeps the host out of the hot path, so nothing
+host-side can watch the loop run. The resolution: a :class:`MetricFrame` is
+a small fixed-shape pytree of metric state (integer counters, high-water
+gauges, log-spaced histograms, and a per-server block) threaded *through*
+the jitted programs -- inside ``EngineState`` and ``LoopCarry`` behind a
+static ``metrics=`` flag -- and read out exactly once, at the end of a run.
+
+Slots are named at trace time and indexed at run time: the registry tuples
+below map metric names to static array indices, so every record op is a
+fixed-index add/max/scatter -- no strings, no data-dependent shapes, no
+host anywhere near the loop. Adding a metric means appending a name (or a
+:class:`HistSpec`) to its registry tuple: the frame shapes change once, at
+import, every jitted consumer recompiles exactly once on its next call, and
+nothing keys on metric names per call -- a warm loop never re-traces
+because of the plane (``analysis/retrace.py`` pins this).
+
+Histograms are fixed-bin and log-spaced (``HIST_BINS`` bins between a
+spec's ``lo`` and ``hi``): streaming percentile state whose merge is plain
+addition. :func:`percentiles` extracts p50/p95/p99 deterministically by
+geometric interpolation inside the covering bin -- within one bin ratio
+``(hi/lo)**(1/HIST_BINS)`` of ``numpy.percentile`` on the raw samples for
+in-range data (tests/test_obs.py and ``python -m repro.obs --selfcheck``
+verify this). Values at or below ``lo`` clamp into bin 0 (underflow);
+values at or above ``hi`` clamp into the last bin (overflow).
+
+Merge semantics make frames **chunk-invariant**: counters, histograms, and
+the per-server block add; gauges are high-water marks and take the
+elementwise max. All weights the engines record are integer-valued and far
+below 2**24, so f32 accumulation is associative and bit-exact -- splitting
+a run into segments and merging the per-segment frames reproduces the
+single-run frame bitwise, the property the closed loop's scan relies on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# Bins per histogram. Shared so the hist block is one dense [H, B] array.
+HIST_BINS = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class HistSpec:
+    """A named log-spaced histogram: HIST_BINS bins covering [lo, hi)."""
+
+    name: str
+    lo: float
+    hi: float
+    desc: str = ""
+
+    def edges(self) -> np.ndarray:
+        """Bin edges, f64[HIST_BINS + 1], geometric."""
+        return np.geomspace(self.lo, self.hi, HIST_BINS + 1)
+
+    def bin_ratio(self) -> float:
+        """Multiplicative width of one bin = the percentile resolution."""
+        return (self.hi / self.lo) ** (1.0 / HIST_BINS)
+
+
+# ---------------------------------------------------------------------------
+# Slot registries. Order is the array index; append to add a metric.
+# ---------------------------------------------------------------------------
+
+COUNTERS: "tuple[str, ...]" = (
+    "events",            # engine micro-events (one per while_loop iteration)
+    "arrivals",          # arrival events consumed
+    "placements",        # committed placements (arrival-time + drain)
+    "queued",            # arrivals sent to the §V wait queue
+    "drain_steps",       # drain events scored
+    "drain_placements",  # placements committed from the drain window
+    "drain_full_scans",  # drains that fell past the W-candidate window
+    "finishes",          # workload completions
+    "deadlocks",         # deadlock-flag transitions (0 -> 1)
+    "segments",          # closed-loop segments observed
+    "splits",            # fleet pool splits fired
+    "evictions",         # fleet evictions fired
+    "requeues",          # in-flight arrivals requeued after evictions
+    "ring_rows",         # telemetry rows pushed into the observation ring
+    "d_cols_refreshed",  # D-matrix type-columns re-blended incrementally
+)
+
+# High-water marks; merge takes the elementwise max.
+GAUGES: "tuple[str, ...]" = (
+    "queue_peak",           # max §V queue depth over all events
+    "ring_occupancy_peak",  # max rows resident in the observation ring
+    "evicted_peak",         # max servers simultaneously marked dead
+    "requeue_peak",         # max arrivals requeued out of one segment
+)
+
+HISTOGRAMS: "tuple[HistSpec, ...]" = (
+    HistSpec("waiting_time", 1e-4, 1e4, "arrival -> placement wall time (s)"),
+    HistSpec("slowdown", 1.0, 64.0, "observed duration / solo duration"),
+    HistSpec("queue_depth", 0.5, 2048.0, "queued arrivals, sampled per event"),
+    HistSpec("headroom", 1e-4, 1.0, "Eqn-4 margin at commit (limit - max deg)"),
+    HistSpec("cusum_level", 1e-3, 64.0, "per-server CUSUM stat per segment"),
+)
+
+PER_SERVER: "tuple[str, ...]" = (
+    "placements",        # commits routed to this server
+    "finishes",          # completions on this server
+    "floor_violations",  # events where a slot's degradation exceeded the limit
+    "busy_events",       # events with at least one active slot
+)
+
+_C_IDX = {name: i for i, name in enumerate(COUNTERS)}
+_G_IDX = {name: i for i, name in enumerate(GAUGES)}
+_H_IDX = {spec.name: i for i, spec in enumerate(HISTOGRAMS)}
+_S_IDX = {name: i for i, name in enumerate(PER_SERVER)}
+
+
+class MetricFrame(NamedTuple):
+    """Fixed-shape metric state; a pytree of four dense arrays.
+
+    counters    i32[len(COUNTERS)]              merge: add (exact)
+    gauges      f32[len(GAUGES)]                merge: elementwise max
+    hist        f32[len(HISTOGRAMS), HIST_BINS] merge: add (bit-exact for
+                                                integer weights < 2**24)
+    per_server  f32[m, len(PER_SERVER)]         merge: add
+    """
+
+    counters: jnp.ndarray
+    gauges: jnp.ndarray
+    hist: jnp.ndarray
+    per_server: jnp.ndarray
+
+    @property
+    def m(self) -> int:
+        return int(self.per_server.shape[0])
+
+
+def zeros(m: int) -> MetricFrame:
+    """An empty frame for an m-server fleet."""
+    return MetricFrame(
+        counters=jnp.zeros((len(COUNTERS),), jnp.int32),
+        gauges=jnp.zeros((len(GAUGES),), jnp.float32),
+        hist=jnp.zeros((len(HISTOGRAMS), HIST_BINS), jnp.float32),
+        per_server=jnp.zeros((m, len(PER_SERVER)), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pure record ops -- safe inside jit / while_loop / scan bodies.
+# ---------------------------------------------------------------------------
+
+def count(frame: MetricFrame, name: str, inc=1) -> MetricFrame:
+    """counters[name] += inc (scalar int or traced i32)."""
+    return frame._replace(
+        counters=frame.counters.at[_C_IDX[name]].add(
+            jnp.asarray(inc, jnp.int32)))
+
+
+def gauge_max(frame: MetricFrame, name: str, value) -> MetricFrame:
+    """gauges[name] = max(gauges[name], value) -- a high-water mark."""
+    return frame._replace(
+        gauges=frame.gauges.at[_G_IDX[name]].max(
+            jnp.asarray(value, jnp.float32)))
+
+
+def _bin_of(spec: HistSpec, v: jnp.ndarray) -> jnp.ndarray:
+    """Log-spaced bin index of each value; clamps under/overflow."""
+    log_lo = math.log(spec.lo)
+    scale = HIST_BINS / (math.log(spec.hi) - log_lo)
+    x = (jnp.log(jnp.maximum(v, jnp.float32(1e-37))) - jnp.float32(log_lo))
+    x = jnp.clip(x * jnp.float32(scale), 0.0, HIST_BINS - 1)
+    return jnp.floor(x).astype(jnp.int32)
+
+
+def observe(frame: MetricFrame, name: str, values, weight=1.0) -> MetricFrame:
+    """Scatter ``weight`` into hist[name] at each value's bin.
+
+    ``weight`` broadcasts against ``values``; a weight of 0 masks a row out
+    exactly (the scatter adds 0). Integer-valued weights keep accumulation
+    order-independent, hence chunk-invariant.
+    """
+    h = _H_IDX[name]
+    v = jnp.atleast_1d(jnp.asarray(values, jnp.float32))
+    w = jnp.broadcast_to(jnp.asarray(weight, jnp.float32), v.shape)
+    return frame._replace(
+        hist=frame.hist.at[h, _bin_of(HISTOGRAMS[h], v)].add(w))
+
+
+def add_server(frame: MetricFrame, name: str, values) -> MetricFrame:
+    """per_server[:, name] += values (f32[m])."""
+    return frame._replace(
+        per_server=frame.per_server.at[:, _S_IDX[name]].add(
+            jnp.asarray(values, jnp.float32)))
+
+
+def merge(a: MetricFrame, b: MetricFrame) -> MetricFrame:
+    """Combine two frames; associative and commutative."""
+    return MetricFrame(
+        counters=a.counters + b.counters,
+        gauges=jnp.maximum(a.gauges, b.gauges),
+        hist=a.hist + b.hist,
+        per_server=a.per_server + b.per_server,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-side readout.
+# ---------------------------------------------------------------------------
+
+def counter_value(frame: MetricFrame, name: str) -> int:
+    return int(np.asarray(frame.counters)[_C_IDX[name]])
+
+
+def gauge_value(frame: MetricFrame, name: str) -> float:
+    return float(np.asarray(frame.gauges)[_G_IDX[name]])
+
+
+def hist_counts(frame: MetricFrame, name: str) -> np.ndarray:
+    """Raw bin weights, f64[HIST_BINS]."""
+    return np.asarray(frame.hist, dtype=np.float64)[_H_IDX[name]]
+
+
+def server_values(frame: MetricFrame, name: str) -> np.ndarray:
+    """Per-server column, f64[m]."""
+    return np.asarray(frame.per_server, dtype=np.float64)[:, _S_IDX[name]]
+
+
+def percentiles(frame: MetricFrame, name: str,
+                qs=(50.0, 95.0, 99.0)) -> np.ndarray:
+    """Percentile estimates from the binned weights.
+
+    Walks the bin CDF to the covering bin, then interpolates geometrically
+    inside it -- deterministic, and within one bin ratio of the true sample
+    percentile for in-range data. NaN where the histogram is empty.
+    """
+    spec = HISTOGRAMS[_H_IDX[name]]
+    h = hist_counts(frame, name)
+    total = h.sum()
+    if total <= 0:
+        return np.full(len(qs), np.nan)
+    edges = spec.edges()
+    cdf = np.cumsum(h)
+    out = np.empty(len(qs))
+    for k, q in enumerate(qs):
+        target = (q / 100.0) * total
+        b = min(int(np.searchsorted(cdf, target, side="left")), HIST_BINS - 1)
+        inbin = h[b]
+        below = cdf[b] - inbin
+        frac = (target - below) / inbin if inbin > 0 else 0.0
+        frac = min(max(frac, 0.0), 1.0)
+        out[k] = edges[b] * (edges[b + 1] / edges[b]) ** frac
+    return out
+
+
+def snapshot(frame: MetricFrame) -> dict:
+    """Flatten a frame into a JSON-serializable dict (for BENCH records,
+    span logs, and the report CLI)."""
+    counters = np.asarray(frame.counters)
+    gauges = np.asarray(frame.gauges)
+    hists = {}
+    for spec in HISTOGRAMS:
+        h = hist_counts(frame, spec.name)
+        total = float(h.sum())
+        entry = {"count": total}
+        if total > 0:
+            p50, p95, p99 = percentiles(frame, spec.name)
+            entry.update(p50=float(p50), p95=float(p95), p99=float(p99))
+        hists[spec.name] = entry
+    return {
+        "counters": {n: int(counters[i]) for i, n in enumerate(COUNTERS)},
+        "gauges": {n: float(gauges[i]) for i, n in enumerate(GAUGES)},
+        "histograms": hists,
+        "per_server": {
+            n: [float(x) for x in server_values(frame, n)]
+            for n in PER_SERVER},
+    }

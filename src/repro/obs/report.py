@@ -1,0 +1,133 @@
+"""Run reports over the metrics plane: tables, timelines, BENCH records.
+
+Renders an ``EngineResult`` / ``AdaptiveResult`` (run with ``metrics=True``)
+into the fixed-width text report ``python -m repro.obs`` prints: counter and
+gauge tables, p50/p95/p99 percentile tables for every histogram, per-server
+placement/finish/floor-violation columns, and -- for adaptive runs with a
+fleet controller -- the health-event timeline from ``result.health``.
+:func:`snapshot_records` flattens a frame into the ``(name, value, unit)``
+rows the benchmark harness stamps into ``BENCH_*.json``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import metrics as M
+
+
+def _fmt(v: float) -> str:
+    if not np.isfinite(v):
+        return "nan"
+    if v == 0:
+        return "0"
+    if abs(v) >= 1e5 or abs(v) < 1e-3:
+        return f"{v:.3g}"
+    return f"{v:.4g}"
+
+
+def counter_table(frame: M.MetricFrame) -> str:
+    rows = [(n, M.counter_value(frame, n)) for n in M.COUNTERS]
+    width = max(len(n) for n, _ in rows)
+    return "\n".join(f"  {n:<{width}}  {v:>10d}" for n, v in rows)
+
+
+def gauge_table(frame: M.MetricFrame) -> str:
+    rows = [(n, M.gauge_value(frame, n)) for n in M.GAUGES]
+    width = max(len(n) for n, _ in rows)
+    return "\n".join(f"  {n:<{width}}  {_fmt(v):>10}" for n, v in rows)
+
+
+def percentile_table(frame: M.MetricFrame,
+                     names: "tuple[str, ...] | None" = None) -> str:
+    """count / p50 / p95 / p99 per histogram (all of them by default)."""
+    names = tuple(names) if names is not None else tuple(
+        s.name for s in M.HISTOGRAMS)
+    width = max(len(n) for n in names)
+    lines = [f"  {'':<{width}}  {'count':>9} {'p50':>10} {'p95':>10} {'p99':>10}"]
+    for n in names:
+        total = float(M.hist_counts(frame, n).sum())
+        p50, p95, p99 = M.percentiles(frame, n)
+        lines.append(
+            f"  {n:<{width}}  {total:>9.0f} {_fmt(p50):>10} {_fmt(p95):>10} "
+            f"{_fmt(p99):>10}")
+    return "\n".join(lines)
+
+
+def per_server_table(frame: M.MetricFrame) -> str:
+    """One row per server; '!' flags servers that violated the paper's
+    utilization floor (observed slot degradation above the limit)."""
+    cols = {n: M.server_values(frame, n) for n in M.PER_SERVER}
+    lines = ["  server  " + " ".join(f"{n:>16}" for n in M.PER_SERVER)]
+    for s in range(frame.m):
+        flag = "!" if cols["floor_violations"][s] > 0 else " "
+        lines.append(f"  {s:>5}{flag}  " + " ".join(
+            f"{cols[n][s]:>16.0f}" for n in M.PER_SERVER))
+    return "\n".join(lines)
+
+
+def health_timeline(health) -> str:
+    """Flatten AdaptiveResult.health into one line per fired event."""
+    lines = []
+    for k, events in enumerate(health):
+        for ev in events:
+            lines.append(
+                f"  segment {k:>3}  {ev.kind:<6} server {ev.server:>4}  "
+                f"stat {_fmt(float(ev.stat)):>8}  {ev.detail}")
+    return "\n".join(lines) if lines else "  (no health events)"
+
+
+def render_report(result=None, frame: "M.MetricFrame | None" = None,
+                  title: str = "run report") -> str:
+    """The full text report. ``result`` may be an ``EngineResult`` or an
+    ``AdaptiveResult`` (its ``metrics`` supplies the frame unless ``frame``
+    is given explicitly); a bare frame renders without the run header."""
+    if frame is None:
+        frame = getattr(result, "metrics", None)
+    if frame is None:
+        raise ValueError(
+            "no MetricFrame to report: run the engine with metrics=True")
+    lines = [f"== {title} ==", ""]
+    if result is not None and hasattr(result, "segments"):  # AdaptiveResult
+        durs = result.durations
+        lines += [
+            f"segments: {len(result.segments)}   "
+            f"observations: {result.total_obs}   "
+            f"total segment time: {_fmt(float(np.sum(durs)))} s", ""]
+    elif result is not None and hasattr(result, "makespan"):  # EngineResult
+        lines += [
+            f"arrivals: {len(result.placements)}   backend: {result.backend}  "
+            f" makespan: {_fmt(result.makespan)} s   max degradation: "
+            f"{_fmt(result.max_observed_degradation)}", ""]
+    lines += ["counters:", counter_table(frame), ""]
+    lines += ["gauges (high-water):", gauge_table(frame), ""]
+    lines += ["percentiles:", percentile_table(frame), ""]
+    lines += ["per-server:", per_server_table(frame)]
+    health = getattr(result, "health", None)
+    if health:
+        lines += ["", "health-event timeline:", health_timeline(health)]
+    return "\n".join(lines)
+
+
+def snapshot_records(frame: M.MetricFrame, prefix: str = "obs"):
+    """Flatten a frame into (name, value, unit) rows for BENCH_*.json.
+
+    Counters all land; histograms contribute count/p50/p99 when non-empty;
+    gauges land when set. Keeps benchmark records scalar and greppable.
+    """
+    records = []
+    for n in M.COUNTERS:
+        records.append((f"{prefix}/counter_{n}", float(M.counter_value(frame, n)),
+                        "count"))
+    for n in M.GAUGES:
+        v = M.gauge_value(frame, n)
+        if v > 0:
+            records.append((f"{prefix}/gauge_{n}", float(v), "peak"))
+    for spec in M.HISTOGRAMS:
+        total = float(M.hist_counts(frame, spec.name).sum())
+        if total <= 0:
+            continue
+        p50, _, p99 = M.percentiles(frame, spec.name)
+        records.append((f"{prefix}/{spec.name}_count", total, "count"))
+        records.append((f"{prefix}/{spec.name}_p50", float(p50), spec.desc or "value"))
+        records.append((f"{prefix}/{spec.name}_p99", float(p99), spec.desc or "value"))
+    return records

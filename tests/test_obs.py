@@ -1,0 +1,211 @@
+"""Metrics plane: histogram math, chunk-invariant merge, counter exactness.
+
+The contract the ``repro.obs`` frame makes (DESIGN.md §14): percentiles
+extracted from the log-binned histograms agree with ``numpy.percentile`` to
+within quantization (1.5 bin widths in log space); per-segment frames merge
+bit-exactly to the single-pass frame (integer-valued f32 weights keep the
+accumulation associative); and the counters are *exact* -- they bit-match
+host-visible oracle counts from the same run, on both the host-alternating
+path and the fused device loop.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from numpy.random import default_rng
+
+from _hyp import given, settings, st
+from repro.configs.base import MeshConfig
+from repro.core import M1, M2, AdaptiveEngine, ConsolidationEngine, Workload, snap_to_grid
+from repro.core.workload import FS_GRID, RS_GRID
+from repro.fleet import FleetController
+from repro.obs import metrics as M
+from repro.obs.report import render_report
+from repro.telemetry import gradual_decay
+
+SEG_GAP = 10.0
+
+
+def _segment(seed: int, n: int, gap: float = 2e-5):
+    rng = default_rng(seed)
+    out, t = [], 0.0
+    for _ in range(n):
+        fs = float(rng.choice(FS_GRID[10:14]))
+        w = snap_to_grid(Workload(fs=fs, rs=float(rng.choice(RS_GRID[5:8])),
+                                  data_total=fs * 6))
+        t += float(rng.exponential(gap))
+        out.append((t, w))
+    return out
+
+
+def _replay(seg, segments):
+    return [(t + k * SEG_GAP, w) for k in range(segments) for t, w in seg]
+
+
+# -- histogram math ------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", M.HISTOGRAMS, ids=lambda s: s.name)
+def test_percentiles_match_numpy(spec):
+    rng = default_rng(0)
+    lo, hi = spec.lo * spec.bin_ratio(), spec.hi / spec.bin_ratio()
+    vals = np.exp(rng.uniform(np.log(lo), np.log(hi), size=4096))
+    frame = M.observe(M.zeros(1), spec.name, vals.astype(np.float32))
+    est = np.asarray(M.percentiles(frame, spec.name, (50.0, 95.0, 99.0)))
+    ref = np.percentile(vals, [50.0, 95.0, 99.0])
+    tol = 1.5 * np.log(spec.bin_ratio())
+    np.testing.assert_array_less(np.abs(np.log(est) - np.log(ref)), tol)
+
+
+def test_observe_clips_out_of_range():
+    spec = M.HISTOGRAMS[0]
+    vals = np.array([0.0, spec.lo / 10, spec.hi * 10, np.inf], np.float32)
+    frame = M.observe(M.zeros(1), spec.name, vals)
+    counts = M.hist_counts(frame, spec.name)
+    assert counts.sum() == len(vals)
+    assert counts[0] == 2 and counts[-1] == 2  # under -> first, over -> last
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000), st.integers(1, 12),
+       st.integers(1, 400))
+def test_merge_chunk_invariance(seed, chunks, n):
+    """Any chunking of an observation stream merges to the bit-identical
+    frame: counters add, gauges max, histogram bins add -- all associative
+    for integer-valued f32 accumulation below 2^24."""
+    rng = default_rng(seed)
+    spec = M.HISTOGRAMS[seed % len(M.HISTOGRAMS)]
+    vals = np.exp(rng.uniform(np.log(spec.lo / 10), np.log(spec.hi * 10),
+                              size=n)).astype(np.float32)
+    whole = M.observe(M.zeros(2), spec.name, vals)
+    whole = M.count(whole, "events", n)
+    whole = M.gauge_max(whole, "queue_peak", float(n))
+    parts = M.zeros(2)
+    for chunk in np.array_split(vals, chunks):
+        part = M.observe(M.zeros(2), spec.name, chunk)
+        part = M.count(part, "events", len(chunk))
+        part = M.gauge_max(part, "queue_peak", float(len(chunk)))
+        parts = M.merge(parts, part)
+    for field in ("counters", "hist"):
+        np.testing.assert_array_equal(np.asarray(getattr(whole, field)),
+                                      np.asarray(getattr(parts, field)))
+    assert M.gauge_value(parts, "queue_peak") == float(n)
+
+
+# -- counter exactness: single-run engine --------------------------------------
+
+def _engine_run(n=16):
+    arrivals = []
+    for i in range(n):
+        w = snap_to_grid(Workload(
+            fs=FS_GRID[(5 * i) % len(FS_GRID)], rs=RS_GRID[i % len(RS_GRID)],
+            data_total=48e6))
+        arrivals.append((0.5 * i, w))
+    engine = ConsolidationEngine([M1, M2], backend="jax")
+    return engine.run(arrivals, metrics=True)
+
+
+def test_engine_counters_match_host_oracle():
+    res = _engine_run()
+    frame = res.metrics
+    assert M.counter_value(frame, "arrivals") == len(res.placements)
+    placed = sum(1 for p in res.placements if p is not None)
+    assert M.counter_value(frame, "placements") == placed
+    assert M.counter_value(frame, "queued") == sum(res.was_queued)
+    assert M.counter_value(frame, "finishes") == sum(
+        1 for t in res.finish_times if np.isfinite(t))
+    assert M.counter_value(frame, "deadlocks") == 0
+    per_server = M.server_values(frame, "placements")
+    for s in range(2):
+        assert int(per_server[s]) == sum(1 for p in res.placements if p == s)
+    # one waiting-time and one headroom sample per successful placement
+    for hist in ("waiting_time", "headroom"):
+        assert int(M.hist_counts(frame, hist).sum()) == placed
+
+
+def test_metrics_off_returns_none():
+    engine = ConsolidationEngine([M1, M2], backend="jax")
+    res = engine.run([(0.0, snap_to_grid(Workload(fs=FS_GRID[12],
+                                                  rs=RS_GRID[5],
+                                                  data_total=48e6)))])
+    assert res.metrics is None
+
+
+def test_metrics_requires_jax_backend():
+    engine = ConsolidationEngine([M1, M2], backend="numpy")
+    with pytest.raises(ValueError, match="jax"):
+        engine.run([(0.0, snap_to_grid(Workload(fs=FS_GRID[12],
+                                                rs=RS_GRID[5],
+                                                data_total=48e6)))],
+                   metrics=True)
+
+
+# -- counter exactness: adaptive runs, health bit-match ------------------------
+
+def _adaptive(m=3, drift=None):
+    return AdaptiveEngine([M1] * m, prior=0.0, decay=0.997,
+                          drift=drift, fleet=FleetController(mesh=MeshConfig()),
+                          ring_capacity=256)
+
+
+def test_eviction_counters_bitmatch_health():
+    """The decisive fleet scenario: splits/evictions/requeues counters must
+    equal the host-visible health-event and requeue counts of the SAME run."""
+    segments, n_seg, failing = 6, 14, 1
+    servers = [M1] * 3
+    drift = gradual_decay(servers, server=failing, rate=0.65, start=1,
+                          segments=segments)
+    arrivals = _replay(_segment(11, n_seg), segments)
+    eng = _adaptive(drift=drift)
+    res = eng.run(arrivals, segments=segments, metrics=True)
+    frame = res.metrics
+    events = [ev for evs in res.health for ev in evs]
+    assert M.counter_value(frame, "evictions") == sum(
+        1 for ev in events if ev.kind == "evict") > 0
+    assert M.counter_value(frame, "splits") == sum(
+        1 for ev in events if ev.kind == "split")
+    # every requeued job is placed twice: once before the eviction, once after
+    total_placed = sum(len(seg.placements) for seg in res.segments)
+    assert M.counter_value(frame, "requeues") == total_placed - len(arrivals) > 0
+    assert M.counter_value(frame, "segments") == segments
+    text = render_report(res, title="eviction run")
+    assert "health-event timeline:" in text and "evict" in text
+
+
+def test_host_device_metrics_parity():
+    """The fused device loop and the host oracle produce the same decision
+    counters, per-server columns, and event histograms bit-for-bit.  Device-
+    only extras are excluded: ``d_cols_refreshed`` counts posterior-D column
+    refreshes the host path does wholesale, and the ``cusum_level`` histogram
+    is only observable inside the compiled detector."""
+    segments, n_seg = 6, 12
+    arrivals = _replay(_segment(11, n_seg), segments)
+    frames = []
+    for device_loop in (False, True):
+        eng = AdaptiveEngine([M1] * 3, prior=0.0, decay=1.0, stream=True,
+                             fleet=FleetController(mesh=MeshConfig()),
+                             ring_capacity=256)
+        res = eng.run(arrivals, segments=segments, device_loop=device_loop,
+                      metrics=True)
+        frames.append(res.metrics)
+    host, dev = frames
+    shared = [c for c in M.COUNTERS if c != "d_cols_refreshed"]
+    for name in shared:
+        assert M.counter_value(host, name) == M.counter_value(dev, name), name
+    np.testing.assert_array_equal(np.asarray(host.per_server),
+                                  np.asarray(dev.per_server))
+    for spec in M.HISTOGRAMS:
+        if spec.name == "cusum_level":
+            continue
+        np.testing.assert_array_equal(M.hist_counts(host, spec.name),
+                                      M.hist_counts(dev, spec.name),
+                                      err_msg=spec.name)
+    assert M.counter_value(dev, "arrivals") == len(arrivals)
+
+
+def test_adaptive_metrics_off_returns_none():
+    arrivals = _replay(_segment(3, 4), 2)
+    eng = AdaptiveEngine([M1] * 2, prior=0.0, stream=True)
+    res = eng.run(arrivals, segments=2)
+    assert res.metrics is None
+    res_dev = eng.run(arrivals, segments=2, device_loop=True)
+    assert res_dev.metrics is None
