@@ -361,6 +361,41 @@ def _build_closed_loop_metrics():
     return fn, (cluster, dyn_stack, Lp_t, logb, carry, xs)
 
 
+def _server_axis_1():
+    """A 1-device mesh ServerAxis: traces the full shard_map path (size-1
+    collectives included) on any host, so the sharded entries stay
+    registered and auditable in single-device CI."""
+    from ..distributed.server_axis import ServerAxis
+
+    return ServerAxis.over_host_devices(1)
+
+
+def _build_greedy_sharded():
+    """The sharded Q x m candidate scorer: score-local-then-argmax-allreduce
+    over the server mesh (collectives allowed at tier device; host
+    callbacks are banned here exactly as on the dense entries)."""
+    from ..core.binpack_jax import greedy_sequence_sharded
+
+    m, n = 4, 16
+    axis = _server_axis_1()
+    cluster = _cluster(m)
+    counts = _f32((m, _T))
+    wtypes = jnp.arange(n, dtype=jnp.int32) % _T
+    fn = lambda c, cnt, wt: greedy_sequence_sharded(c, cnt, wt, axis)
+    return fn, (cluster, counts, wtypes)
+
+
+def _build_closed_loop_sharded():
+    """The whole multi-segment loop under shard_map (1-device mesh): every
+    per-segment collective the 10k-server layout runs, host-callback-free."""
+    fn_args = _build_closed_loop()
+    from ..core.closed_loop import ClosedLoopConfig, run_closed_loop
+
+    config = ClosedLoopConfig(fleet=True, axis=_server_axis_1())
+    fn = lambda c, d, lp, lb, cr, x: run_closed_loop(c, d, lp, lb, cr, x, config)
+    return fn, fn_args[1]
+
+
 def _build_consolidation_scores():
     from ..kernels.consolidation import consolidation_scores
 
@@ -446,6 +481,10 @@ REGISTRY: tuple[HotEntry, ...] = (
              _build_run_trace_metrics),
     HotEntry("core.closed_loop.run_closed_loop[metrics]", TIER_DEVICE,
              _build_closed_loop_metrics),
+    HotEntry("binpack_jax.greedy_sequence[sharded]", TIER_DEVICE,
+             _build_greedy_sharded),
+    HotEntry("core.closed_loop.run_closed_loop[sharded]", TIER_DEVICE,
+             _build_closed_loop_sharded),
     HotEntry("kernels.consolidation.consolidation_scores", TIER_DEVICE,
              _build_consolidation_scores, pallas=True),
     HotEntry("kernels.telemetry.pair_scatter", TIER_DEVICE, _build_pair_scatter,

@@ -168,6 +168,21 @@ def run_retrace_audit(stats: "dict | None" = None,
         obs_dev.run(dev_arrivals[:n_seg * 3], segments=3, device_loop=True,
                     metrics=True)
 
+    # sharded loop: a ServerAxis over a 1-device mesh runs the whole scan
+    # under shard_map -- same static config hash rules as dense (the axis is
+    # a frozen dataclass, hashable by mesh value). The warm run pays one
+    # trace; an identical rerun must add ZERO -- a delta means the axis (or
+    # something it carries) churns the jit key per call, i.e. every segment
+    # of a 10k-server run would recompile.
+    from .jaxpr_audit import _build_closed_loop_sharded
+    import jax
+
+    sh_fn, sh_args = _build_closed_loop_sharded()
+    with CompileCacheGuard() as sh_warm:
+        jax.block_until_ready(sh_fn(*sh_args))
+    with CompileCacheGuard() as sh_rerun:
+        jax.block_until_ready(sh_fn(*sh_args))
+
     findings = [
         Finding("retrace", "per-segment-retrace", name,
                 f"{delta} traces in a warm {segments}-segment run of one "
@@ -201,6 +216,11 @@ def run_retrace_audit(stats: "dict | None" = None,
                 "device loops after a warm metrics-on 4-segment run "
                 "(expected 0)")
         for name, delta in sorted(obs_dev_rerun.new_traces().items())
+    ] + [
+        Finding("retrace", "sharded-loop-recompile", name,
+                f"{delta} new traces rerunning the warm sharded closed loop "
+                "(expected 0: the ServerAxis static key must be call-stable)")
+        for name, delta in sorted(sh_rerun.new_traces().items())
     ]
     if stats is not None:
         stats["retrace"] = {
@@ -216,5 +236,9 @@ def run_retrace_audit(stats: "dict | None" = None,
                 np.sum(list(obs_rerun.deltas.values()) or [0])),
             "metrics_device_warm_traces": obs_dev_warm.new_traces(),
             "metrics_device_rerun_traces": obs_dev_rerun.new_traces(),
+            "sharded_warm_traces": sh_warm.new_traces(),
+            "sharded_rerun_traces": sh_rerun.new_traces(),
+            "sharded_rerun_total": int(
+                np.sum(list(sh_rerun.deltas.values()) or [0])),
         }
     return findings

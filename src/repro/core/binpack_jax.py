@@ -248,6 +248,230 @@ def greedy_sequence_jax(
     return final, placements
 
 
+# --- sharded + hierarchical sequence allocation ---------------------------------
+#
+# The fleet-scale variants of ``greedy_sequence_jax``. Both take a
+# :class:`~repro.distributed.server_axis.ServerAxis` and are *decision-exact*
+# vs the dense scan: per-server scores are computed by the same arithmetic on
+# the same rows, and only order-insensitive scalars (min / first-index) cross
+# shard boundaries. A dense axis delegates straight to ``greedy_sequence_jax``
+# -- the single-device program is byte-identical to today's.
+
+
+def _choose_from_scores(axis, score_l: jax.Array, m_local: int):
+    """Global (server, ok) from per-shard score columns [Q, m_local].
+
+    Reproduces ``argmin_with_margin`` tie-breaking exactly: global min via
+    ``pmin``, then the first *global* index within the margin (local first
+    hit globalized with the shard offset, ``pmin`` picks the lowest).
+    Infeasible servers carry ``inf``; ``ok`` is "any feasible anywhere"
+    (the min is finite iff some server is feasible).
+    """
+    m_g = m_local * axis.shards
+    smin = axis.pmin(jnp.min(score_l, axis=1))  # [Q]
+    hit = score_l <= (smin + SCORE_MARGIN)[:, None]
+    has = jnp.any(hit, axis=1)
+    local_first = axis.offset(m_local) + jnp.argmax(hit, axis=1)
+    best = axis.pmin(jnp.where(has, local_first, m_g))
+    ok = jnp.isfinite(smin)
+    return jnp.where(ok, best, QUEUED), ok
+
+
+def _masked_scores(cluster: PackedCluster, counts: jax.Array,
+                   wtypes: jax.Array, objective: str) -> jax.Array:
+    """[Q, m] greedy scores with infeasible servers at ``inf`` -- the score
+    half of :func:`greedy_choice`, reusable on a local shard slice."""
+    cache_after, maxd_after = score_candidates_jnp(cluster, counts, wtypes)
+    feasible = ((maxd_after < cluster.degradation_limit) & (cache_after <= 1.0)
+                & (cluster.active > 0.5)[None, :])
+    avg_after = 0.5 * (cache_after + maxd_after)
+    if objective == "sum_avg":
+        score = avg_after - avg_loads(cluster, counts)[None, :]
+    else:
+        score = avg_after
+    return jnp.where(feasible, score, jnp.inf)
+
+
+@partial(jax.jit, static_argnames=("axis", "objective"))
+def greedy_sequence_sharded(
+    cluster: PackedCluster, counts: jax.Array, wtypes: jax.Array,
+    axis, objective: str = "sum_avg",
+) -> tuple[jax.Array, jax.Array]:
+    """``greedy_sequence_jax`` with the server axis sharded over ``axis``.
+
+    Each shard scores its own slice of the fleet (the full Q x m candidate
+    evaluation never materializes on one device); a ``(score, index)`` pair
+    crosses the mesh per decision. Placements come back replicated and
+    bitwise-equal to the dense scan; counts come back sharded.
+    """
+    if not axis.is_sharded:
+        return greedy_sequence_jax(cluster, counts, wtypes, objective)
+    m = cluster.m
+    axis.validate(m)
+    m_local = axis.local_m(m)
+
+    def body(cluster_l, counts_l, wtypes):
+        lo = axis.offset(m_local)
+
+        def step(c, t):
+            score = _masked_scores(cluster_l, c, t, objective)  # [1, m_local]
+            placement, ok = _choose_from_scores(axis, score, m_local)
+            placement, ok = placement[0], ok[0]
+            s_l = placement - lo
+            owned = ok & (s_l >= 0) & (s_l < m_local)
+            dst = jnp.where(owned, s_l, m_local)  # OOB write drops off-shard
+            return c.at[dst, t].add(1.0), placement
+
+        return jax.lax.scan(step, counts_l, wtypes)
+
+    mapped = axis.shard_map(
+        body,
+        in_specs=(axis.shard_leading(cluster, m), axis.spec(), axis.rep()),
+        out_specs=(axis.spec(), axis.rep()))
+    return mapped(cluster, counts, wtypes)
+
+
+# --- hierarchical (pod) selection ------------------------------------------------
+
+def _incremental_scores(cluster_l: PackedCluster, counts_l: jax.Array,
+                        col0: jax.Array, comp0: jax.Array, maxd0: jax.Array,
+                        diag: jax.Array, t: jax.Array,
+                        objective: str) -> jax.Array:
+    """Exact greedy scores [m_local] from maintained per-server aggregates.
+
+    The flat scorer pays ``counts @ D`` -- O(m T^2) and a full pass over the
+    ``[m, T, T]`` degradation tensor -- on *every* decision. But a decision
+    changes one server's counts, so the three row-aggregates the score
+    needs -- ``col0 = counts @ D`` [m, T], ``comp0`` (cache composition)
+    [m], and ``maxd0`` (current max predicted degradation) [m] -- are
+    maintained in the scan carry and only ``D[:, t, :]`` (the candidate
+    type's row per server, O(m T)) is touched here. The arithmetic is the
+    dense scorer's exactly -- same expressions, same reduction orders (XLA
+    lowers the einsum row and the single-row refresh dot identically on
+    CPU, where the decision-identity suite pins this) -- so placements are
+    bitwise-equal to ``greedy_sequence_jax``, not merely close.
+    """
+    rs, fs = cluster_l.rs, cluster_l.fs
+    cache0 = comp0 / cluster_l.llc_budget
+    delta = rs[t] + cluster_l.resident[:, t] * fs[t]  # [m]
+    cache_after = (comp0 + delta) / cluster_l.llc_budget
+
+    Dt = cluster_l.D[:, t, :]  # [m, T] -- the only touch of D
+    d_pred_after = jnp.clip(col0 + Dt - diag, 0.0, 1.0)
+    present = counts_l > 0
+    present_after = present | (jnp.arange(counts_l.shape[1]) == t)[None, :]
+    maxd_after = jnp.max(jnp.where(present_after, d_pred_after, -jnp.inf),
+                         axis=1)
+
+    feasible = ((maxd_after < cluster_l.degradation_limit)
+                & (cache_after <= 1.0) & (cluster_l.active > 0.5))
+    avg_after = 0.5 * (cache_after + maxd_after)
+    if objective == "sum_avg":
+        score = avg_after - 0.5 * (cache0 + maxd0)
+    else:
+        score = avg_after
+    return jnp.where(feasible, score, jnp.inf)
+
+
+def _row_aggregates(cluster_l: PackedCluster, row_c: jax.Array,
+                    D_row: jax.Array, diag_row: jax.Array,
+                    resident_row: jax.Array):
+    """(col0, comp0, maxd0) of ONE server row, rebuilt from their
+    definitions -- the refresh half of the maintenance rule."""
+    new_col = row_c @ D_row  # [T]
+    new_comp = row_c @ cluster_l.rs + (row_c * resident_row) @ cluster_l.fs
+    pres = row_c > 0
+    new_maxd = jnp.max(jnp.where(pres, jnp.clip(new_col - diag_row, 0.0, 1.0),
+                                 -jnp.inf))
+    new_maxd = jnp.where(jnp.any(pres), new_maxd, 0.0)
+    return new_col, new_comp, new_maxd
+
+
+@partial(jax.jit, static_argnames=("axis", "objective"))
+def greedy_sequence_hier(
+    cluster: PackedCluster, counts: jax.Array, wtypes: jax.Array,
+    axis, objective: str = "sum_avg", col0=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Pod-hierarchical greedy scan: O(m T) per decision via maintained
+    aggregates, sharded over whole pods.
+
+    ``axis.pods`` pods of ``m // axis.pods`` servers each; with a sharded
+    axis every shard owns ``pods // shards`` whole pods, so pod-local
+    state (the ``col0`` aggregate, pool leadership, pod rollups) never
+    crosses the mesh. Decision-identical to ``greedy_sequence_jax``
+    (bitwise placements: exact scores, exact tie-breaking). ``pods == 1``
+    on a dense axis *is* ``greedy_sequence_jax``: same function, same
+    program.
+
+    ``col0`` optionally supplies the precomputed ``counts @ D`` seed (it
+    must equal exactly that product -- pass ``jnp.zeros((m, T))`` for an
+    empty fleet); ``None`` computes it here, one O(m T^2) pass amortized
+    over the whole sequence. Per decision the scan then touches
+    ``D[:, t, :]`` only, and refreshes the placed server's row of ``col0``
+    by an exact recompute -- the pod-aggregate maintenance rule: aggregates
+    are *rebuilt from their definition* on the rows a decision touched,
+    never incrementally drifted (DESIGN.md §15).
+    """
+    pods = axis.pods
+    if pods <= 1:
+        if axis.is_sharded:
+            return greedy_sequence_sharded(cluster, counts, wtypes, axis,
+                                           objective)
+        return greedy_sequence_jax(cluster, counts, wtypes, objective)
+    m = cluster.m
+    axis.validate(m)  # raises unless shards | pods | m
+    m_local = axis.local_m(m)
+
+    def body(cluster_l, counts_l, col0_l, wtypes):
+        if col0_l is None:
+            col0_l = jnp.einsum("mt,mtu->mu", counts_l, cluster_l.D)
+        diag = jnp.diagonal(cluster_l.D, axis1=1, axis2=2)  # [m_local, T]
+        # one-time O(m T) seeds for the scalar aggregates, from definition
+        comp0_l = (counts_l @ cluster_l.rs
+                   + (counts_l * cluster_l.resident) @ cluster_l.fs)
+        d_pred0 = jnp.clip(col0_l - diag, 0.0, 1.0)
+        present0 = counts_l > 0
+        maxd0_l = jnp.max(jnp.where(present0, d_pred0, -jnp.inf), axis=1)
+        maxd0_l = jnp.where(jnp.any(present0, axis=1), maxd0_l, 0.0)
+        lo = axis.offset(m_local)
+
+        def step(carry, t):
+            c, col0, comp0, maxd0 = carry
+            score = _incremental_scores(cluster_l, c, col0, comp0, maxd0,
+                                        diag, t, objective)
+            placement, ok = _choose_from_scores(axis, score[None], m_local)
+            placement, ok = placement[0], ok[0]
+            s_l = placement - lo
+            owned = ok & (s_l >= 0) & (s_l < m_local)
+            s_safe = jnp.clip(s_l, 0, m_local - 1)
+            dst = jnp.where(owned, s_l, m_local)  # off-shard write drops
+            c = c.at[dst, t].add(1.0)
+            # exact refresh of the one changed server's aggregate rows
+            new_col, new_comp, new_maxd = _row_aggregates(
+                cluster_l, c[s_safe], cluster_l.D[s_safe], diag[s_safe],
+                cluster_l.resident[s_safe])
+            col0 = col0.at[dst].set(new_col)
+            comp0 = comp0.at[dst].set(new_comp)
+            maxd0 = maxd0.at[dst].set(new_maxd)
+            return (c, col0, comp0, maxd0), placement
+
+        (c_final, _, _, _), placements = jax.lax.scan(
+            step, (counts_l, col0_l, comp0_l, maxd0_l), wtypes)
+        return c_final, placements
+
+    if not axis.is_sharded:
+        return body(cluster, counts, col0, wtypes)
+    col0_specs = axis.rep() if col0 is None else axis.spec()
+    mapped = axis.shard_map(
+        lambda cl, c, c0, wt: body(cl, c, None if col0 is None else c0, wt),
+        in_specs=(axis.shard_leading(cluster, m), axis.spec(), col0_specs,
+                  axis.rep()),
+        out_specs=(axis.spec(), axis.rep()))
+    return mapped(cluster, counts,
+                  jnp.zeros((0,), jnp.float32) if col0 is None else col0,
+                  wtypes)
+
+
 # --- vectorized brute force ------------------------------------------------------
 
 @jax.jit

@@ -56,6 +56,7 @@ from ..telemetry.estimator import (
     DeviceEstimatorState,
     _bank_core,
     _blend_prior_t,
+    _localize_block,
     _remap_rows,
 )
 from ..telemetry.log import RingBlock, _ring_write_masked, _rows_from_trace
@@ -100,6 +101,11 @@ class ClosedLoopConfig:
     # per-segment split/evict/requeue/ring/D-refresh accounting); off keeps
     # LoopCarry.metrics = None and the compiled program byte-identical
     metrics: bool = False
+    # server-axis layout (distributed.server_axis.ServerAxis): None or a
+    # dense axis compiles the byte-identical single-device program; a
+    # sharded axis runs the whole scan under shard_map with every [m, ...]
+    # carry field sharded by server row and the queue/ring replicated
+    axis: "object | None" = None
 
 
 class LoopCarry(NamedTuple):
@@ -174,199 +180,261 @@ def run_closed_loop(
     n_seg = int(xs.arr_time.shape[1])
     n_cap = R + n_seg
     cap = int(carry.ring.ints.shape[0])
-    # the no-drift common case gathers the single dynamics once, outside the
-    # scan body, instead of a [m, T, T]-sized dynamic gather every step
-    dyn_0 = (jax.tree_util.tree_map(lambda a: a[0], dyn_stack)
-             if int(dyn_stack.solo.shape[0]) == 1 else None)
+    axis = config.axis
+    sharded = axis is not None and axis.is_sharded
 
-    def full_D(bank: DeviceEstimatorState, read_row) -> jax.Array:
-        """estimate_D's confidence blend for every server, from scratch:
-        blend in row space (elementwise ops commute with the row gather
-        bit-for-bit), then one gather + transpose to scheduler layout."""
-        L_eff_t = _blend_prior_t(bank.L_t, bank.n_pair_t,
-                                 Lp_t, config.confidence_floor)
-        D_rows = jnp.clip(-jnp.expm1(L_eff_t), 0.0, 0.999999)
-        return D_rows[jnp.clip(read_row, 0, m - 1)].swapaxes(1, 2)
+    def _scan(cluster, dyn_stack, Lp_t, logb_priors, carry, xs):
+        # per-shard body when sharded (each shard owns Lp_t.shape[0] server
+        # rows; queue, ring and every decision array stay replicated); the
+        # dense call traces the byte-identical single-device program
+        m_l = int(Lp_t.shape[0])
+        lo = axis.offset(m_l) if sharded else 0
+        # the no-drift common case gathers the single dynamics once, outside
+        # the scan body, instead of a [m, T, T]-sized dynamic gather per step
+        dyn_0 = (jax.tree_util.tree_map(lambda a: a[0], dyn_stack)
+                 if int(dyn_stack.solo.shape[0]) == 1 else None)
 
-    def refresh_D(D, bank, read_row, a_type, block):
-        """Re-blend only what this segment's telemetry can have moved.
+        def local_rows(read_row):
+            """This shard's slice of a global server->row map, rebased to
+            local row indices (pool locality keeps every value in range)."""
+            if sharded:
+                return jnp.clip(
+                    jax.lax.dynamic_slice_in_dim(read_row, lo, m_l) - lo,
+                    0, m_l - 1)
+            return jnp.clip(read_row, 0, m - 1)
 
-        Without forgetting (``decay >= 1``) an update touches the bank only
-        at the (row, type-column) pairs the block names, so ``D`` needs new
-        values only in those columns -- conservatively recomputed for every
-        server (an untouched entry recomputes to the identical value). With
-        forgetting the whole confidence row moves each update and the blend
-        recomputes in full.
-        """
-        if config.decay < 1.0:
-            return full_D(bank, read_row)
-        rr = jnp.clip(read_row, 0, m - 1)  # [m]
-        row = block.server  # remapped bank row per telemetry row [B]
-        wt = a_type  # the types whose D columns can have moved [B]
-        wtc = jnp.clip(wt, 0, cluster.T - 1)
-        # blend just the touched columns, for every server: [m, B, T(u)]
-        cols = _blend_prior_t(
-            bank.L_t[rr[:, None], wtc[None, :]],
-            bank.n_pair_t[rr[:, None], wtc[None, :]],
-            Lp_t[rr[:, None], wtc[None, :]], config.confidence_floor)
-        cols = jnp.clip(-jnp.expm1(cols), 0.0, 0.999999)
-        # rows that updated nothing (dropped server / bad type) write OOB
-        tt = jnp.where((wt >= 0) & (wt < cluster.T)
-                       & (row >= 0) & (row < m), wt, cluster.T)
-        return D.at[:, :, tt].set(cols.swapaxes(1, 2))
+        def full_D(bank: DeviceEstimatorState, read_row) -> jax.Array:
+            """estimate_D's confidence blend for every server, from scratch:
+            blend in row space (elementwise ops commute with the row gather
+            bit-for-bit), then one gather + transpose to scheduler layout."""
+            L_eff_t = _blend_prior_t(bank.L_t, bank.n_pair_t,
+                                     Lp_t, config.confidence_floor)
+            D_rows = jnp.clip(-jnp.expm1(L_eff_t), 0.0, 0.999999)
+            return D_rows[local_rows(read_row)].swapaxes(1, 2)
 
-    def step(scarry, x):
-        carry, D = scarry
-        q = carry.req_n
-        n_valid = jnp.where(x.seg_valid, q + n_seg, 0)
+        def refresh_D(D, bank, read_row, a_type, block):
+            """Re-blend only what this segment's telemetry can have moved.
 
-        # assemble the segment's arrivals: requeued work first (at the
-        # chunk-relative origin, exactly where the host prepends it), then
-        # the chunk rows; padding rows never arrive (time inf past n_valid)
-        i = jnp.arange(n_cap, dtype=jnp.int32)
-        is_req = i < q
-        ci = jnp.clip(i - q, 0, n_seg - 1)
-        ri = jnp.clip(i, 0, R - 1)
-        a_time = jnp.where(is_req, 0.0,
-                           jnp.where(i < q + n_seg, x.arr_time[ci], jnp.inf))
-        a_type = jnp.where(is_req, carry.req_type[ri], x.arr_type[ci])
-        a_bytes = jnp.where(is_req, carry.req_bytes[ri], x.arr_bytes[ci])
+            Without forgetting (``decay >= 1``) an update touches the bank
+            only at the (row, type-column) pairs the block names, so ``D``
+            needs new values only in those columns -- conservatively
+            recomputed for every server (an untouched entry recomputes to
+            the identical value). With forgetting the whole confidence row
+            moves each update and the blend recomputes in full.
+            """
+            if config.decay < 1.0:
+                return full_D(bank, read_row)
+            rr = local_rows(read_row)  # [m servers this shard]
+            row = block.server  # remapped bank row per telemetry row [B]
+            wt = a_type  # the types whose D columns can have moved [B]
+            wtc = jnp.clip(wt, 0, cluster.T - 1)
+            # blend just the touched columns, for every server: [m, B, T(u)]
+            cols = _blend_prior_t(
+                bank.L_t[rr[:, None], wtc[None, :]],
+                bank.n_pair_t[rr[:, None], wtc[None, :]],
+                Lp_t[rr[:, None], wtc[None, :]], config.confidence_floor)
+            cols = jnp.clip(-jnp.expm1(cols), 0.0, 0.999999)
+            # rows that updated nothing (dropped server / bad type) write OOB
+            tt = jnp.where((wt >= 0) & (wt < cluster.T)
+                           & (row >= 0) & (row < m), wt, cluster.T)
+            return D.at[:, :, tt].set(cols.swapaxes(1, 2))
 
-        # the scheduler's D for this segment rides the carry (maintained
-        # incrementally by refresh_D; rebuilt by full_D on topology changes)
-        cluster_k = dataclasses.replace(
-            cluster, D=D, active=carry.active.astype(jnp.float32))
-        dyn_k = (dyn_0 if dyn_0 is not None else
-                 jax.tree_util.tree_map(lambda a: a[x.dyn_idx], dyn_stack))
+        def step(scarry, x):
+            carry, D = scarry
+            q = carry.req_n
+            n_valid = jnp.where(x.seg_valid, q + n_seg, 0)
 
-        # the segment's event loop, telemetry on
-        with jax.named_scope("obs.segment_event_loop"):
-            trace = _trace_segment(
-                cluster_k, dyn_k, a_time, a_type, a_bytes, n_valid,
-                objective=config.objective, scorer=config.scorer,
-                telemetry=True, metrics=config.metrics)
+            # assemble the segment's arrivals: requeued work first (at the
+            # chunk-relative origin, exactly where the host prepends it), then
+            # the chunk rows; padding rows never arrive (time inf past n_valid)
+            i = jnp.arange(n_cap, dtype=jnp.int32)
+            is_req = i < q
+            ci = jnp.clip(i - q, 0, n_seg - 1)
+            ri = jnp.clip(i, 0, R - 1)
+            a_time = jnp.where(is_req, 0.0,
+                               jnp.where(i < q + n_seg, x.arr_time[ci], jnp.inf))
+            a_type = jnp.where(is_req, carry.req_type[ri], x.arr_type[ci])
+            a_bytes = jnp.where(is_req, carry.req_bytes[ri], x.arr_bytes[ci])
 
-        # observe -> estimate: the same fused banked update the host path
-        # dispatches (remap through the pool routing, fold the block);
-        # sparse_tables keeps the in-scan cost at O(B T) per step
-        with jax.named_scope("obs.estimate"):
-            block = _rows_from_trace(trace, a_type)
-            rblock = _remap_rows(block, carry.row_map)
-            bank, used = _bank_core(
-                carry.bank, rblock,
-                lr=config.lr, decay=config.decay, step_damp=config.step_damp,
-                solo_eps=config.solo_eps, max_lost_frac=config.est_max_lost_frac,
-                use_pallas=config.use_pallas, interpret=config.interpret,
-                sparse_tables=True)
+            # the scheduler's D for this segment rides the carry (maintained
+            # incrementally by refresh_D; rebuilt by full_D on topology changes)
+            act_k = (jax.lax.dynamic_slice_in_dim(carry.active, lo, m_l)
+                     if sharded else carry.active)
+            cluster_k = dataclasses.replace(
+                cluster, D=D, active=act_k.astype(jnp.float32))
+            dyn_k = (dyn_0 if dyn_0 is not None else
+                     jax.tree_util.tree_map(lambda a: a[x.dyn_idx], dyn_stack))
 
-        seen = carry.seen + x.seg_valid.astype(jnp.int32)
-        if config.fleet:
-            # detect against the *post-update* pooled model, on the original
-            # (un-remapped) block -- FleetController.observe's exact order
-            det, _ = _cusum_update(
-                carry.det, block, bank.log_b, bank.L_t, carry.row_map,
-                k=config.cusum_k, level_decay=config.level_decay,
-                max_lost_frac=config.det_max_lost_frac)
-            # burn-in: discard detector evidence, withhold actions
-            in_warmup = seen <= config.warmup_segments
-            det = jax.tree_util.tree_map(
-                lambda a: jnp.where(in_warmup, jnp.zeros_like(a), a), det)
-            out = fleet_step(
-                bank, det, carry.row_map, carry.read_row, carry.active,
-                logb_priors, x.seg_valid & ~in_warmup,
-                h=config.cusum_h, level_decay=config.level_decay,
-                fail_floor=config.fail_floor,
-                min_exposure=config.min_exposure)
-            bank, det = out.bank, out.det
-            row_map, read_row, active = out.row_map, out.read_row, out.active
-            split_fired, split_stat = out.split_fired, out.split_stat
-            evict_fired, evict_stat = out.evict_fired, out.evict_stat
-            evict_route = out.evict_route
-            # topology changes remap reads/copy rows: rebuild D outright;
-            # otherwise refresh just this segment's touched columns
-            D = jax.lax.cond(
-                jnp.any(split_fired) | jnp.any(evict_fired),
-                lambda d: full_D(bank, read_row),
-                lambda d: refresh_D(d, bank, read_row, a_type, rblock),
-                D)
-        else:
-            det = carry.det
-            row_map, read_row, active = (
-                carry.row_map, carry.read_row, carry.active)
-            split_fired = evict_fired = evict_route = jnp.zeros((m,), bool)
-            split_stat = evict_stat = jnp.zeros((m,), jnp.float32)
-            D = refresh_D(D, bank, read_row, a_type, rblock)
+            # the segment's event loop, telemetry on
+            with jax.named_scope("obs.segment_event_loop"):
+                trace = _trace_segment(
+                    cluster_k, dyn_k, a_time, a_type, a_bytes, n_valid,
+                    objective=config.objective, scorer=config.scorer,
+                    telemetry=True, metrics=config.metrics, axis=axis)
 
-        # act -> re-schedule: work an evicted server held (or that never
-        # placed) re-enters at the head of the next segment, in row order --
-        # the host's requeue comprehension as a cumsum scatter
-        any_evict = jnp.any(evict_fired)
-        pclip = jnp.clip(trace.placement, 0, m - 1)
-        req_mask = ((i < n_valid) & any_evict
-                    & (((trace.placement >= 0) & evict_fired[pclip])
-                       | (trace.placement < 0)))
-        pos = jnp.cumsum(req_mask.astype(jnp.int32)) - 1
-        n_req = req_mask.sum()
-        dst = jnp.where(req_mask & (pos < R), pos, R)
-        req_type = jnp.zeros((R + 1,), jnp.int32).at[dst].set(a_type)[:R]
-        req_bytes = jnp.ones((R + 1,), jnp.float32).at[dst].set(a_bytes)[:R]
+            # observe -> estimate: the same fused banked update the host path
+            # dispatches (remap through the pool routing, fold the block);
+            # sparse_tables keeps the in-scan cost at O(B T) per step
+            with jax.named_scope("obs.estimate"):
+                block = _rows_from_trace(trace, a_type)
+                rblock = _remap_rows(block, carry.row_map)
+                bank, used = _bank_core(
+                    carry.bank,
+                    _localize_block(rblock, lo) if sharded else rblock,
+                    lr=config.lr, decay=config.decay, step_damp=config.step_damp,
+                    solo_eps=config.solo_eps, max_lost_frac=config.est_max_lost_frac,
+                    use_pallas=config.use_pallas, interpret=config.interpret,
+                    sparse_tables=True)
+                if sharded:
+                    used = axis.psum(used)
 
-        # mirror the host's per-segment ring push (the full block, valid
-        # and invalid rows alike -- exactly n_valid rows land)
-        ring = _ring_write_masked(carry.ring, block, carry.ring_ptr, n_valid)
-
-        req_cnt = jnp.minimum(n_req, R)
-        if config.metrics:
-            # fold the segment's engine frame into the run frame, then add
-            # the closed-loop-level accounting the host used to keep
-            mf = obs_metrics.merge(carry.metrics, trace.metrics)
-            mf = obs_metrics.count(mf, "segments", x.seg_valid.astype(jnp.int32))
-            mf = obs_metrics.count(mf, "splits",
-                                   jnp.sum(split_fired, dtype=jnp.int32))
-            mf = obs_metrics.count(mf, "evictions",
-                                   jnp.sum(evict_fired, dtype=jnp.int32))
-            mf = obs_metrics.count(mf, "requeues", req_cnt)
-            mf = obs_metrics.count(mf, "ring_rows", n_valid)
-            # extent of the incremental D re-blend: block rows naming a
-            # live (bank row, type) pair -- the columns refresh_D targets
-            touched = jnp.sum((a_type >= 0) & (a_type < cluster.T)
-                              & (rblock.server >= 0) & (rblock.server < m),
-                              dtype=jnp.int32)
-            mf = obs_metrics.count(mf, "d_cols_refreshed", touched)
+            seen = carry.seen + x.seg_valid.astype(jnp.int32)
             if config.fleet:
-                mf = obs_metrics.observe(
-                    mf, "cusum_level", split_stat,
-                    weight=(carry.active & x.seg_valid).astype(jnp.float32))
-            mf = obs_metrics.gauge_max(
-                mf, "ring_occupancy_peak",
-                jnp.minimum(carry.ring_total + n_valid, cap).astype(jnp.float32))
-            mf = obs_metrics.gauge_max(
-                mf, "evicted_peak", jnp.sum(~active, dtype=jnp.float32))
-            mf = obs_metrics.gauge_max(
-                mf, "requeue_peak", req_cnt.astype(jnp.float32))
-        else:
-            mf = carry.metrics
+                # detect against the *post-update* pooled model, on the
+                # original (un-remapped) block -- FleetController.observe's
+                # exact order; each shard folds its own servers' rows
+                # (pool locality keeps row_map shard-local)
+                if sharded:
+                    det_row_map = (jax.lax.dynamic_slice_in_dim(
+                        carry.row_map, lo, m_l) - lo)
+                    det_block = _localize_block(block, lo)
+                else:
+                    det_row_map, det_block = carry.row_map, block
+                det, _ = _cusum_update(
+                    carry.det, det_block, bank.log_b, bank.L_t, det_row_map,
+                    k=config.cusum_k, level_decay=config.level_decay,
+                    max_lost_frac=config.det_max_lost_frac)
+                # burn-in: discard detector evidence, withhold actions
+                in_warmup = seen <= config.warmup_segments
+                det = jax.tree_util.tree_map(
+                    lambda a: jnp.where(in_warmup, jnp.zeros_like(a), a), det)
+                out = fleet_step(
+                    bank, det, carry.row_map, carry.read_row, carry.active,
+                    logb_priors, x.seg_valid & ~in_warmup,
+                    h=config.cusum_h, level_decay=config.level_decay,
+                    fail_floor=config.fail_floor,
+                    min_exposure=config.min_exposure, axis=axis)
+                bank, det = out.bank, out.det
+                row_map, read_row, active = out.row_map, out.read_row, out.active
+                split_fired, split_stat = out.split_fired, out.split_stat
+                evict_fired, evict_stat = out.evict_fired, out.evict_stat
+                evict_route = out.evict_route
+                # topology changes remap reads/copy rows: rebuild D outright;
+                # otherwise refresh just this segment's touched columns
+                D = jax.lax.cond(
+                    jnp.any(split_fired) | jnp.any(evict_fired),
+                    lambda d: full_D(bank, read_row),
+                    lambda d: refresh_D(d, bank, read_row, a_type, rblock),
+                    D)
+            else:
+                det = carry.det
+                row_map, read_row, active = (
+                    carry.row_map, carry.read_row, carry.active)
+                split_fired = evict_fired = evict_route = jnp.zeros((m,), bool)
+                split_stat = evict_stat = jnp.zeros((m,), jnp.float32)
+                D = refresh_D(D, bank, read_row, a_type, rblock)
 
-        carry2 = LoopCarry(
-            bank=bank, det=det, row_map=row_map, read_row=read_row,
-            active=active, seen=seen,
-            req_type=req_type, req_bytes=req_bytes,
-            req_n=req_cnt,
-            ring=ring, ring_ptr=(carry.ring_ptr + n_valid) % cap,
-            ring_total=carry.ring_total + n_valid,
-            metrics=mf)
-        out_k = SegmentOut(
-            placement=trace.placement, was_queued=trace.was_queued,
-            place_time=trace.place_time, finish_time=trace.finish_time,
-            makespan=trace.makespan, max_deg=trace.max_deg,
-            deadlock=trace.deadlock & x.seg_valid,
-            used=used, n_valid=n_valid, n_requeued=q,
-            req_overflow=(n_req > R) & x.seg_valid,
-            split_fired=split_fired, split_stat=split_stat,
-            evict_fired=evict_fired, evict_stat=evict_stat,
-            evict_route=evict_route, active_after=active)
-        return (carry2, D), out_k
+            # act -> re-schedule: work an evicted server held (or that never
+            # placed) re-enters at the head of the next segment, in row order
+            # -- the host's requeue comprehension as a cumsum scatter
+            any_evict = jnp.any(evict_fired)
+            pclip = jnp.clip(trace.placement, 0, m - 1)
+            req_mask = ((i < n_valid) & any_evict
+                        & (((trace.placement >= 0) & evict_fired[pclip])
+                           | (trace.placement < 0)))
+            pos = jnp.cumsum(req_mask.astype(jnp.int32)) - 1
+            n_req = req_mask.sum()
+            dst = jnp.where(req_mask & (pos < R), pos, R)
+            req_type = jnp.zeros((R + 1,), jnp.int32).at[dst].set(a_type)[:R]
+            req_bytes = jnp.ones((R + 1,), jnp.float32).at[dst].set(a_bytes)[:R]
 
-    (carry, _), ys = jax.lax.scan(step, (carry, full_D(carry.bank,
-                                                       carry.read_row)), xs)
-    return carry, ys
+            # mirror the host's per-segment ring push (the full block, valid
+            # and invalid rows alike -- exactly n_valid rows land)
+            ring = _ring_write_masked(carry.ring, block, carry.ring_ptr, n_valid)
+
+            req_cnt = jnp.minimum(n_req, R)
+            if config.metrics:
+                # fold the segment's engine frame into the run frame, then add
+                # the closed-loop-level accounting the host used to keep
+                mf = obs_metrics.merge(carry.metrics, trace.metrics)
+                mf = obs_metrics.count(mf, "segments", x.seg_valid.astype(jnp.int32))
+                mf = obs_metrics.count(mf, "splits",
+                                       jnp.sum(split_fired, dtype=jnp.int32))
+                mf = obs_metrics.count(mf, "evictions",
+                                       jnp.sum(evict_fired, dtype=jnp.int32))
+                mf = obs_metrics.count(mf, "requeues", req_cnt)
+                mf = obs_metrics.count(mf, "ring_rows", n_valid)
+                # extent of the incremental D re-blend: block rows naming a
+                # live (bank row, type) pair -- the columns refresh_D targets
+                touched = jnp.sum((a_type >= 0) & (a_type < cluster.T)
+                                  & (rblock.server >= 0) & (rblock.server < m),
+                                  dtype=jnp.int32)
+                mf = obs_metrics.count(mf, "d_cols_refreshed", touched)
+                if config.fleet:
+                    mf = obs_metrics.observe(
+                        mf, "cusum_level", split_stat,
+                        weight=(carry.active & x.seg_valid).astype(jnp.float32))
+                mf = obs_metrics.gauge_max(
+                    mf, "ring_occupancy_peak",
+                    jnp.minimum(carry.ring_total + n_valid, cap).astype(jnp.float32))
+                mf = obs_metrics.gauge_max(
+                    mf, "evicted_peak", jnp.sum(~active, dtype=jnp.float32))
+                mf = obs_metrics.gauge_max(
+                    mf, "requeue_peak", req_cnt.astype(jnp.float32))
+            else:
+                mf = carry.metrics
+
+            carry2 = LoopCarry(
+                bank=bank, det=det, row_map=row_map, read_row=read_row,
+                active=active, seen=seen,
+                req_type=req_type, req_bytes=req_bytes,
+                req_n=req_cnt,
+                ring=ring, ring_ptr=(carry.ring_ptr + n_valid) % cap,
+                ring_total=carry.ring_total + n_valid,
+                metrics=mf)
+            out_k = SegmentOut(
+                placement=trace.placement, was_queued=trace.was_queued,
+                place_time=trace.place_time, finish_time=trace.finish_time,
+                makespan=trace.makespan, max_deg=trace.max_deg,
+                deadlock=trace.deadlock & x.seg_valid,
+                used=used, n_valid=n_valid, n_requeued=q,
+                req_overflow=(n_req > R) & x.seg_valid,
+                split_fired=split_fired, split_stat=split_stat,
+                evict_fired=evict_fired, evict_stat=evict_stat,
+                evict_route=evict_route, active_after=active)
+            return (carry2, D), out_k
+
+        (carry, _), ys = jax.lax.scan(step, (carry, full_D(carry.bank,
+                                                           carry.read_row)), xs)
+        return carry, ys
+
+    if not sharded:
+        return _scan(cluster, dyn_stack, Lp_t, logb_priors, carry, xs)
+
+    # one shard_map around the whole scan: [m, ...] state shards by server
+    # row, the queue/ring/decision plane replicates, and the per-segment
+    # collectives inside the engine / fleet_step keep every shard's
+    # replicated copies bitwise aligned
+    axis.validate(m)
+    from jax.sharding import PartitionSpec
+
+    carry_specs = LoopCarry(
+        bank=axis.shard_leading(carry.bank, m),
+        det=axis.shard_leading(carry.det, m),
+        row_map=axis.rep(), read_row=axis.rep(), active=axis.rep(),
+        seen=axis.rep(), req_type=axis.rep(), req_bytes=axis.rep(),
+        req_n=axis.rep(), ring=axis.rep_tree(carry.ring),
+        ring_ptr=axis.rep(), ring_total=axis.rep(),
+        metrics=(obs_metrics.frame_specs(axis)
+                 if carry.metrics is not None else None))
+    dyn_specs = jax.tree_util.tree_map(
+        lambda a: (PartitionSpec(None, axis.axis)
+                   if a.ndim >= 2 and a.shape[1] == m else PartitionSpec()),
+        dyn_stack)
+    ys_specs = SegmentOut(*([axis.rep()] * len(SegmentOut._fields)))
+    mapped = axis.shard_map(
+        _scan,
+        in_specs=(axis.shard_leading(cluster, m), dyn_specs, axis.spec(),
+                  axis.rep(), carry_specs, axis.rep_tree(xs)),
+        out_specs=(carry_specs, ys_specs))
+    return mapped(cluster, dyn_stack, Lp_t, logb_priors, carry, xs)

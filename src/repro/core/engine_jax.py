@@ -67,6 +67,7 @@ import numpy as np
 from ..obs import metrics as obs_metrics
 from .binpack_jax import (
     PackedCluster,
+    _choose_from_scores,
     argmin_with_margin,
     score_candidates_jnp,
     server_loads,
@@ -205,6 +206,7 @@ def _trace_segment(
     n_steps: int | None = None,
     telemetry: bool = False,
     metrics: bool = False,
+    axis=None,
 ) -> EngineTrace:
     """Trace body of :func:`run_trace`, with a *traced* arrival count.
 
@@ -216,11 +218,25 @@ def _trace_segment(
     ``n_valid`` are never arrived, so their trace outputs keep the initial
     sentinels (placement QUEUED, finish inf) and ``n_valid = 0`` exits at
     iteration zero. Plain (un-jitted) so callers embed it in their own jit.
+
+    With a sharded ``axis`` this is the *per-shard* body (the caller runs it
+    under ``shard_map``): ``cluster``/``dyn`` carry the local server slice,
+    arrival arrays and the queue replicate, placements are global server
+    indices, and per-micro-event globals (earliest finish, any-active,
+    argmin-with-margin winners) cross the mesh as scalar ``pmin``/``psum``
+    pairs. ``axis=None`` (or a dense axis) leaves every code path byte-for-
+    byte identical to the unthreaded engine.
     """
     n = int(arr_time.shape[0])
     m, K = cluster.m, n
     if n_steps is None:
         n_steps = 4 * n + 8
+    sharded = axis is not None and axis.is_sharded
+    if sharded:
+        lo = axis.offset(m)  # this shard's first global server index
+        m_g = m * axis.shards
+    else:
+        lo, m_g = 0, m
 
     diag = jnp.diagonal(cluster.D, axis1=1, axis2=2)  # [m, T]
     comp_delta = cluster.rs[None, :] + cluster.resident * cluster.fs[None, :]  # [m, T]
@@ -302,6 +318,10 @@ def _trace_segment(
         else:  # literal Fig 8: minimize the post-allocation average
             score = 0.5 * (cache_a + maxd_a)
         score = jnp.where(feasible, score, jnp.inf)
+        if sharded:
+            # score-local-then-argmin-allreduce: only (score, index) scalars
+            # cross the mesh; tie-breaking is the dense first-global-index
+            return _choose_from_scores(axis, score, m)
         best = argmin_with_margin(score)  # oracle tie-breaking (lowest index)
         ok = jnp.any(feasible, axis=1)
         return jnp.where(ok, best, QUEUED), ok
@@ -316,7 +336,24 @@ def _trace_segment(
         ties break by server index exactly like the float64 oracle's strict-
         improvement loop, and nothing drifts over long traces. ``sign=0`` is
         a no-op refresh (used when a conditional placement did not happen).
+
+        ``server`` is a *global* index; on a sharded axis the owning shard
+        rebases it and every other shard's writes fall off the scatter edge.
         """
+        if sharded:
+            s_l = server - lo
+            owned = (s_l >= 0) & (s_l < m)
+            s_safe = jnp.clip(s_l, 0, m - 1)
+            sdst = jnp.where(owned, s_l, m)  # off-shard write drops
+            counts = st.counts.at[sdst, wtype].add(sign)
+            sums = counts[s_safe] @ tables[s_safe]
+            return st._replace(
+                counts=counts,
+                comp=st.comp.at[sdst].set(sums[3 * T]),
+                col0=st.col0.at[sdst].set(sums[:T]),
+                colog_keep=st.colog_keep.at[sdst].set(sums[T:2 * T]),
+                colog_lost=st.colog_lost.at[sdst].set(sums[2 * T:3 * T]),
+            )
         counts = st.counts.at[server, wtype].add(sign)
         sums = counts[server] @ tables[server]  # [3T + 1]
         return st._replace(
@@ -337,14 +374,26 @@ def _trace_segment(
         """
         server = jnp.where(found, server, 0)
         st = apply_delta(st, server, wtype, jnp.where(found, 1.0, 0.0))
-        free = st.slot_type[server] < 0  # [K]
-        k = jnp.where(found, jnp.argmax(free), K)  # K == n: a free slot exists
+        if sharded:
+            # slot bookkeeping is owner-local: the owning shard picks the
+            # free slot of its local row, everyone else's writes drop; the
+            # replicated [n] queue/placement arrays take the same global
+            # values on every shard
+            s_l = jnp.clip(server - lo, 0, m - 1)
+            owned = found & (server >= lo) & (server < lo + m)
+            free = st.slot_type[s_l] < 0  # [K]
+            k = jnp.where(owned, jnp.argmax(free), K)
+            srow = jnp.where(owned, s_l, m)
+        else:
+            free = st.slot_type[server] < 0  # [K]
+            k = jnp.where(found, jnp.argmax(free), K)  # K == n: a free slot exists
+            srow = server
         on_place = jnp.where(found, idx, n)  # n / K index -> scatter dropped
         on_fail = jnp.where(found, n, idx) if queue_on_fail else n
         st = st._replace(
-            slot_type=st.slot_type.at[server, k].set(wtype),
-            slot_rem=st.slot_rem.at[server, k].set(nbytes),
-            slot_arr=st.slot_arr.at[server, k].set(idx),
+            slot_type=st.slot_type.at[srow, k].set(wtype),
+            slot_rem=st.slot_rem.at[srow, k].set(nbytes),
+            slot_arr=st.slot_arr.at[srow, k].set(idx),
             queued=st.queued.at[on_place].set(False).at[on_fail].set(True),
             was_queued=st.was_queued.at[on_fail].set(True),
             placement=st.placement.at[on_place].set(server),
@@ -363,15 +412,27 @@ def _trace_segment(
                 weight=w)
             # Eqn-4 headroom of the committed server, post-commit: how much
             # of the degradation budget this placement left on the table
-            d_pred = jnp.clip(st.col0[server] - diag[server], 0.0, 1.0)
-            present = st.counts[server] > 0
-            maxd_s = jnp.max(jnp.where(present, d_pred, -jnp.inf))
-            maxd_s = jnp.where(jnp.any(present), maxd_s, 0.0)
+            if sharded:
+                s_l = jnp.clip(server - lo, 0, m - 1)
+                owned = (server >= lo) & (server < lo + m)
+                d_pred = jnp.clip(st.col0[s_l] - diag[s_l], 0.0, 1.0)
+                present = st.counts[s_l] > 0
+                maxd_s = jnp.max(jnp.where(present, d_pred, -jnp.inf))
+                maxd_s = jnp.where(jnp.any(present), maxd_s, 0.0)
+                # single-owner broadcast: the histogram add replicates
+                maxd_s = axis.pmin(jnp.where(owned, maxd_s, jnp.inf))
+                col = jax.nn.one_hot(
+                    jnp.where(found & owned, s_l, m), m, dtype=jnp.float32)
+            else:
+                d_pred = jnp.clip(st.col0[server] - diag[server], 0.0, 1.0)
+                present = st.counts[server] > 0
+                maxd_s = jnp.max(jnp.where(present, d_pred, -jnp.inf))
+                maxd_s = jnp.where(jnp.any(present), maxd_s, 0.0)
+                col = jax.nn.one_hot(
+                    jnp.where(found, server, m), m, dtype=jnp.float32)
             mf = obs_metrics.observe(
                 mf, "headroom", cluster.degradation_limit - maxd_s, weight=w)
-            mf = obs_metrics.add_server(
-                mf, "placements",
-                jax.nn.one_hot(jnp.where(found, server, m), m, dtype=jnp.float32))
+            mf = obs_metrics.add_server(mf, "placements", col)
             st = st._replace(metrics=mf)
         return st
 
@@ -434,7 +495,10 @@ def _trace_segment(
 
         st = place_if(st, found, q, server, arr_type[q], arr_bytes[q], st.now,
                       queue_on_fail=False)
-        no_active = ~jnp.any(st.slot_type >= 0)
+        act_any = jnp.any(st.slot_type >= 0)
+        if sharded:
+            act_any = axis.any(act_any)
+        no_active = ~act_any
         dead = ~found & no_active & (st.ai >= n_valid) & jnp.any(st.queued)
         if metrics:
             mf = obs_metrics.count(st.metrics, "drain_steps", 1)
@@ -450,32 +514,62 @@ def _trace_segment(
         # on same-spec servers) must resolve lowest-server-first like the
         # oracle's event loop; f32 noise would otherwise order them arbitrarily
         flat = tt.reshape(-1)
-        t_min = jnp.min(flat)
-        k_flat = jnp.argmax(flat <= t_min * (1.0 + 1e-5))
-        s_fin, k_fin = k_flat // K, k_flat % K
-        t_fin = st.now + flat[k_flat]
-        st = advance(st, rates, t_fin - st.now)
-        idx = st.slot_arr[s_fin, k_fin]
-        wtype = st.slot_type[s_fin, k_fin]
+        if sharded:
+            # the same margin-argmin, distributed: global min time by pmin,
+            # local first-hit globalized by the shard's flat offset (global
+            # flat order is (server, slot), so lo*K preserves it), then the
+            # owning shard broadcasts the chosen slot's dt/arrival/type via
+            # single-owner pmin reductions
+            t_min = axis.pmin(jnp.min(flat))
+            hit = flat <= t_min * (1.0 + 1e-5)
+            k_loc = jnp.argmax(hit)
+            g_flat = jnp.where(jnp.any(hit), lo * K + k_loc, m_g * K)
+            k_flat_g = axis.pmin(g_flat)
+            s_fin = k_flat_g // K  # global server index
+            k_fin = k_flat_g % K
+            s_l = jnp.clip(s_fin - lo, 0, m - 1)
+            owned = (s_fin >= lo) & (s_fin < lo + m)
+            dt = axis.pmin(jnp.where(
+                owned, flat[jnp.clip(k_flat_g - lo * K, 0, m * K - 1)],
+                jnp.inf))
+            t_fin = st.now + dt
+            st = advance(st, rates, t_fin - st.now)
+            idx = axis.pmin(jnp.where(owned, st.slot_arr[s_l, k_fin], n))
+            wtype = axis.pmin(jnp.where(owned, st.slot_type[s_l, k_fin], T))
+            srow = jnp.where(owned, s_l, m)  # local clear; others drop
+        else:
+            t_min = jnp.min(flat)
+            k_flat = jnp.argmax(flat <= t_min * (1.0 + 1e-5))
+            s_fin, k_fin = k_flat // K, k_flat % K
+            t_fin = st.now + flat[k_flat]
+            st = advance(st, rates, t_fin - st.now)
+            idx = st.slot_arr[s_fin, k_fin]
+            wtype = st.slot_type[s_fin, k_fin]
+            srow = s_fin
         st = apply_delta(st, s_fin, wtype, -1.0)
         if metrics:
             # observed slowdown = actual duration / solo duration on the
             # server that ran it -- the serving-SLO quantity next to waiting
-            srate = dyn.solo[s_fin, jnp.clip(wtype, 0)]
+            if sharded:
+                srate = axis.pmin(jnp.where(
+                    owned, dyn.solo[s_l, jnp.clip(wtype, 0)], jnp.inf))
+                fin_col = jax.nn.one_hot(srow, m, dtype=jnp.float32)
+            else:
+                srate = dyn.solo[s_fin, jnp.clip(wtype, 0)]
+                fin_col = jax.nn.one_hot(s_fin, m, dtype=jnp.float32)
             solo_dur = arr_bytes[jnp.clip(idx, 0, n - 1)] / jnp.maximum(
                 srate, jnp.float32(1e-30))
             actual = t_fin - st.place_time[idx]
             mf = obs_metrics.count(st.metrics, "finishes", 1)
             mf = obs_metrics.observe(
                 mf, "slowdown", actual / jnp.maximum(solo_dur, jnp.float32(1e-30)))
-            mf = obs_metrics.add_server(
-                mf, "finishes", jax.nn.one_hot(s_fin, m, dtype=jnp.float32))
+            mf = obs_metrics.add_server(mf, "finishes", fin_col)
             st = st._replace(metrics=mf)
         return st._replace(
             now=t_fin,
             makespan=t_fin,
-            slot_type=st.slot_type.at[s_fin, k_fin].set(-1),
-            slot_arr=st.slot_arr.at[s_fin, k_fin].set(-1),
+            slot_type=st.slot_type.at[srow, k_fin].set(-1),
+            slot_arr=st.slot_arr.at[srow, k_fin].set(-1),
             finish_time=st.finish_time.at[idx].set(t_fin),
             draining=jnp.any(st.queued),  # §V: completion may unblock the queue
         )
@@ -496,8 +590,7 @@ def _trace_segment(
         return st.deadlock | (
             (st.ai >= n_valid) & ~jnp.any(st.slot_type >= 0) & ~jnp.any(st.queued))
 
-    def body(carry):
-        st, it = carry
+    def event_step(st):
         overflow = st.comp > dyn.tol_budget
         rates = _slot_rates(dyn, ldiag_keep, ldiag_lost, overflow,
                             st.colog_keep, st.colog_lost, st.slot_type)
@@ -505,6 +598,7 @@ def _trace_segment(
         # observed (ground-truth) degradation of the running set, for Fig-5 audits
         solo = jnp.take_along_axis(dyn.solo, jnp.clip(st.slot_type, 0), axis=1)
         deg = jnp.where(active, 1.0 - rates / solo, -jnp.inf)
+        # per-shard running max when sharded; globalized once after the loop
         st = st._replace(max_deg=jnp.maximum(st.max_deg, jnp.max(deg, initial=-jnp.inf)))
         if metrics:
             qdepth = jnp.sum(st.queued, dtype=jnp.float32)
@@ -521,28 +615,67 @@ def _trace_segment(
             st = st._replace(metrics=mf)
 
         tt = jnp.where(active, st.slot_rem / rates, jnp.inf)
-        t_fin = st.now + jnp.min(tt)
+        t_fin_local = st.now + jnp.min(tt)
         t_arr = jnp.where(st.ai < n_valid, arr_time[jnp.clip(st.ai, 0, n - 1)], jnp.inf)
-        any_active = jnp.any(active)
+        if sharded:
+            # the event picker needs fleet-wide scalars: earliest completion
+            # anywhere, any slot busy anywhere. One pmin + one psum per
+            # micro-event; the branch index then replicates, so every shard
+            # enters the same lax.switch arm and collectives stay aligned.
+            t_fin = axis.pmin(t_fin_local)
+            any_active = axis.any(jnp.any(active))
+        else:
+            t_fin = t_fin_local
+            any_active = jnp.any(active)
         queue_any = jnp.any(st.queued)
         drain = st.draining | (queue_any & ~any_active & (st.ai >= n_valid))
         branch = jnp.where(drain, 0, jnp.where(any_active & (t_fin <= t_arr), 1, 2))
-        st = jax.lax.switch(
+        return jax.lax.switch(
             branch, [drain_branch, finish_branch, arrive_branch], st, rates, tt)
-        return st, it + 1
 
-    def cond(carry):
-        st, it = carry
-        return (it < n_steps) & ~is_done(st)
+    if sharded:
+        # collectives may not run in a while_loop's cond; carry the (fully
+        # replicated) done flag computed at the end of each body instead
+        def body(carry):
+            st, it, _ = carry
+            st = event_step(st)
+            act_any = axis.any(jnp.any(st.slot_type >= 0))
+            done = st.deadlock | (
+                (st.ai >= n_valid) & ~act_any & ~jnp.any(st.queued))
+            return st, it + 1, done
 
-    st, _ = jax.lax.while_loop(cond, body, (st0, jnp.int32(0)))
+        def cond(carry):
+            st, it, done = carry
+            return (it < n_steps) & ~done
+
+        st, _, _ = jax.lax.while_loop(
+            cond, body, (st0, jnp.int32(0), jnp.int32(0) >= n_valid))
+        max_deg = axis.pmax(st.max_deg)
+        if telemetry:
+            # each arrival's observation integrals accumulated on the single
+            # shard owning its server: the psum is a plain gather, bit-exact
+            st = st._replace(obs_co=axis.psum(st.obs_co),
+                             obs_lost=axis.psum(st.obs_lost),
+                             obs_logr=axis.psum(st.obs_logr))
+        st = st._replace(max_deg=max_deg)
+    else:
+        def body(carry):
+            st, it = carry
+            return event_step(st), it + 1
+
+        def cond(carry):
+            st, it = carry
+            return (it < n_steps) & ~is_done(st)
+
+        st, _ = jax.lax.while_loop(cond, body, (st0, jnp.int32(0)))
     return EngineTrace(st.placement, st.was_queued, st.place_time, st.finish_time,
                        st.makespan, st.max_deg, st.deadlock, st.obs_co, st.obs_lost,
                        st.obs_logr, st.metrics)
 
 
 @partial(jax.jit,
-         static_argnames=("objective", "scorer", "n_steps", "telemetry", "metrics"))
+         static_argnames=("objective", "scorer", "n_steps", "telemetry",
+                          "metrics", "axis"))
 def run_trace(
     cluster: PackedCluster,
     dyn: PackedDynamics,
@@ -555,6 +688,7 @@ def run_trace(
     n_steps: int | None = None,
     telemetry: bool = False,
     metrics: bool = False,
+    axis=None,
 ) -> EngineTrace:
     """Run one arrival trace to completion entirely on device.
 
@@ -588,11 +722,42 @@ def run_trace(
     returns it on ``EngineTrace.metrics``. Purely additive to the carry:
     decisions are unchanged, and with the flag off the slot is ``None`` --
     an empty pytree -- so the compiled program is byte-identical.
+
+    ``axis`` (a :class:`~repro.distributed.server_axis.ServerAxis`) shards
+    every ``[m, ...]`` input over its mesh and runs the event loop SPMD:
+    each shard scores and books its own servers, and only the per-event
+    scalars (winning score/index, earliest finish, any-active) cross the
+    mesh. ``None``/dense lowers to the byte-identical single-device program.
     """
-    return _trace_segment(
-        cluster, dyn, arr_time, arr_type, arr_bytes,
-        jnp.int32(arr_time.shape[0]), objective=objective, scorer=scorer,
-        n_steps=n_steps, telemetry=telemetry, metrics=metrics)
+    if axis is None or not axis.is_sharded:
+        return _trace_segment(
+            cluster, dyn, arr_time, arr_type, arr_bytes,
+            jnp.int32(arr_time.shape[0]), objective=objective, scorer=scorer,
+            n_steps=n_steps, telemetry=telemetry, metrics=metrics)
+
+    m_g = cluster.m
+    axis.validate(m_g)
+
+    def seg(cluster_l, dyn_l, a_time, a_type, a_bytes, n_valid):
+        return _trace_segment(
+            cluster_l, dyn_l, a_time, a_type, a_bytes, n_valid,
+            objective=objective, scorer=scorer, n_steps=n_steps,
+            telemetry=telemetry, metrics=metrics, axis=axis)
+
+    out_specs = EngineTrace(
+        placement=axis.rep(), was_queued=axis.rep(), place_time=axis.rep(),
+        finish_time=axis.rep(), makespan=axis.rep(), max_deg=axis.rep(),
+        deadlock=axis.rep(), obs_co=axis.rep(), obs_lost=axis.rep(),
+        obs_logr=axis.rep(),
+        metrics=obs_metrics.frame_specs(axis) if metrics else None)
+    mapped = axis.shard_map(
+        seg,
+        in_specs=(axis.shard_leading(cluster, m_g),
+                  axis.shard_leading(dyn, m_g),
+                  axis.rep(), axis.rep(), axis.rep(), axis.rep()),
+        out_specs=out_specs)
+    return mapped(cluster, dyn, arr_time, arr_type, arr_bytes,
+                  jnp.int32(arr_time.shape[0]))
 
 
 # --- array-native local search (core/refine.py's device backend) ----------------

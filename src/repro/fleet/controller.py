@@ -44,7 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Hashable, Literal, NamedTuple, Sequence
+from typing import TYPE_CHECKING, Hashable, Literal, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -53,15 +53,13 @@ import numpy as np
 from ..configs.base import MeshConfig
 from ..core.criteria import eviction_rate_floor
 from ..core.server import ServerSpec
-from ..distributed.fault_tolerance import (
-    HeartbeatMonitor,
-    ReMeshPlan,
-    plan_elastic_remesh,
-)
 from ..telemetry.estimator import DeviceEstimatorState, StreamingEstimator
 from ..telemetry.log import RingBlock
 from .detect import CusumState, DriftDetector
 from .pool import PooledEstimatorBank
+
+if TYPE_CHECKING:  # deferred: distributed.__init__ imports back into fleet
+    from ..distributed.fault_tolerance import HeartbeatMonitor, ReMeshPlan
 
 
 @jax.jit
@@ -108,6 +106,7 @@ def fleet_step(
     level_decay: float,
     fail_floor: float,
     min_exposure: float,
+    axis=None,
 ) -> FleetStepOut:
     """``FleetController.observe``'s decision logic as a traceable program.
 
@@ -144,9 +143,27 @@ def fleet_step(
     fire would see pre-action state, so "no action under pre-action state"
     means no action at all -- and the quiet segment (the steady state) pays
     for two [m]-length loop dispatches only when something actually moves.
+
+    With a sharded ``axis`` (the caller runs this under ``shard_map``),
+    ``bank``/``det`` hold the shard's local rows while the routing arrays
+    stay replicated. Fleet policy is inherently global (the failure median,
+    live pool membership across the action loops), so the *small* per-server
+    tables -- detector state and the bank's [m, T] base-rate columns, never
+    the [m, T, T] estimators -- are allgathered once, the identical decision
+    program runs replicated on every shard, and only the final bank-row
+    gather is localized (pool locality keeps ``src_of`` shard-diagonal).
     """
+    sharded = axis is not None and axis.is_sharded
+    if sharded:
+        m_loc = int(bank.log_b.shape[0])
+        lo = axis.offset(m_loc)
+        det = jax.tree_util.tree_map(axis.all_gather, det)
+        bank_lb = axis.all_gather(bank.log_b)
+        bank_nb = axis.all_gather(bank.n_base)
+    else:
+        bank_lb, bank_nb = bank.log_b, bank.n_base
     m = int(row_map.shape[0])
-    rows_cap = int(bank.log_b.shape[0])
+    rows_cap = int(bank_lb.shape[0])
     rows_n = int(det.pool_level.shape[0])
     idx_m = jnp.arange(m, dtype=jnp.int32)
     ident = jnp.arange(rows_cap, dtype=jnp.int32)
@@ -187,7 +204,7 @@ def fleet_step(
         # _base_ratio on the (post-split) bank, content resolved through
         # src_of; the prior stays the reading row's own
         rr = jnp.clip(read_row, 0, rows_cap - 1)
-        lb, wexp = bank.log_b[src_of[rr]], bank.n_base[src_of[rr]]
+        lb, wexp = bank_lb[src_of[rr]], bank_nb[src_of[rr]]
         tot = wexp.sum(axis=1)
         ratio = jnp.exp((wexp * (lb - logb_priors[rr])).sum(axis=1)
                         / jnp.maximum(tot, 1e-12))
@@ -279,11 +296,18 @@ def fleet_step(
                 (src_of, det, row_map, read_row, active,
                  jnp.zeros((m,), bool), jnp.zeros((m,), jnp.float32))))
 
+        if sharded:
+            # pool locality keeps every copy within its shard: the local
+            # slice of src_of rebases to local row indices, and the big
+            # [m_loc, T, T] tables never cross the mesh
+            src_l = jnp.clip(
+                jax.lax.dynamic_slice_in_dim(src_of, lo, m_loc) - lo,
+                0, m_loc - 1)
+            gather = lambda b: DeviceEstimatorState(*(a[src_l] for a in b))
+        else:
+            gather = lambda b: DeviceEstimatorState(*(a[src_of] for a in b))
         bank2 = jax.lax.cond(
-            jnp.any(src_of != ident),
-            lambda b: DeviceEstimatorState(*(a[src_of] for a in b)),
-            lambda b: b,
-            bank)
+            jnp.any(src_of != ident), gather, lambda b: b, bank)
         return FleetStepOut(
             bank=bank2, det=det, row_map=row_map, read_row=read_row,
             active=active, split_fired=split_fired, split_stat=split_stat,
@@ -299,8 +323,13 @@ def fleet_step(
             evict_fired=quiet, evict_stat=jnp.zeros((m,), jnp.float32),
             evict_route=level_hits)
 
-    return jax.lax.cond(take_slow, slow, fast,
-                        (bank, det, row_map, read_row, active))
+    out = jax.lax.cond(take_slow, slow, fast,
+                       (bank, det, row_map, read_row, active))
+    if sharded:
+        # routing ran on the gathered detector; hand back this shard's rows
+        out = out._replace(det=jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, lo, m_loc), out.det))
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -407,6 +436,8 @@ class FleetController:
             m=m, k=self.cusum_k, h=self.cusum_h,
             level_decay=self.level_decay, fail_floor=self.fail_floor,
             min_exposure=self.min_exposure, max_lost_frac=self.max_lost_frac)
+        from ..distributed.fault_tolerance import HeartbeatMonitor
+
         self.monitor = HeartbeatMonitor(m, timeout_s=self._heartbeat_timeout)
         self._active = np.ones(m, bool)
         # nominal per-row log base priors, stacked once: priors are fixed at
@@ -591,6 +622,8 @@ class FleetController:
                                           detail=detail))
                 self.monitor.mark_dead(s)
                 if self.mesh is not None:
+                    from ..distributed.fault_tolerance import plan_elastic_remesh
+
                     plan = plan_elastic_remesh(self.mesh, [s])
                     if plan is not None:
                         self.plans.append(plan)
@@ -620,6 +653,8 @@ class FleetController:
         self.detector.reset(server)
         self.monitor.mark_dead(server)
         if self.mesh is not None:
+            from ..distributed.fault_tolerance import plan_elastic_remesh
+
             plan = plan_elastic_remesh(self.mesh, [server])
             if plan is not None:
                 self.plans.append(plan)

@@ -143,6 +143,48 @@ def _cusum_update(
     return CusumState(stat, level, n, pool_level, pool_n), valid.sum()
 
 
+def cusum_update_sharded(
+    axis, state: CusumState, block: RingBlock, log_b, L_t, row_map,
+    *, k: float, level_decay: float, max_lost_frac: float,
+):
+    """``_cusum_update`` with detector rows + pooled tables sharded.
+
+    Requires the pool-locality contract (DESIGN.md section 15): every pool
+    lives whole inside one shard, so ``row_map[s]`` points into the shard
+    that owns server ``s``. Each shard then folds the *full* replicated
+    block in stream order with off-shard rows masked to the dropped index --
+    every (server, pool-row) state sees exactly the dense sequence of
+    updates, bitwise (a row that crossed shards would instead be silently
+    dropped by the localized range mask; the pool layer never builds one).
+    Only the consumed-row count crosses the mesh. A dense axis is the plain
+    jitted update, untouched.
+    """
+    if not axis.is_sharded:
+        return _cusum_update(state, block, log_b, L_t, row_map, k=k,
+                             level_decay=level_decay,
+                             max_lost_frac=max_lost_frac)
+    m = row_map.shape[0]
+    axis.validate(m)
+    m_local = axis.local_m(m)
+
+    def body(state_l, block, log_b_l, L_t_l, row_map):
+        lo = axis.offset(m_local)
+        row_l = jax.lax.dynamic_slice_in_dim(row_map, lo, m_local) - lo
+        block_l = block._replace(
+            ints=jnp.stack([block.wtype, block.server - lo], axis=1))
+        new, used = _cusum_update(state_l, block_l, log_b_l, L_t_l, row_l,
+                                  k=k, level_decay=level_decay,
+                                  max_lost_frac=max_lost_frac)
+        return new, axis.psum(used)
+
+    mapped = axis.shard_map(
+        body,
+        in_specs=(axis.shard_leading(state, m), axis.rep_tree(block),
+                  axis.spec(), axis.spec(), axis.rep()),
+        out_specs=(axis.shard_leading(state, m), axis.rep()))
+    return mapped(state, block, log_b, L_t, row_map)
+
+
 @jax.jit
 def _reset_rows(state: CusumState, servers) -> CusumState:
     # per-server state only: pool_level rows are shared (a split or evicted

@@ -45,18 +45,62 @@ from ..telemetry.estimator import EstimatorBank, StreamingEstimator
 from ..telemetry.log import RingBlock
 
 
+def shard_local_pools(pools: "Sequence[Hashable]", m: int,
+                      shards: int) -> list:
+    """Namespace pool labels by shard so no pool crosses a shard boundary.
+
+    The sharded detector/bank contract (DESIGN.md section 15) is that
+    ``row_map[s]`` stays inside server ``s``'s shard -- CUSUM pool rows and
+    bank row-copies are then shard-local and the sharded update is bitwise
+    the dense one. Two same-spec servers on different shards become two
+    pools; the pooling win shrinks at shard boundaries instead of the
+    correctness breaking there.
+    """
+    if m % shards:
+        raise ValueError(f"m={m} not divisible by shards={shards}")
+    m_local = m // shards
+    return [(s // m_local, lab) for s, lab in enumerate(pools)]
+
+
+def resolve_leaders_device(axis, pool_ids):
+    """Device-side leader election: ``row_map`` from per-shard pool ids.
+
+    ``pool_ids`` is i32[m] (sharded over ``axis`` or dense): servers sharing
+    an id share a pool, negative ids are dropped servers. Exactly one
+    allgather moves the ids across the mesh; every shard then resolves each
+    server to the *lowest* member index of its pool (the host constructor's
+    ``leader.setdefault`` rule) on the replicated [m] vector. O(m^2) compare
+    -- leader election runs at fleet-management frequency, not per decision.
+    Returns the replicated row_map i32[m].
+    """
+
+    def body(ids_l):
+        ids = axis.all_gather(ids_l)
+        eq = ids[None, :] == ids[:, None]
+        first = jnp.argmax(eq, axis=1).astype(jnp.int32)
+        return jnp.where(ids >= 0, first, -1)
+
+    mapped = axis.shard_map(body, in_specs=(axis.spec(),),
+                            out_specs=axis.rep())
+    return mapped(pool_ids)
+
+
 class PooledEstimatorBank:
     """An :class:`EstimatorBank` routed through a mutable server -> row map.
 
     ``pools`` labels each server with an arbitrary hashable pool id (servers
     sharing a label share a row); ``None`` puts every server in its own pool
-    (plain per-server estimation through the same code path).
+    (plain per-server estimation through the same code path). ``axis`` (a
+    :class:`~repro.distributed.server_axis.ServerAxis`) namespaces the
+    labels per shard via :func:`shard_local_pools`, enforcing the
+    pool-locality contract the sharded closed loop relies on.
     """
 
     def __init__(
         self,
         estimators: Sequence[StreamingEstimator],
         pools: Sequence[Hashable] | None = None,
+        axis=None,
     ):
         self.bank = EstimatorBank(list(estimators))
         m = len(self.bank.estimators)
@@ -64,6 +108,8 @@ class PooledEstimatorBank:
             pools = list(range(m))
         if len(pools) != m:
             raise ValueError(f"{len(pools)} pool labels for {m} estimators")
+        if axis is not None and axis.is_sharded:
+            pools = shard_local_pools(list(pools), m, axis.shards)
         leader: dict[Hashable, int] = {}
         self.row_of = np.empty(m, np.int32)  # -1 once dropped
         for s, lab in enumerate(pools):

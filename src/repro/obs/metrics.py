@@ -146,6 +146,16 @@ def zeros(m: int) -> MetricFrame:
     )
 
 
+def frame_specs(axis) -> MetricFrame:
+    """PartitionSpec pytree for a frame on a ServerAxis: the per-server
+    columns shard with their servers, everything else replicates (each
+    shard records fleet-global counters/histograms identically -- commit
+    decisions are broadcast, so the scalar streams match bitwise)."""
+    return MetricFrame(
+        counters=axis.rep(), gauges=axis.rep(), hist=axis.rep(),
+        per_server=axis.spec())
+
+
 # ---------------------------------------------------------------------------
 # Pure record ops -- safe inside jit / while_loop / scan bodies.
 # ---------------------------------------------------------------------------

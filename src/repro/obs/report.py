@@ -53,15 +53,56 @@ def percentile_table(frame: M.MetricFrame,
     return "\n".join(lines)
 
 
-def per_server_table(frame: M.MetricFrame) -> str:
-    """One row per server; '!' flags servers that violated the paper's
-    utilization floor (observed slot degradation above the limit)."""
-    cols = {n: M.server_values(frame, n) for n in M.PER_SERVER}
-    lines = ["  server  " + " ".join(f"{n:>16}" for n in M.PER_SERVER)]
-    for s in range(frame.m):
+#: fleets up to this size render one row per server; past it the table
+#: switches to pod rollups + the top-k busiest rows (a 10k-server fleet
+#: would otherwise print 10k lines nobody reads)
+FULL_TABLE_MAX = 64
+
+
+def _server_rows(cols, servers) -> list:
+    lines = []
+    for s in servers:
         flag = "!" if cols["floor_violations"][s] > 0 else " "
         lines.append(f"  {s:>5}{flag}  " + " ".join(
             f"{cols[n][s]:>16.0f}" for n in M.PER_SERVER))
+    return lines
+
+
+def per_server_table(frame: M.MetricFrame, top_k: int = 16,
+                     pods: "int | None" = None) -> str:
+    """Per-server placement/finish/violation columns; '!' flags servers that
+    violated the paper's utilization floor.
+
+    Fleets up to ``FULL_TABLE_MAX`` servers get the classic one-row-per-
+    server table. Larger fleets get pod rollups (sum per contiguous pod,
+    with the pod count taken from ``pods`` or defaulted to ~32 servers per
+    pod) followed by the ``top_k`` busiest servers by placements -- the rows
+    an operator actually scans for hot spots.
+    """
+    cols = {n: M.server_values(frame, n) for n in M.PER_SERVER}
+    header = ["  server  " + " ".join(f"{n:>16}" for n in M.PER_SERVER)]
+    m = frame.m
+    if m <= FULL_TABLE_MAX:
+        return "\n".join(header + _server_rows(cols, range(m)))
+
+    if pods is None or pods <= 1 or m % pods:
+        pods = max(1, m // 32)
+        while m % pods:
+            pods -= 1
+    S = m // pods
+    lines = [f"  pod rollups ({pods} pods x {S} servers):"]
+    lines += ["  pod     " + " ".join(f"{n:>16}" for n in M.PER_SERVER)]
+    for p in range(pods):
+        sums = {n: float(cols[n][p * S:(p + 1) * S].sum())
+                for n in M.PER_SERVER}
+        flag = "!" if sums["floor_violations"] > 0 else " "
+        lines.append(f"  {p:>5}{flag}  " + " ".join(
+            f"{sums[n]:>16.0f}" for n in M.PER_SERVER))
+    busy = np.argsort(-np.asarray(cols["placements"]),
+                      kind="stable")[:min(top_k, m)]
+    lines += ["", f"  top {len(busy)} busiest servers (by placements):"]
+    lines += header
+    lines += _server_rows(cols, (int(s) for s in busy))
     return "\n".join(lines)
 
 

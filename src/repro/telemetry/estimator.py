@@ -639,6 +639,48 @@ def _remap_rows(block: RingBlock, row_map) -> RingBlock:
     return block._replace(ints=jnp.stack([block.wtype, row], axis=1))
 
 
+def _localize_block(block: RingBlock, lo) -> RingBlock:
+    """Rebase a block's server column to this shard's slice.
+
+    Off-shard rows land outside ``[0, m_local)`` and are dropped by the
+    core's own range mask (`-1` voids stay negative on every shard); each
+    observation therefore updates exactly one shard's rows, which keeps the
+    sharded bank bitwise-equal to the dense one row by row.
+    """
+    return block._replace(
+        ints=jnp.stack([block.wtype, block.server - lo], axis=1))
+
+
+def bank_update_sharded(axis, state: DeviceEstimatorState, block: RingBlock,
+                        **hypers):
+    """``_update_bank`` with the bank rows sharded over a ``ServerAxis``.
+
+    The block replicates (it is small: B rows of O(T)), the [m, ...] state
+    shards by row, and every shard runs the *same* fused core on its slice
+    with the server column rebased -- per-row arithmetic, scatter order and
+    triangular decay weights are all shard-local, so each bank row's update
+    is bitwise the dense one. Only the consumed-row count crosses the mesh
+    (one ``psum``). A dense axis calls ``_update_bank`` directly: the
+    single-device program is untouched.
+    """
+    if not axis.is_sharded:
+        return _update_bank(state, block, **hypers)
+    m = state.log_b.shape[0]
+    axis.validate(m)
+    m_local = axis.local_m(m)
+
+    def body(state_l, block):
+        block_l = _localize_block(block, axis.offset(m_local))
+        new, used = _bank_core(state_l, block_l, **hypers)
+        return new, axis.psum(used)
+
+    mapped = axis.shard_map(
+        body,
+        in_specs=(axis.shard_leading(state, m), axis.rep_tree(block)),
+        out_specs=(axis.shard_leading(state, m), axis.rep()))
+    return mapped(state, block)
+
+
 class EstimatorBank:
     """m per-server :class:`StreamingEstimator`\\ s updated by one program.
 

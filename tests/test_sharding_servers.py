@@ -1,0 +1,253 @@
+"""Shard-boundary invariance of the server axis (PR 9).
+
+The ServerAxis contract: sharding the ``[m, ...]`` server arrays over 1, 2,
+or 4 devices must not change a single scheduling decision -- placements
+bitwise-equal to the dense program, estimator-bank posterior and CUSUM
+detector state equal to 1e-5. The multi-device matrix runs in a subprocess
+(``--xla_force_host_platform_device_count`` must be set before jax imports;
+the main pytest process keeps its single device); the dense-axis algebra
+(pod hierarchy vs flat scan, pool namespacing, axis validation) is
+property-tested in-process.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+# --- in-process: ServerAxis helpers + hierarchy-vs-dense ----------------------
+
+
+def test_server_axis_dense_contract():
+    from repro.distributed.server_axis import DENSE, ServerAxis
+
+    assert not DENSE.is_sharded and DENSE.shards == 1 and DENSE.pods == 1
+    assert DENSE.local_m(16) == 16 and DENSE.offset(16) == 0
+    DENSE.validate(16)
+    ax = ServerAxis(pods=4)
+    ax.validate(16)
+    with pytest.raises(ValueError):
+        ax.validate(6)  # 6 % 4 != 0
+    # dense axis collectives are identities
+    x = np.arange(4.0)
+    assert np.array_equal(np.asarray(DENSE.pmin(x)), x)
+    assert np.array_equal(np.asarray(DENSE.psum(x)), x)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_shard_local_pools_stay_local(shards, seed):
+    """Every namespaced pool must live wholly inside one shard."""
+    from repro.fleet.pool import shard_local_pools
+
+    m = 16
+    rng = np.random.default_rng(seed)
+    pools = [f"p{rng.integers(0, 4)}" for _ in range(m)]
+    local = shard_local_pools(pools, m, shards)
+    m_local = m // shards
+    for s, lab in enumerate(local):
+        members = [i for i, l in enumerate(local) if l == lab]
+        assert {i // m_local for i in members} == {s // m_local}
+
+
+def _small_cluster(m, seed):
+    from repro.core import M1, M2, PackedCluster, profile_pairwise_fast
+
+    rng = np.random.default_rng(seed)
+    jitter = rng.uniform(0.9, 1.1, m)
+    servers = [
+        dataclasses.replace([M1, M2][i % 2],
+                            llc_bytes=[M1, M2][i % 2].llc_bytes * jitter[i])
+        for i in range(m)]
+    D2 = [profile_pairwise_fast(M1), profile_pairwise_fast(M2)]
+    return PackedCluster.build(servers, D2 * (m // 2), alpha=1.3)
+
+
+@pytest.mark.parametrize("pods", [2, 4, 8])
+def test_hier_decisions_match_dense(pods):
+    """Pod-hierarchical greedy == flat dense greedy, bitwise placements."""
+    import jax.numpy as jnp
+
+    from repro.core import counts_from_assignments, greedy_sequence_jax, type_index
+    from repro.core.binpack_jax import greedy_sequence_hier
+    from repro.core.workload import FS_GRID, RS_GRID, Workload, snap_to_grid
+    from repro.distributed.server_axis import ServerAxis
+
+    m = 16
+    cluster = _small_cluster(m, seed=5)
+    c0 = counts_from_assignments(cluster, [[] for _ in range(m)])
+    rng = np.random.default_rng(9)
+    wl = [snap_to_grid(Workload(fs=float(rng.choice(FS_GRID[:18])),
+                                rs=float(rng.choice(RS_GRID))))
+          for _ in range(48)]
+    wtypes = jnp.asarray([type_index(w) for w in wl])
+    _, p_dense = greedy_sequence_jax(cluster, c0, wtypes)
+    cf, p_hier = greedy_sequence_hier(cluster, c0, wtypes, ServerAxis(pods=pods))
+    assert np.array_equal(np.asarray(p_dense), np.asarray(p_hier))
+    # final counts agree too (same placements, same scatter)
+    cf_dense, _ = greedy_sequence_jax(cluster, c0, wtypes)
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(cf_dense))
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_hier_decisions_match_dense_prop(seed):
+    import jax.numpy as jnp
+
+    from repro.core import counts_from_assignments, greedy_sequence_jax
+    from repro.core.binpack_jax import greedy_sequence_hier
+    from repro.distributed.server_axis import ServerAxis
+
+    m = 8
+    cluster = _small_cluster(m, seed=seed)
+    c0 = counts_from_assignments(cluster, [[] for _ in range(m)])
+    rng = np.random.default_rng(seed)
+    wtypes = jnp.asarray(rng.integers(0, cluster.T, 24).astype(np.int32))
+    _, p_dense = greedy_sequence_jax(cluster, c0, wtypes)
+    _, p_hier = greedy_sequence_hier(cluster, c0, wtypes, ServerAxis(pods=4))
+    assert np.array_equal(np.asarray(p_dense), np.asarray(p_hier))
+
+
+# --- subprocess: 1/2/4-shard invariance of the full stack ---------------------
+
+PROBE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses as dc
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.closed_loop import (ClosedLoopConfig, LoopCarry, SegmentIn,
+                                        run_closed_loop)
+    from repro.core.binpack_jax import PackedCluster
+    from repro.core.engine_jax import PackedDynamics, run_trace
+    from repro.core.server import M1, M2
+    from repro.fleet.detect import CusumState
+    from repro.telemetry.estimator import DeviceEstimatorState
+    from repro.telemetry.log import RingBlock
+    from repro.distributed.server_axis import ServerAxis
+    import repro.obs.metrics as OM
+
+    T = 23
+    m, n_seg, S_cap, cap = 8, 4, 4, 256
+    R = n_seg
+    rng = np.random.default_rng(7)
+
+    servers = [dc.replace([M1, M2][i % 2], name=f"s{i}") for i in range(m)]
+    c0 = PackedCluster.build(
+        servers, [np.full((230, 230), 0.05, np.float32)] * m, alpha=1.3)
+    cluster = dc.replace(
+        c0, D=jnp.asarray(rng.uniform(0, 0.1, (m, T, T)).astype(np.float32)),
+        rs=c0.rs[:T], fs=c0.fs[:T], resident=c0.resident[:, :T])
+
+    logd = rng.uniform(-0.2, -0.01, (m, T, T)).astype(np.float32)
+    dyn = PackedDynamics(
+        solo=jnp.asarray(rng.uniform(5e5, 2e6, (m, T)).astype(np.float32)),
+        base_lost=jnp.asarray(rng.uniform(1e5, 5e5, (m, T)).astype(np.float32)),
+        log_keep=jnp.asarray(logd), log_lost=jnp.asarray(logd * 2.0),
+        comp_bytes=jnp.asarray(rng.uniform(5e4, 2e5, (m, T)).astype(np.float32)),
+        tol_budget=jnp.asarray(rng.uniform(5e6, 2e7, (m,)).astype(np.float32)))
+
+    # --- engine: run_trace dense vs 1/2/4 shards -----------------------------
+    n = 24
+    arr_time = jnp.asarray(np.sort(rng.uniform(0, 2, n)).astype(np.float32))
+    arr_type = jnp.asarray(rng.integers(0, T, n).astype(np.int32))
+    arr_bytes = jnp.asarray(rng.uniform(2e5, 2e6, n).astype(np.float32))
+    ref = run_trace(cluster, dyn, arr_time, arr_type, arr_bytes,
+                    telemetry=True, metrics=True)
+    ref = jax.tree_util.tree_map(np.asarray, ref)
+    for shards in (1, 2, 4):
+        ax = ServerAxis.over_host_devices(shards)
+        out = run_trace(cluster, dyn, arr_time, arr_type, arr_bytes,
+                        telemetry=True, metrics=True, axis=ax)
+        out = jax.tree_util.tree_map(np.asarray, out)
+        assert np.array_equal(ref.placement, out.placement), (shards,)
+        np.testing.assert_allclose(ref.finish_time, out.finish_time, rtol=1e-5)
+        np.testing.assert_allclose(ref.obs_logr, out.obs_logr,
+                                   rtol=1e-5, atol=1e-6)
+        assert np.array_equal(ref.metrics.counters, out.metrics.counters)
+        print(f"run_trace shards={shards}: OK")
+
+    # --- closed loop: fleet controller + metrics, dense vs 1/2/4 shards ------
+    bank = DeviceEstimatorState(
+        L_t=jnp.zeros((m, T, T)), log_b=jnp.zeros((m, T)),
+        n_pair_t=jnp.zeros((m, T, T)), n_base=jnp.zeros((m, T)),
+        n_obs=jnp.zeros((m,), jnp.int32))
+    ring = RingBlock(
+        ints=jnp.full((cap, 2), -1, jnp.int32),
+        scalars=jnp.zeros((cap, 6), jnp.float32),
+        co=jnp.zeros((cap, T), jnp.float32))
+    row_map = jnp.asarray((np.arange(m) // 2 * 2).astype(np.int32))
+    carry0 = LoopCarry(
+        bank=bank, det=CusumState.zeros(m),
+        row_map=row_map, read_row=row_map,
+        active=jnp.ones((m,), bool), seen=jnp.int32(0),
+        req_type=jnp.zeros((R,), jnp.int32),
+        req_bytes=jnp.ones((R,), jnp.float32), req_n=jnp.int32(0),
+        ring=ring, ring_ptr=jnp.int32(0), ring_total=jnp.int32(0),
+        metrics=OM.zeros(m))
+    xs = SegmentIn(
+        arr_time=jnp.asarray(
+            np.sort(rng.uniform(0, 2, (S_cap, n_seg)), axis=1)
+            .astype(np.float32)),
+        arr_type=jnp.asarray(rng.integers(0, T, (S_cap, n_seg))
+                             .astype(np.int32)),
+        arr_bytes=jnp.asarray(rng.uniform(2e5, 2e6, (S_cap, n_seg))
+                              .astype(np.float32)),
+        dyn_idx=jnp.zeros((S_cap,), jnp.int32),
+        seg_valid=jnp.ones((S_cap,), bool))
+    dyn_stack = jax.tree_util.tree_map(lambda a: a[None], dyn)
+    Lp_t = jnp.full((m, T, T), float(np.log1p(-0.05)), jnp.float32)
+    logb = jnp.asarray(np.log(rng.uniform(5e5, 2e6, (m, T))).astype(np.float32))
+
+    cfg = ClosedLoopConfig(fleet=True, metrics=True, warmup_segments=1,
+                           cusum_h=0.5)
+    ref_c, ref_y = run_closed_loop(cluster, dyn_stack, Lp_t, logb, carry0,
+                                   xs, cfg)
+    ref_c = jax.tree_util.tree_map(np.asarray, ref_c)
+    ref_y = jax.tree_util.tree_map(np.asarray, ref_y)
+    for shards in (1, 2, 4):
+        ax = ServerAxis.over_host_devices(shards)
+        out_c, out_y = run_closed_loop(cluster, dyn_stack, Lp_t, logb, carry0,
+                                       xs, dc.replace(cfg, axis=ax))
+        out_c = jax.tree_util.tree_map(np.asarray, out_c)
+        out_y = jax.tree_util.tree_map(np.asarray, out_y)
+        assert np.array_equal(ref_y.placement, out_y.placement), (shards,)
+        assert np.array_equal(ref_c.row_map, out_c.row_map), (shards,)
+        assert np.array_equal(ref_c.active, out_c.active), (shards,)
+        assert np.array_equal(ref_y.split_fired, out_y.split_fired), (shards,)
+        assert np.array_equal(ref_y.evict_fired, out_y.evict_fired), (shards,)
+        np.testing.assert_allclose(ref_c.bank.log_b, out_c.bank.log_b,
+                                   rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(ref_c.bank.L_t, out_c.bank.L_t,
+                                   rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(ref_c.det.stat, out_c.det.stat,
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(ref_c.det.level, out_c.det.level,
+                                   rtol=1e-5, atol=1e-6)
+        assert np.array_equal(ref_c.ring.ints, out_c.ring.ints), (shards,)
+        assert np.array_equal(ref_c.metrics.counters,
+                              out_c.metrics.counters), (shards,)
+        np.testing.assert_allclose(ref_c.metrics.per_server,
+                                   out_c.metrics.per_server, atol=1e-6)
+        print(f"closed_loop shards={shards}: OK")
+    print("SERVER-SHARD-INVARIANCE OK")
+    """)
+
+
+@pytest.mark.slow
+def test_server_axis_shard_invariance_multidev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "") + os.pathsep + os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", PROBE], capture_output=True,
+                       text=True, env=env, timeout=560)
+    assert "SERVER-SHARD-INVARIANCE OK" in r.stdout, (
+        r.stdout + "\n" + r.stderr[-3000:])
