@@ -1,21 +1,27 @@
-"""Metrics-plane overhead: device loop with in-carry counters on vs off.
+"""Observability-plane overhead: device loop with in-carry counters (and
+the decision flight recorder) on vs off.
 
 The PR-8 tentpole threads a ``MetricFrame`` (counters, high-water gauges,
 log-binned histograms, per-server columns) through the fused closed loop's
 carry. The instrumentation is a handful of scatter-adds per event against a
 scan body dominated by the O(m*T^2) estimator update, so it should be close
-to free -- this benchmark holds it to that claim.
+to free -- this benchmark holds it to that claim. The decision flight
+recorder (``obs.recorder``, one packed provenance row per placement riding
+the same carry behind ``record=``) gets the identical treatment and the
+identical bar.
 
 Protocol mirrors ``benchmarks/closed_loop.py``: identical arrivals, separate
 engines per configuration (one compile cache each, no cross-warming), warm
 once to exclude compilation, then min-of-reps wall clock per full device-loop
-run. The acceptance gate is metrics-on overhead <= 5% of the metrics-off
-per-segment time at the 16-server tier.
+run. The acceptance gates are metrics-on overhead <= 5% and recorder-on
+overhead <= 5% of the all-off per-segment time at the 16-server tier.
 
-Two honesty checks ride along: the metrics-on run's counters are compared
+Honesty checks ride along: the metrics-on run's counters are compared
 against host-visible oracle counts (arrivals/segments/placements from the
-returned segments), and the on-run's frame is flattened into the BENCH
-records via ``snapshot_records`` so the JSON shows what a run report carries.
+returned segments), the recorder-on run's ring must reconstruct every
+placement of its own run (``obs.explain.check_reconstruction``), and the
+on-run's frame is flattened into the BENCH records via ``snapshot_records``
+so the JSON shows what a run report carries.
 
 ``--smoke`` shrinks to the 3-server tier with a handful of segments.
 """
@@ -56,15 +62,16 @@ def _engine(m: int) -> AdaptiveEngine:
                           ring_capacity=256)
 
 
-def _time_path(m, n_seg, segments, metrics, reps=REPS):
+def _time_path(m, n_seg, segments, metrics, record=False, reps=REPS):
     arr = _arrivals(0, n_seg, segments)
     eng = _engine(m)
-    eng.run(arr, segments=segments, device_loop=True, metrics=metrics)
+    eng.run(arr, segments=segments, device_loop=True, metrics=metrics,
+            record=record)
     ts = []
     for _ in range(reps):
         t0 = time.perf_counter()
         res = eng.run(arr, segments=segments, device_loop=True,
-                      metrics=metrics)
+                      metrics=metrics, record=record)
         ts.append(time.perf_counter() - t0)
     return min(ts) / segments, res
 
@@ -81,18 +88,38 @@ def _check_counters(res, n_arrivals: int, segments: int) -> "list[str]":
             if M.counter_value(frame, name) != want]
 
 
+def _check_recorder(res) -> "list[str]":
+    """The recorder-on run's ring vs the host-visible placements."""
+    from repro.obs.explain import check_reconstruction
+
+    if res.decisions is None:
+        return ["record=True returned no decision ring"]
+    return check_reconstruction(
+        res.decisions, [seg.placements for seg in res.segments])
+
+
 def _tier(emit, m, n_seg, segments, tag):
     off_s, _ = _time_path(m, n_seg, segments, metrics=False)
     on_s, on_res = _time_path(m, n_seg, segments, metrics=True)
+    rec_s, rec_res = _time_path(m, n_seg, segments, metrics=False,
+                                record=True)
     overhead = on_s / off_s - 1.0
+    rec_overhead = rec_s / off_s - 1.0
     emit(f"obs/off_{tag}", off_s * 1e6,
          f"m={m};jobs_per_seg={n_seg};segments={segments};"
          f"segs_per_s={1.0 / off_s:.1f}", unit="us_per_segment")
     emit(f"obs/on_{tag}", on_s * 1e6,
          f"m={m};jobs_per_seg={n_seg};segments={segments};"
          f"segs_per_s={1.0 / on_s:.1f}", unit="us_per_segment")
+    emit(f"obs/rec_{tag}", rec_s * 1e6,
+         f"m={m};jobs_per_seg={n_seg};segments={segments};recorder-on;"
+         f"segs_per_s={1.0 / rec_s:.1f}", unit="us_per_segment")
     emit(f"obs/overhead_{tag}", overhead,
          f"m={m};on/off-1;"
+         + (f"gate=<= {GATE_FRAC:.0%}" if m == GATE_M else "info"),
+         unit="frac")
+    emit(f"obs/rec_overhead_{tag}", rec_overhead,
+         f"m={m};rec/off-1;"
          + (f"gate=<= {GATE_FRAC:.0%}" if m == GATE_M else "info"),
          unit="frac")
     mismatches = _check_counters(on_res, n_seg * segments, segments)
@@ -100,22 +127,30 @@ def _tier(emit, m, n_seg, segments, tag):
          ";".join(mismatches) if mismatches
          else f"m={m};arrivals/segments/placements match host oracle",
          unit="bool")
-    return overhead, on_res
+    rec_fail = _check_recorder(rec_res)
+    emit(f"obs/recorder_faithful_{tag}", float(not rec_fail),
+         ";".join(f[:80] for f in rec_fail) if rec_fail
+         else f"m={m};ring reconstructs every placement",
+         unit="bool")
+    return overhead, rec_overhead, on_res
 
 
 def run(emit, smoke: bool = False):
     if smoke:
-        overhead, on_res = _tier(emit, 3, 2, 6, "m3")
+        _, _, on_res = _tier(emit, 3, 2, 6, "m3")
         for name, value, unit in snapshot_records(on_res.metrics):
             emit(name, value, "smoke device-loop metrics snapshot", unit=unit)
         return
     gate_res = None
     for m, n_seg, segments in TIERS:
-        overhead, on_res = _tier(emit, m, n_seg, segments, f"m{m}")
+        overhead, rec_overhead, on_res = _tier(emit, m, n_seg, segments,
+                                               f"m{m}")
         if m == GATE_M:
-            gate_res = (overhead, on_res)
-    overhead, on_res = gate_res
+            gate_res = (overhead, rec_overhead, on_res)
+    overhead, rec_overhead, on_res = gate_res
     emit("obs/gate_16server", float(overhead <= GATE_FRAC),
          f"overhead_m16={overhead:.4f};bar={GATE_FRAC}", unit="bool")
+    emit("obs/gate_recorder_16server", float(rec_overhead <= GATE_FRAC),
+         f"rec_overhead_m16={rec_overhead:.4f};bar={GATE_FRAC}", unit="bool")
     for name, value, unit in snapshot_records(on_res.metrics):
         emit(name, value, "16-server device-loop metrics snapshot", unit=unit)

@@ -1,6 +1,7 @@
 """Benchmark harness: one module per paper table/figure (DESIGN.md §7).
 
     PYTHONPATH=src python -m benchmarks.run [--only fig9] [--smoke] [--out-dir .]
+                                           [--compare <baseline-dir>]
 
 Output format: ``name,us_per_call,derived`` on stdout, plus one
 ``BENCH_<suite>.json`` per suite so the performance trajectory is tracked
@@ -10,6 +11,15 @@ every suite so a regression can be bisected straight from the JSON, and
 ``smoke`` marks reduced-size CI runs that must not be compared against full
 runs. ``--smoke`` is the PR-gate mode: every module shrinks its problem
 sizes enough to finish in CI while still exercising the full code path.
+
+``--compare <dir>`` diffs each freshly written suite against the
+``BENCH_<suite>.json`` in ``dir`` and exits non-zero on regression:
+time-unit records (``us_*``) past the suite's relative threshold
+(:data:`COMPARE_THRESHOLDS`), any ``bool`` record flipping, or any
+baseline record missing from the new run (a silently dropped gate is a
+regression too). Non-time value records are reported informationally only
+-- regret/ratio trajectories move for legitimate reasons and have their own
+in-suite gates. Smoke baselines only compare against smoke runs.
 """
 from __future__ import annotations
 
@@ -52,6 +62,54 @@ MODULES = [
 ]
 
 
+#: default relative regression threshold for time-unit records: smoke CI
+#: shares a noisy runner, so the gate is generous -- it exists to catch
+#: order-of-magnitude cliffs (an accidental retrace, a host sync in the hot
+#: loop), not single-digit-percent drift
+COMPARE_DEFAULT_THRESHOLD = 0.5
+#: per-suite overrides: suites timing very short kernels (sub-100us) see
+#: proportionally more scheduler noise
+COMPARE_THRESHOLDS = {
+    "scale": 0.75,
+    "telemetry": 0.75,
+    "obs": 0.75,
+    "closedloop": 0.75,
+}
+#: units where the value is a duration and bigger means slower
+TIME_UNITS = ("us_per_call", "us_per_segment", "us_total")
+
+
+def compare_suite(suite: str, baseline: dict, current: dict) -> "list[str]":
+    """Diff one suite's records against a baseline; returns regression
+    messages (empty = pass)."""
+    failures: list[str] = []
+    if bool(baseline.get("meta", {}).get("smoke")) != bool(
+            current.get("meta", {}).get("smoke")):
+        return [f"{suite}: smoke flag differs from baseline -- full and "
+                f"smoke runs are not comparable"]
+    base = {r["name"]: r for r in baseline.get("records", [])}
+    cur = {r["name"]: r for r in current.get("records", [])}
+    thr = COMPARE_THRESHOLDS.get(suite, COMPARE_DEFAULT_THRESHOLD)
+    for name, b in base.items():
+        c = cur.get(name)
+        if c is None:
+            failures.append(f"{suite}/{name}: present in baseline, missing "
+                            f"from this run")
+            continue
+        bv, cv = float(b["value"]), float(c["value"])
+        if b.get("unit") == "bool":
+            if cv != bv:
+                failures.append(
+                    f"{suite}/{name}: gate flipped {bv:g} -> {cv:g}")
+        elif b.get("unit") in TIME_UNITS and bv > 0:
+            rel = cv / bv - 1.0
+            if rel > thr:
+                failures.append(
+                    f"{suite}/{name}: {bv:g} -> {cv:g} {b['unit']} "
+                    f"(+{rel:.0%} exceeds the +{thr:.0%} gate)")
+    return failures
+
+
 def git_commit() -> str:
     try:
         return subprocess.run(
@@ -73,6 +131,9 @@ def main() -> None:
                          "(closed_loop: one warm device-loop dispatch)")
     ap.add_argument("--out-dir", default=str(pathlib.Path(__file__).resolve().parents[1]),
                     help="directory for BENCH_<suite>.json records")
+    ap.add_argument("--compare", default=None, metavar="BASELINE_DIR",
+                    help="diff each suite against BASELINE_DIR/BENCH_<suite>"
+                         ".json and exit non-zero on regression")
     args = ap.parse_args()
     out_dir = pathlib.Path(args.out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -97,6 +158,7 @@ def main() -> None:
                         "meta": derived})
 
     failures = []
+    regressions: list[str] = []
     for tag, mod in MODULES:
         if args.only and args.only not in tag:
             continue
@@ -111,11 +173,26 @@ def main() -> None:
             traceback.print_exc()
             emit(f"{tag}/ERROR", 0.0, repr(e)[:120])
         path = out_dir / f"BENCH_{tag}.json"
-        path.write_text(
-            json.dumps({"suite": tag, "meta": meta, "records": records}, indent=2)
-            + "\n")
+        suite = {"suite": tag, "meta": meta, "records": records}
+        path.write_text(json.dumps(suite, indent=2) + "\n")
+        if args.compare:
+            base_path = pathlib.Path(args.compare) / f"BENCH_{tag}.json"
+            if not base_path.exists():
+                print(f"compare: no baseline for {tag} "
+                      f"({base_path}), skipping")
+                continue
+            found = compare_suite(tag, json.loads(base_path.read_text()),
+                                  suite)
+            regressions.extend(found)
+            status = "ok" if not found else f"{len(found)} REGRESSION(S)"
+            print(f"compare: {tag:<12} vs {base_path}: {status}")
+    for r in regressions:
+        print(f"REGRESSION: {r}", file=sys.stderr)
     if failures:
         raise SystemExit(f"{len(failures)} benchmark modules failed: {[t for t, _ in failures]}")
+    if regressions:
+        raise SystemExit(
+            f"{len(regressions)} benchmark regressions vs {args.compare}")
 
 
 if __name__ == "__main__":

@@ -361,6 +361,37 @@ def _build_closed_loop_metrics():
     return fn, (cluster, dyn_stack, Lp_t, logb, carry, xs)
 
 
+def _build_run_trace_record():
+    """The recorder-instrumented event loop: same shapes as the plain entry,
+    with the decision flight recorder's ring threaded through the carry --
+    the provenance scatter per event must satisfy the same device-purity
+    contract as the loop it records (DESIGN.md section 16)."""
+    from ..core.engine_jax import run_trace
+
+    m, n = 4, 16
+    cluster, dyn = _cluster(m), _dynamics(m)
+    arr_time = jnp.cumsum(_f32((n,), 0.5))
+    arr_type = jnp.arange(n, dtype=jnp.int32) % _T
+    arr_bytes = _f32((n,), 1e6)
+    fn = lambda c, d, t, ty, b: run_trace(
+        c, d, t, ty, b, telemetry=True, record=True)
+    return fn, (cluster, dyn, arr_time, arr_type, arr_bytes)
+
+
+def _build_closed_loop_record():
+    """Recorder-on multi-segment loop (fleet + record): the ring rides the
+    scan carry next to the telemetry ring; the per-decision row writes are
+    part of the hot path when the flag is set."""
+    from ..core.closed_loop import ClosedLoopConfig, run_closed_loop
+    from ..obs import recorder as obs_recorder
+
+    fn_args = _build_closed_loop_metrics()
+    carry = fn_args[1][4]._replace(rec=obs_recorder.init(256))
+    config = ClosedLoopConfig(fleet=True, metrics=True, record=True)
+    fn = lambda c, d, lp, lb, cr, x: run_closed_loop(c, d, lp, lb, cr, x, config)
+    return fn, fn_args[1][:4] + (carry,) + fn_args[1][5:]
+
+
 def _server_axis_1():
     """A 1-device mesh ServerAxis: traces the full shard_map path (size-1
     collectives included) on any host, so the sharded entries stay
@@ -481,6 +512,10 @@ REGISTRY: tuple[HotEntry, ...] = (
              _build_run_trace_metrics),
     HotEntry("core.closed_loop.run_closed_loop[metrics]", TIER_DEVICE,
              _build_closed_loop_metrics),
+    HotEntry("engine_jax.run_trace[record]", TIER_DEVICE,
+             _build_run_trace_record),
+    HotEntry("core.closed_loop.run_closed_loop[record]", TIER_DEVICE,
+             _build_closed_loop_record),
     HotEntry("binpack_jax.greedy_sequence[sharded]", TIER_DEVICE,
              _build_greedy_sharded),
     HotEntry("core.closed_loop.run_closed_loop[sharded]", TIER_DEVICE,

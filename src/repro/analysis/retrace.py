@@ -168,6 +168,26 @@ def run_retrace_audit(stats: "dict | None" = None,
         obs_dev.run(dev_arrivals[:n_seg * 3], segments=3, device_loop=True,
                     metrics=True)
 
+    # decision recorder: ``record=True`` is one more static key on run_trace
+    # / one more field in the ClosedLoopConfig hash, same contract as the
+    # metrics plane -- the first recorder run traces once, after which
+    # recorder-on reruns (host alternating, then device loops at 2/3
+    # segments inside the warm 4-segment bucket) must add ZERO traces. The
+    # ring riding the carry moves values, never shapes.
+    rec_engine = _small_adaptive_engine()
+    with CompileCacheGuard() as rec_warm:
+        rec_engine.run(arrivals, segments=segments, record=True)
+    with CompileCacheGuard() as rec_rerun:
+        rec_engine.run(arrivals, segments=segments, record=True)
+    rec_dev = _small_adaptive_engine()
+    with CompileCacheGuard() as rec_dev_warm:
+        rec_dev.run(dev_arrivals, segments=4, device_loop=True, record=True)
+    with CompileCacheGuard() as rec_dev_rerun:
+        rec_dev.run(dev_arrivals[:n_seg * 2], segments=2, device_loop=True,
+                    record=True)
+        rec_dev.run(dev_arrivals[:n_seg * 3], segments=3, device_loop=True,
+                    record=True)
+
     # sharded loop: a ServerAxis over a 1-device mesh runs the whole scan
     # under shard_map -- same static config hash rules as dense (the axis is
     # a frozen dataclass, hashable by mesh value). The warm run pays one
@@ -217,6 +237,24 @@ def run_retrace_audit(stats: "dict | None" = None,
                 "(expected 0)")
         for name, delta in sorted(obs_dev_rerun.new_traces().items())
     ] + [
+        Finding("retrace", "recorder-retrace", name,
+                f"{delta} traces in a warm recorder-on {segments}-segment "
+                "run (expected at most 1: the decision-ring ops churn the "
+                "cache key per segment)")
+        for name, delta in sorted(rec_warm.new_traces().items()) if delta > 1
+    ] + [
+        Finding("retrace", "recorder-rerun-recompile", name,
+                f"{delta} new traces on an identical recorder-on rerun "
+                "(expected 0: the flight recorder must not erode cache "
+                "stability)")
+        for name, delta in sorted(rec_rerun.new_traces().items())
+    ] + [
+        Finding("retrace", "recorder-device-loop-recompile", name,
+                f"{delta} new traces running recorder-on 2- and 3-segment "
+                "device loops after a warm recorder-on 4-segment run "
+                "(expected 0)")
+        for name, delta in sorted(rec_dev_rerun.new_traces().items())
+    ] + [
         Finding("retrace", "sharded-loop-recompile", name,
                 f"{delta} new traces rerunning the warm sharded closed loop "
                 "(expected 0: the ServerAxis static key must be call-stable)")
@@ -236,6 +274,12 @@ def run_retrace_audit(stats: "dict | None" = None,
                 np.sum(list(obs_rerun.deltas.values()) or [0])),
             "metrics_device_warm_traces": obs_dev_warm.new_traces(),
             "metrics_device_rerun_traces": obs_dev_rerun.new_traces(),
+            "recorder_warm_traces": rec_warm.new_traces(),
+            "recorder_rerun_traces": rec_rerun.new_traces(),
+            "recorder_rerun_total": int(
+                np.sum(list(rec_rerun.deltas.values()) or [0])),
+            "recorder_device_warm_traces": rec_dev_warm.new_traces(),
+            "recorder_device_rerun_traces": rec_dev_rerun.new_traces(),
             "sharded_warm_traces": sh_warm.new_traces(),
             "sharded_rerun_traces": sh_rerun.new_traces(),
             "sharded_rerun_total": int(

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 from ..fleet.controller import fleet_step
 from ..fleet.detect import CusumState, _cusum_update
 from ..obs import metrics as obs_metrics
+from ..obs import recorder as obs_recorder
 from ..telemetry.estimator import (
     DeviceEstimatorState,
     _bank_core,
@@ -101,6 +102,12 @@ class ClosedLoopConfig:
     # per-segment split/evict/requeue/ring/D-refresh accounting); off keeps
     # LoopCarry.metrics = None and the compiled program byte-identical
     metrics: bool = False
+    # thread the decision flight recorder (obs.recorder) through the carry:
+    # one provenance row per placement commit, sampling the estimator's
+    # pair exposure / the detector's CUSUM level *as the scheduler saw
+    # them* at segment entry; requires LoopCarry.rec to hold a real
+    # RecState, and the same off-switch contract as metrics applies
+    record: bool = False
     # server-axis layout (distributed.server_axis.ServerAxis): None or a
     # dense axis compiles the byte-identical single-device program; a
     # sharded axis runs the whole scan under shard_map with every [m, ...]
@@ -124,6 +131,7 @@ class LoopCarry(NamedTuple):
     ring_ptr: jax.Array  # i32 ring write cursor
     ring_total: jax.Array  # i32 rows ever pushed
     metrics: "obs_metrics.MetricFrame | None" = None  # in-carry metrics plane
+    rec: "obs_recorder.RecState | None" = None  # in-carry decision recorder
 
 
 class SegmentIn(NamedTuple):
@@ -158,6 +166,15 @@ class SegmentOut(NamedTuple):
     active_after: jax.Array  # bool[m] mask after this segment's actions
 
 
+def _require_ring(rec) -> None:
+    """Host-side structure check at trace time: a fresh ring minted inside
+    the scan body would change the carry's structure between iterations --
+    the caller owns the ring."""
+    if rec is None:
+        raise ValueError("config.record=True requires carry.rec to hold a "
+                         "RecState (see obs.recorder.init)")
+
+
 @partial(jax.jit, static_argnames=("config",))
 def run_closed_loop(
     cluster: PackedCluster,
@@ -175,6 +192,8 @@ def run_closed_loop(
     Returns the final carry (adopted wholesale by the host mirror) and the
     stacked per-segment outputs.
     """
+    if config.record:
+        _require_ring(carry.rec)
     m = int(carry.row_map.shape[0])
     R = int(carry.req_type.shape[0])
     n_seg = int(xs.arr_time.shape[1])
@@ -266,11 +285,24 @@ def run_closed_loop(
                      jax.tree_util.tree_map(lambda a: a[x.dyn_idx], dyn_stack))
 
             # the segment's event loop, telemetry on
+            if config.record:
+                # sample the estimator/detector state the scheduler consults
+                # *this* segment -- before the post-segment update below
+                rec_ctx = obs_recorder.RecCtx(
+                    n_pair=carry.bank.n_pair_t,
+                    row_of=local_rows(carry.read_row),
+                    cusum=carry.det.stat.max(axis=1),
+                    pool_row=carry.read_row,
+                    segment=carry.seen)
+            else:
+                rec_ctx = None
             with jax.named_scope("obs.segment_event_loop"):
                 trace = _trace_segment(
                     cluster_k, dyn_k, a_time, a_type, a_bytes, n_valid,
                     objective=config.objective, scorer=config.scorer,
-                    telemetry=True, metrics=config.metrics, axis=axis)
+                    telemetry=True, metrics=config.metrics,
+                    record=config.record, rec=carry.rec, rec_ctx=rec_ctx,
+                    axis=axis)
 
             # observe -> estimate: the same fused banked update the host path
             # dispatches (remap through the pool routing, fold the block);
@@ -391,7 +423,8 @@ def run_closed_loop(
                 req_n=req_cnt,
                 ring=ring, ring_ptr=(carry.ring_ptr + n_valid) % cap,
                 ring_total=carry.ring_total + n_valid,
-                metrics=mf)
+                metrics=mf,
+                rec=trace.rec if config.record else carry.rec)
             out_k = SegmentOut(
                 placement=trace.placement, was_queued=trace.was_queued,
                 place_time=trace.place_time, finish_time=trace.finish_time,
@@ -426,7 +459,9 @@ def run_closed_loop(
         req_n=axis.rep(), ring=axis.rep_tree(carry.ring),
         ring_ptr=axis.rep(), ring_total=axis.rep(),
         metrics=(obs_metrics.frame_specs(axis)
-                 if carry.metrics is not None else None))
+                 if carry.metrics is not None else None),
+        rec=(obs_recorder.rec_specs(axis)
+             if carry.rec is not None else None))
     dyn_specs = jax.tree_util.tree_map(
         lambda a: (PartitionSpec(None, axis.axis)
                    if a.ndim >= 2 and a.shape[1] == m else PartitionSpec()),

@@ -52,8 +52,10 @@ from .scheduler import OnlineScheduler
 from .server import ServerSpec
 from .workload import FS_GRID, RS_GRID, Workload, type_index
 from ..obs import metrics as obs_metrics
+from ..obs import recorder as obs_recorder
 from ..obs import trace as obs_trace
 from ..obs.metrics import MetricFrame
+from ..obs.recorder import DecisionRing
 from ..telemetry.estimator import EstimatorBank, ScatterName, StreamingEstimator
 from ..telemetry.log import (
     ObservationLog,
@@ -137,6 +139,9 @@ class EngineResult:
     #: in-carry metrics plane (run(metrics=True)): queue depth, waiting time,
     #: Eqn-4 headroom, slowdown, per-server floor violations (repro.obs)
     metrics: MetricFrame | None = None
+    #: decision flight recorder state (run(record=True)): one provenance row
+    #: per placement commit / queue decision, in trace (arrival-sorted) order
+    decisions: "obs_recorder.RecState | None" = None
 
     @property
     def queued_indices(self) -> tuple[int, ...]:
@@ -249,6 +254,9 @@ class ConsolidationEngine:
         *,
         telemetry: bool | Literal["host", "device"] = False,
         metrics: bool = False,
+        record: bool = False,
+        rec: "obs_recorder.RecState | None" = None,
+        rec_ctx: "obs_recorder.RecCtx | None" = None,
     ) -> EngineResult:
         """Simulate arrivals [(time, workload)] to completion of all work.
 
@@ -271,15 +279,24 @@ class ConsolidationEngine:
         headroom / slowdown histograms, queue depth, per-server floor
         violations). Like telemetry, a device-engine feature: 'auto' selects
         jax for it.
+
+        ``record=True`` threads the decision flight recorder through the
+        event loop and attaches the resulting ring state as
+        ``result.decisions`` (``obs.recorder``): one provenance row per
+        placement commit or queue decision, decision-identical to an
+        unrecorded run. ``rec`` continues an existing ring across calls and
+        ``rec_ctx`` supplies estimator/detector context to sample; both
+        default per run. A device-engine feature like the others.
         """
         if telemetry not in (False, True, "host", "device"):
             raise ValueError(f"unknown telemetry mode {telemetry!r}")
         backend = backend or self.backend
         masked = self._active is not None and not self._active.all()
         if backend == "auto":
-            # telemetry, metrics, and the fleet-health mask are device-engine
-            # features: 'auto' selects jax for them regardless of trace length
-            backend = ("jax" if telemetry or masked or metrics
+            # telemetry, metrics, recording, and the fleet-health mask are
+            # device-engine features: 'auto' selects jax for them regardless
+            # of trace length
+            backend = ("jax" if telemetry or masked or metrics or record
                        or len(arrivals) >= AUTO_JAX_THRESHOLD else "numpy")
         if backend not in ("jax", "numpy"):
             raise ValueError(f"unknown engine backend {backend!r}")
@@ -287,6 +304,8 @@ class ConsolidationEngine:
             raise ValueError("telemetry requires the jax engine backend")
         if metrics and backend != "jax":
             raise ValueError("metrics requires the jax engine backend")
+        if record and backend != "jax":
+            raise ValueError("record requires the jax engine backend")
         if backend == "numpy" and masked:
             raise ValueError("server masking (set_active) requires the jax "
                              "engine backend; the numpy oracle has no mask")
@@ -295,9 +314,11 @@ class ConsolidationEngine:
                    if telemetry in (True, "host") else None)
             frame = obs_metrics.zeros(len(self.servers)) if metrics else None
             return EngineResult((), (), (), (), 0.0, 0.0, backend, obs,
-                                metrics=frame)
+                                metrics=frame, decisions=rec if record else None)
         if backend == "jax":
-            return self._run_jax(arrivals, telemetry=telemetry, metrics=metrics)
+            return self._run_jax(arrivals, telemetry=telemetry,
+                                 metrics=metrics, record=record, rec=rec,
+                                 rec_ctx=rec_ctx)
         return self._run_oracle(arrivals)
 
     # -- device backend ---------------------------------------------------
@@ -306,6 +327,9 @@ class ConsolidationEngine:
         arrivals: Sequence[tuple[float, Workload]],
         telemetry: bool | Literal["host", "device"] = False,
         metrics: bool = False,
+        record: bool = False,
+        rec: "obs_recorder.RecState | None" = None,
+        rec_ctx: "obs_recorder.RecCtx | None" = None,
     ) -> EngineResult:
         n = len(arrivals)
         times = np.asarray([t for t, _ in arrivals], np.float64)
@@ -324,7 +348,7 @@ class ConsolidationEngine:
         trace = run_trace(
             self.cluster, self.dyn, arr_time, arr_type, arr_bytes,
             objective=self.objective, scorer=scorer, telemetry=bool(telemetry),
-            metrics=metrics)
+            metrics=metrics, record=record, rec=rec, rec_ctx=rec_ctx)
         if bool(trace.deadlock):
             raise RuntimeError("deadlock: queued workloads fit no empty server")
         # observation records are per-run; the trace's arrival-sorted order is
@@ -354,6 +378,7 @@ class ConsolidationEngine:
             observations=obs,
             stream_block=block,
             metrics=trace.metrics,
+            decisions=trace.rec,
         )
 
     # -- reference oracle -------------------------------------------------
@@ -417,6 +442,10 @@ class AdaptiveResult:
     #: and d_cols_refreshed counter are device-loop-only (the host path
     #: rebuilds D wholesale and keeps detector stats in host objects)
     metrics: MetricFrame | None = None
+    #: the engine's decision flight recorder after the run (run(record=True)):
+    #: the host mirror whose ring holds every recorded placement decision,
+    #: oldest overwritten first once capacity wraps (``obs.recorder``)
+    decisions: "DecisionRing | None" = None
 
     @property
     def makespans(self) -> tuple[float, ...]:
@@ -490,6 +519,7 @@ class AdaptiveEngine:
         stream: bool = False,
         ring_capacity: int = 4096,
         fleet: "FleetController | None" = None,
+        decision_capacity: int = 1024,
     ):
         """``prior`` selects what the scheduler believes before any telemetry:
         a scalar is a uniform D prior (0.0 = optimistic "no interference" --
@@ -508,6 +538,10 @@ class AdaptiveEngine:
         stream = stream or fleet is not None  # the control plane is stream-fed
         self.stream = stream
         self.ring = ObservationRing(ring_capacity, GRID_T) if stream else None
+        # the decision flight recorder's host mirror, minted on the first
+        # run(record=True) (capacity is spent in decisions, not segments)
+        self.decision_capacity = int(decision_capacity)
+        self.decisions: DecisionRing | None = None
         # segment-engine cache: under an unchanged world (drift is None, or a
         # schedule window with no event) only the D-matrices move between
         # segments, so the engine -- and with it the PackedDynamics tables and
@@ -597,6 +631,32 @@ class AdaptiveEngine:
         self._engine_cache[key] = engine
         return engine
 
+    def _decision_ring(self) -> DecisionRing:
+        """The recorder's host mirror, minted on first use."""
+        if self.decisions is None:
+            self.decisions = DecisionRing(self.decision_capacity)
+        return self.decisions
+
+    def _recorder_ctx(self, segment: int) -> "obs_recorder.RecCtx":
+        """Per-segment recorder context from the live host-side state --
+        what the *next* engine dispatch's scheduler will consult."""
+        if self.fleet is not None:
+            # stamp with the controller's live burn-in clock -- the device
+            # loop stamps carry.seen, which starts at _segments_seen
+            return self.fleet.recorder_ctx(self.fleet._segments_seen)
+        m = len(self.servers)
+        if self.bank is not None:
+            n_pair = self.bank.stacked_state().n_pair_t
+        else:
+            n_pair = jnp.asarray(
+                np.stack([np.asarray(e.n_pair).T for e in self.estimators]),
+                jnp.float32)
+        ident = jnp.arange(m, dtype=jnp.int32)
+        return obs_recorder.RecCtx(
+            n_pair=n_pair, row_of=ident,
+            cusum=jnp.zeros((m,), jnp.float32),  # no detector in the loop
+            pool_row=ident, segment=jnp.int32(segment))
+
     # -- the loop ---------------------------------------------------------
     def run(
         self,
@@ -606,6 +666,7 @@ class AdaptiveEngine:
         *,
         device_loop: bool = False,
         metrics: bool = False,
+        record: bool = False,
     ) -> AdaptiveResult:
         """Alternate ``segments`` trace chunks with estimator refreshes.
 
@@ -638,6 +699,14 @@ class AdaptiveEngine:
         paths. On the device loop the frame rides the scan carry; here it is
         merged per segment on the host -- same decision-level counters, with
         the device-only extras noted on :class:`AdaptiveResult`.
+
+        ``record=True`` threads the decision flight recorder through every
+        segment's event loop (``obs.recorder``): one provenance row per
+        placement, sampling the estimator pair-exposure / detector CUSUM
+        state the segment's scheduler consulted, accumulated into one ring
+        (``self.decisions``, capacity ``decision_capacity``) across segments
+        and returned on ``result.decisions``. Decisions are unchanged; on
+        the device loop the ring rides the scan carry.
         """
         if device_loop:
             if on_segment is not None:
@@ -645,9 +714,11 @@ class AdaptiveEngine:
                     "device_loop=True runs all segments in one compiled "
                     "program; there is no per-segment host point for "
                     "on_segment -- use the host-alternating path")
-            return self._run_device_loop(arrivals, segments, metrics=metrics)
+            return self._run_device_loop(arrivals, segments, metrics=metrics,
+                                         record=record)
         m = len(self.servers)
         frame = obs_metrics.zeros(m) if metrics else None
+        ring = self._decision_ring() if record else None
         ordered = sorted(arrivals, key=lambda tw: tw[0])
         bounds = np.linspace(0, len(ordered), segments + 1).astype(int)
         results, n_obs, t_starts, health = [], [], [], []
@@ -659,11 +730,15 @@ class AdaptiveEngine:
                 chunk = [(t0, w) for w in requeue] + chunk
                 requeue = []
             engine = self.engine_for_segment(k)
+            rec_kw = (dict(record=True, rec=ring.state,
+                           rec_ctx=self._recorder_ctx(k))
+                      if record else {})
             events: "tuple[HealthEvent, ...]" = ()
             if self.stream:
                 # fleet-scale path: the segment's rows go trace -> ring ->
                 # one banked estimator update without leaving the device
-                res = engine.run(chunk, telemetry="device", metrics=metrics)
+                res = engine.run(chunk, telemetry="device", metrics=metrics,
+                                 **rec_kw)
                 used = 0
                 if res.stream_block is not None:
                     # estimators consume the segment's FULL block; the ring
@@ -681,9 +756,12 @@ class AdaptiveEngine:
                     else:
                         used = self.bank.update_device(res.stream_block)
             else:
-                res = engine.run(chunk, telemetry=True, metrics=metrics)
+                res = engine.run(chunk, telemetry=True, metrics=metrics,
+                                 **rec_kw)
                 used = sum(est.update(res.observations.for_server(s))
                            for s, est in enumerate(self.estimators))
+            if record and res.decisions is not None:
+                ring.adopt(res.decisions)  # the next segment continues it
             if metrics:
                 # the same closed-loop accounting the device scan keeps in
                 # its carry, from the host's own bookkeeping
@@ -714,12 +792,12 @@ class AdaptiveEngine:
             if on_segment is not None:
                 on_segment(k, res, self)
         return AdaptiveResult(tuple(results), tuple(n_obs), tuple(t_starts),
-                              tuple(health), metrics=frame)
+                              tuple(health), metrics=frame, decisions=ring)
 
     # -- the fused device-resident loop -----------------------------------
     def _run_device_loop(
         self, arrivals: Sequence[tuple[float, Workload]], segments: int,
-        *, metrics: bool = False,
+        *, metrics: bool = False, record: bool = False,
     ) -> AdaptiveResult:
         """One ``run_closed_loop`` dispatch for the whole multi-segment run.
 
@@ -827,6 +905,7 @@ class AdaptiveEngine:
                 solo_eps=h["solo_eps"], est_max_lost_frac=h["max_lost_frac"],
                 use_pallas=h["use_pallas"], interpret=h["interpret"])
             frame0 = obs_metrics.zeros(m) if metrics else None
+            rec0 = self._decision_ring().state if record else None
             fc = self.fleet
             if fc is not None:
                 fc._require_bound()
@@ -837,7 +916,7 @@ class AdaptiveEngine:
                     fail_floor=fc.fail_floor, min_exposure=fc.min_exposure,
                     det_max_lost_frac=fc.max_lost_frac,
                     confidence_floor=float(e0.confidence_floor),
-                    metrics=metrics, **est_h)
+                    metrics=metrics, record=record, **est_h)
                 carry0 = LoopCarry(
                     bank=fc.pool.bank.stacked_state(), det=fc.detector.state,
                     row_map=jnp.asarray(fc.pool.row_of, jnp.int32),
@@ -849,12 +928,12 @@ class AdaptiveEngine:
                     req_n=jnp.int32(0),
                     ring=self.ring._buf, ring_ptr=jnp.int32(self.ring.ptr),
                     ring_total=jnp.int32(self.ring.total),
-                    metrics=frame0)
+                    metrics=frame0, rec=rec0)
             else:
                 config = ClosedLoopConfig(
                     objective=self.objective, scorer=scorer, fleet=False,
                     confidence_floor=float(e0.confidence_floor),
-                    metrics=metrics, **est_h)
+                    metrics=metrics, record=record, **est_h)
                 carry0 = LoopCarry(
                     bank=self.bank.stacked_state(), det=CusumState.zeros(m),
                     row_map=jnp.arange(m, dtype=jnp.int32),
@@ -865,7 +944,7 @@ class AdaptiveEngine:
                     req_n=jnp.int32(0),
                     ring=self.ring._buf, ring_ptr=jnp.int32(self.ring.ptr),
                     ring_total=jnp.int32(self.ring.total),
-                    metrics=frame0)
+                    metrics=frame0, rec=rec0)
             xs = SegmentIn(
                 arr_time=jnp.asarray(arr_time), arr_type=jnp.asarray(arr_type),
                 arr_bytes=jnp.asarray(arr_bytes), dyn_idx=jnp.asarray(dyn_idx),
@@ -929,9 +1008,12 @@ class AdaptiveEngine:
             self.ring._buf = final.ring
             self.ring.ptr = int(final.ring_ptr)
             self.ring.total = int(final.ring_total)
+            if record:
+                self.decisions.adopt(final.rec)
             log = obs_trace.active_log()
             if metrics and log is not None:
                 log.snapshot("closed_loop.metrics",
                              obs_metrics.snapshot(final.metrics))
         return AdaptiveResult(tuple(results), tuple(n_obs), tuple(t0s),
-                              tuple(health), metrics=final.metrics)
+                              tuple(health), metrics=final.metrics,
+                              decisions=self.decisions if record else None)

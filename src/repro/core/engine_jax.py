@@ -65,6 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..obs import metrics as obs_metrics
+from ..obs import recorder as obs_recorder
 from .binpack_jax import (
     PackedCluster,
     _choose_from_scores,
@@ -149,6 +150,8 @@ class EngineState(NamedTuple):
     # in-carry metrics plane; None (an empty pytree) unless metrics=True, so
     # the uninstrumented program is byte-identical to the pre-metrics jaxpr
     metrics: "obs_metrics.MetricFrame | None" = None
+    # decision flight recorder (same off-switch contract as metrics)
+    rec: "obs_recorder.RecState | None" = None
 
 
 class EngineTrace(NamedTuple):
@@ -165,6 +168,7 @@ class EngineTrace(NamedTuple):
     obs_lost: jax.Array  # f32[n] (zeros unless telemetry=True)
     obs_logr: jax.Array  # f32[n] (zeros unless telemetry=True)
     metrics: "obs_metrics.MetricFrame | None" = None  # None unless metrics=True
+    rec: "obs_recorder.RecState | None" = None  # None unless record=True
 
 
 def corun_rates(
@@ -206,6 +210,9 @@ def _trace_segment(
     n_steps: int | None = None,
     telemetry: bool = False,
     metrics: bool = False,
+    record: bool = False,
+    rec: "obs_recorder.RecState | None" = None,
+    rec_ctx: "obs_recorder.RecCtx | None" = None,
     axis=None,
 ) -> EngineTrace:
     """Trace body of :func:`run_trace`, with a *traced* arrival count.
@@ -237,6 +244,12 @@ def _trace_segment(
         m_g = m * axis.shards
     else:
         lo, m_g = 0, m
+    if record:
+        rec0 = rec if rec is not None else obs_recorder.init(2 * n)
+        ctx = rec_ctx if rec_ctx is not None else obs_recorder.default_ctx(
+            m, m_g)
+    else:
+        rec0 = None
 
     diag = jnp.diagonal(cluster.D, axis1=1, axis2=2)  # [m, T]
     comp_delta = cluster.rs[None, :] + cluster.resident * cluster.fs[None, :]  # [m, T]
@@ -273,6 +286,7 @@ def _trace_segment(
         obs_lost=jnp.zeros((n,), jnp.float32),
         obs_logr=jnp.zeros((n,), jnp.float32),
         metrics=obs_metrics.zeros(m) if metrics else None,
+        rec=rec0,
     )
 
     def score_fast(st, wtypes):
@@ -321,10 +335,11 @@ def _trace_segment(
         if sharded:
             # score-local-then-argmin-allreduce: only (score, index) scalars
             # cross the mesh; tie-breaking is the dense first-global-index
-            return _choose_from_scores(axis, score, m)
+            best, ok = _choose_from_scores(axis, score, m)
+            return best, ok, score
         best = argmin_with_margin(score)  # oracle tie-breaking (lowest index)
         ok = jnp.any(feasible, axis=1)
-        return jnp.where(ok, best, QUEUED), ok
+        return jnp.where(ok, best, QUEUED), ok, score
 
     def apply_delta(st, server, wtype, sign):
         """counts update + canonical refresh of the touched server's sums.
@@ -364,14 +379,22 @@ def _trace_segment(
             colog_lost=st.colog_lost.at[server].set(sums[2 * T:3 * T]),
         )
 
-    def place_if(st, found, idx, server, wtype, nbytes, t, queue_on_fail):
+    def place_if(st, found, idx, server, wtype, nbytes, t, queue_on_fail,
+                 score_row=None):
         """Commit arrival ``idx`` to ``server`` when ``found``, else queue it.
 
         Conditional writes are expressed as scatters whose index is pushed
         out of bounds (and therefore dropped) on the untaken side -- much
         cheaper inside the event loop than materializing and merging two
         full states.
+
+        ``score_row`` (record=True only) is the committed candidate's
+        feasibility-masked score over this shard's servers -- the recorder's
+        provenance for *why* this server won.
         """
+        if record:
+            server_g = jnp.where(found, server, QUEUED)
+            qdepth = jnp.sum(st.queued, dtype=jnp.int32)
         server = jnp.where(found, server, 0)
         st = apply_delta(st, server, wtype, jnp.where(found, 1.0, 0.0))
         if sharded:
@@ -399,6 +422,24 @@ def _trace_segment(
             placement=st.placement.at[on_place].set(server),
             place_time=st.place_time.at[on_place].set(t),
         )
+        if metrics or record:
+            # Eqn-4 headroom of the committed server, post-commit: how much
+            # of the degradation budget this placement left on the table
+            if sharded:
+                s_l = jnp.clip(server - lo, 0, m - 1)
+                owned = (server >= lo) & (server < lo + m)
+                d_pred = jnp.clip(st.col0[s_l] - diag[s_l], 0.0, 1.0)
+                present = st.counts[s_l] > 0
+                maxd_s = jnp.max(jnp.where(present, d_pred, -jnp.inf))
+                maxd_s = jnp.where(jnp.any(present), maxd_s, 0.0)
+                # single-owner broadcast: the consumers replicate
+                maxd_s = axis.pmin(jnp.where(owned, maxd_s, jnp.inf))
+            else:
+                d_pred = jnp.clip(st.col0[server] - diag[server], 0.0, 1.0)
+                present = st.counts[server] > 0
+                maxd_s = jnp.max(jnp.where(present, d_pred, -jnp.inf))
+                maxd_s = jnp.where(jnp.any(present), maxd_s, 0.0)
+            headroom = cluster.degradation_limit - maxd_s
         if metrics:
             placed = found.astype(jnp.int32)
             mf = obs_metrics.count(st.metrics, "placements", placed)
@@ -410,30 +451,54 @@ def _trace_segment(
             mf = obs_metrics.observe(
                 mf, "waiting_time", t - arr_time[jnp.clip(idx, 0, n - 1)],
                 weight=w)
-            # Eqn-4 headroom of the committed server, post-commit: how much
-            # of the degradation budget this placement left on the table
             if sharded:
-                s_l = jnp.clip(server - lo, 0, m - 1)
-                owned = (server >= lo) & (server < lo + m)
-                d_pred = jnp.clip(st.col0[s_l] - diag[s_l], 0.0, 1.0)
-                present = st.counts[s_l] > 0
-                maxd_s = jnp.max(jnp.where(present, d_pred, -jnp.inf))
-                maxd_s = jnp.where(jnp.any(present), maxd_s, 0.0)
-                # single-owner broadcast: the histogram add replicates
-                maxd_s = axis.pmin(jnp.where(owned, maxd_s, jnp.inf))
                 col = jax.nn.one_hot(
                     jnp.where(found & owned, s_l, m), m, dtype=jnp.float32)
             else:
-                d_pred = jnp.clip(st.col0[server] - diag[server], 0.0, 1.0)
-                present = st.counts[server] > 0
-                maxd_s = jnp.max(jnp.where(present, d_pred, -jnp.inf))
-                maxd_s = jnp.where(jnp.any(present), maxd_s, 0.0)
                 col = jax.nn.one_hot(
                     jnp.where(found, server, m), m, dtype=jnp.float32)
-            mf = obs_metrics.observe(
-                mf, "headroom", cluster.degradation_limit - maxd_s, weight=w)
+            mf = obs_metrics.observe(mf, "headroom", headroom, weight=w)
             mf = obs_metrics.add_server(mf, "placements", col)
             st = st._replace(metrics=mf)
+        if record:
+            # provenance row: candidates from the committed pick's score row
+            # (all_gather-ed so every shard records the identical global
+            # top-K), estimator/detector context owner-sampled at the chosen
+            # server and pmin-broadcast like the headroom above
+            score_g = axis.all_gather(score_row) if sharded else score_row
+            cand, csc = obs_recorder.top_candidates(score_g)
+            margin = obs_recorder.tie_margin(csc)
+            if ctx.n_pair is None:
+                npmin = jnp.float32(-1.0)
+            elif sharded:
+                rowi = jnp.clip(ctx.row_of[s_l], 0, ctx.n_pair.shape[0] - 1)
+                val = obs_recorder.pair_exposure_min(
+                    ctx.n_pair[rowi], st.counts[s_l], wtype)
+                npmin = axis.pmin(jnp.where(owned, val, jnp.inf))
+            else:
+                rowi = jnp.clip(ctx.row_of[server], 0,
+                                ctx.n_pair.shape[0] - 1)
+                npmin = obs_recorder.pair_exposure_min(
+                    ctx.n_pair[rowi], st.counts[server], wtype)
+            if sharded:
+                cus = axis.pmin(jnp.where(owned, ctx.cusum[s_l], jnp.inf))
+            else:
+                cus = ctx.cusum[server]
+            if queue_on_fail:  # arrival-time decision: always one row
+                rec_on = jnp.asarray(True)
+                kind = jnp.where(found, obs_recorder.KIND_ARRIVE,
+                                 obs_recorder.KIND_QUEUED)
+            else:  # drain commit: a row only when something placed
+                rec_on = found
+                kind = jnp.int32(obs_recorder.KIND_DRAIN)
+            st = st._replace(rec=obs_recorder.record_row(
+                st.rec, on=rec_on, arrival=idx, segment=ctx.segment,
+                server=server_g, kind=kind, qdepth=qdepth,
+                pool_row=jnp.where(found, ctx.pool_row[server], -1),
+                cand=cand, scores=csc, t=t,
+                headroom=jnp.where(found, headroom, 0.0), margin=margin,
+                n_pair_min=jnp.where(found, npmin, jnp.float32(-1.0)),
+                cusum=jnp.where(found, cus, 0.0)))
         return st
 
     def advance(st, rates, dt):
@@ -474,27 +539,34 @@ def _trace_segment(
         widx = jnp.full((W + 1,), n, jnp.int32).at[slot_of].min(
             jnp.arange(n, dtype=jnp.int32))[:W]
         in_window = widx < n
-        servers_w, ok_w = greedy_pick(st, arr_type[jnp.clip(widx, 0, n - 1)])
+        servers_w, ok_w, sc_w = greedy_pick(st, arr_type[jnp.clip(widx, 0, n - 1)])
         ok_w &= in_window
         found_w = jnp.any(ok_w)
         w_first = jnp.argmax(ok_w)
         q_w, srv_w = widx[w_first], servers_w[w_first]
 
+        # the recorder needs the committed candidate's score row as well;
+        # keeping it out of the cond when record=False preserves the
+        # uninstrumented program structure
         def full_scan(_):
             # every window candidate failed but more are queued: score them all
-            servers, ok = greedy_pick(st, arr_type)  # [n]
+            servers, ok, sc = greedy_pick(st, arr_type)  # [n]
             cand = st.queued & ok
             q = jnp.argmax(cand)
-            return q, servers[q], jnp.any(cand)
+            out = (q, servers[q], jnp.any(cand))
+            return out + (sc[q],) if record else out
 
         def window_hit(_):
-            return q_w, srv_w, found_w
+            out = (q_w, srv_w, found_w)
+            return out + (sc_w[w_first],) if record else out
 
-        q, server, found = jax.lax.cond(
+        picked = jax.lax.cond(
             ~found_w & (qlen > W), full_scan, window_hit, operand=None)
+        q, server, found = picked[:3]
+        score_row = picked[3] if record else None
 
         st = place_if(st, found, q, server, arr_type[q], arr_bytes[q], st.now,
-                      queue_on_fail=False)
+                      queue_on_fail=False, score_row=score_row)
         act_any = jnp.any(st.slot_type >= 0)
         if sharded:
             act_any = axis.any(act_any)
@@ -581,9 +653,9 @@ def _trace_segment(
         if metrics:
             st = st._replace(metrics=obs_metrics.count(st.metrics, "arrivals", 1))
         wtype, nbytes = arr_type[st.ai], arr_bytes[st.ai]
-        servers, ok = greedy_pick(st, wtype[None])
+        servers, ok, sc = greedy_pick(st, wtype[None])
         st = place_if(st, ok[0], st.ai, servers[0], wtype, nbytes, t_arr,
-                      queue_on_fail=True)
+                      queue_on_fail=True, score_row=sc[0] if record else None)
         return st._replace(ai=st.ai + 1)
 
     def is_done(st):
@@ -670,12 +742,12 @@ def _trace_segment(
         st, _ = jax.lax.while_loop(cond, body, (st0, jnp.int32(0)))
     return EngineTrace(st.placement, st.was_queued, st.place_time, st.finish_time,
                        st.makespan, st.max_deg, st.deadlock, st.obs_co, st.obs_lost,
-                       st.obs_logr, st.metrics)
+                       st.obs_logr, st.metrics, st.rec)
 
 
 @partial(jax.jit,
          static_argnames=("objective", "scorer", "n_steps", "telemetry",
-                          "metrics", "axis"))
+                          "metrics", "record", "axis"))
 def run_trace(
     cluster: PackedCluster,
     dyn: PackedDynamics,
@@ -688,6 +760,9 @@ def run_trace(
     n_steps: int | None = None,
     telemetry: bool = False,
     metrics: bool = False,
+    record: bool = False,
+    rec: "obs_recorder.RecState | None" = None,
+    rec_ctx: "obs_recorder.RecCtx | None" = None,
     axis=None,
 ) -> EngineTrace:
     """Run one arrival trace to completion entirely on device.
@@ -723,6 +798,15 @@ def run_trace(
     decisions are unchanged, and with the flag off the slot is ``None`` --
     an empty pytree -- so the compiled program is byte-identical.
 
+    ``record=True`` threads the decision flight recorder (``obs.recorder``)
+    through the loop: one packed provenance row per placement commit or
+    queue-at-arrival decision, returned on ``EngineTrace.rec``. Same
+    off-switch contract as ``metrics``; recording never feeds back into
+    scoring, so recorded runs stay decision-identical. ``rec`` continues an
+    existing ring (defaults to a fresh ring of capacity 2n) and ``rec_ctx``
+    supplies the estimator/detector context to sample (defaults to the
+    no-estimator context).
+
     ``axis`` (a :class:`~repro.distributed.server_axis.ServerAxis`) shards
     every ``[m, ...]`` input over its mesh and runs the event loop SPMD:
     each shard scores and books its own servers, and only the per-event
@@ -733,31 +817,57 @@ def run_trace(
         return _trace_segment(
             cluster, dyn, arr_time, arr_type, arr_bytes,
             jnp.int32(arr_time.shape[0]), objective=objective, scorer=scorer,
-            n_steps=n_steps, telemetry=telemetry, metrics=metrics)
+            n_steps=n_steps, telemetry=telemetry, metrics=metrics,
+            record=record, rec=rec, rec_ctx=rec_ctx)
 
     m_g = cluster.m
     axis.validate(m_g)
 
-    def seg(cluster_l, dyn_l, a_time, a_type, a_bytes, n_valid):
-        return _trace_segment(
-            cluster_l, dyn_l, a_time, a_type, a_bytes, n_valid,
-            objective=objective, scorer=scorer, n_steps=n_steps,
-            telemetry=telemetry, metrics=metrics, axis=axis)
+    if record:
+        # resolve defaults *outside* the shard_map so rec/rec_ctx arrive as
+        # operands with well-defined specs (ctx rows shard, the ring
+        # replicates)
+        n = int(arr_time.shape[0])
+        rec = rec if rec is not None else obs_recorder.init(2 * n)
+        rec_ctx = rec_ctx if rec_ctx is not None else \
+            obs_recorder.default_ctx(m_g, m_g)
+
+        def seg(cluster_l, dyn_l, a_time, a_type, a_bytes, n_valid,
+                rec_l, ctx_l):
+            return _trace_segment(
+                cluster_l, dyn_l, a_time, a_type, a_bytes, n_valid,
+                objective=objective, scorer=scorer, n_steps=n_steps,
+                telemetry=telemetry, metrics=metrics, record=True,
+                rec=rec_l, rec_ctx=ctx_l, axis=axis)
+
+        extra_in = (obs_recorder.rec_specs(axis),
+                    obs_recorder.ctx_specs(axis, rec_ctx))
+        extra_args = (rec, rec_ctx)
+    else:
+        def seg(cluster_l, dyn_l, a_time, a_type, a_bytes, n_valid):
+            return _trace_segment(
+                cluster_l, dyn_l, a_time, a_type, a_bytes, n_valid,
+                objective=objective, scorer=scorer, n_steps=n_steps,
+                telemetry=telemetry, metrics=metrics, axis=axis)
+
+        extra_in = ()
+        extra_args = ()
 
     out_specs = EngineTrace(
         placement=axis.rep(), was_queued=axis.rep(), place_time=axis.rep(),
         finish_time=axis.rep(), makespan=axis.rep(), max_deg=axis.rep(),
         deadlock=axis.rep(), obs_co=axis.rep(), obs_lost=axis.rep(),
         obs_logr=axis.rep(),
-        metrics=obs_metrics.frame_specs(axis) if metrics else None)
+        metrics=obs_metrics.frame_specs(axis) if metrics else None,
+        rec=obs_recorder.rec_specs(axis) if record else None)
     mapped = axis.shard_map(
         seg,
         in_specs=(axis.shard_leading(cluster, m_g),
                   axis.shard_leading(dyn, m_g),
-                  axis.rep(), axis.rep(), axis.rep(), axis.rep()),
+                  axis.rep(), axis.rep(), axis.rep(), axis.rep()) + extra_in,
         out_specs=out_specs)
     return mapped(cluster, dyn, arr_time, arr_type, arr_bytes,
-                  jnp.int32(arr_time.shape[0]))
+                  jnp.int32(arr_time.shape[0]), *extra_args)
 
 
 # --- array-native local search (core/refine.py's device backend) ----------------

@@ -488,6 +488,23 @@ class FleetController:
             jnp.float32(self.min_exposure))
         return np.asarray(ratio, np.float64)
 
+    def recorder_ctx(self, segment: int):
+        """The decision recorder's per-segment context (``obs.recorder``):
+        the pair-exposure bank rows, pool read routing, and per-server CUSUM
+        levels exactly as the *next* segment's scheduler consults them --
+        call after this segment's ``observe`` (mirroring the device loop,
+        which samples the carry at segment entry)."""
+        from ..obs import recorder as obs_recorder
+
+        self._require_bound()
+        read_row = jnp.asarray(self.pool._read_row, jnp.int32)
+        return obs_recorder.RecCtx(
+            n_pair=self.pool.bank.stacked_state().n_pair_t,
+            row_of=read_row,
+            cusum=self.detector.state.stat.max(axis=1),
+            pool_row=read_row,
+            segment=jnp.int32(segment))
+
     # -- the per-segment step ---------------------------------------------
     def observe(self, block: RingBlock, segment: int) -> tuple[int, list[HealthEvent]]:
         """Fold one segment's telemetry in; diagnose; act.

@@ -19,8 +19,24 @@ Three layers, hot to cold:
               timeline) from an ``EngineResult``/``AdaptiveResult``, and
               flattens frames into ``BENCH_*.json`` records.
 
-``python -m repro.obs --selfcheck`` exercises the histogram math and the
-report path end to end; CI runs it in the static-analysis job.
+Two colder layers ride on the same carry mechanism:
+
+``recorder``  the decision flight recorder: a fixed-capacity ring of packed
+              per-placement provenance rows (chosen server, top-k candidate
+              scores, tie margin, Eqn-4 headroom, queue depth, pair-
+              confidence exposure, CUSUM level, pool row) written inside the
+              event loop behind a static ``record=`` flag -- recorder-off
+              programs stay byte-identical, recorder-on runs stay
+              decision-identical.
+``explain``   host-side regret attribution over an exported ring: forced
+              true-dynamics replays decompose each recorded decision's
+              makespan contribution into estimation error / queueing delay /
+              detection lag, telescoping exactly to the total regret.
+
+``python -m repro.obs --selfcheck`` exercises the histogram math, the report
+path, and the recorder/attribution plane end to end; CI runs it in the
+static-analysis job. ``python -m repro.obs --explain`` renders a recorded
+run's per-decision timeline and attribution table.
 """
 from .metrics import (
     COUNTERS,
@@ -34,6 +50,7 @@ from .metrics import (
     count,
     counter_value,
     gauge_max,
+    gauge_set,
     gauge_value,
     hist_counts,
     merge,
@@ -42,6 +59,7 @@ from .metrics import (
     snapshot,
     zeros,
 )
+from .recorder import KIND_ARRIVE, KIND_DRAIN, KIND_QUEUED, REC_TOPK, DecisionRing, RecCtx, RecState
 from .trace import SpanLog, disable_tracing, enable_tracing, span
 
 __all__ = [
@@ -49,9 +67,16 @@ __all__ = [
     "GAUGES",
     "HIST_BINS",
     "HISTOGRAMS",
+    "KIND_ARRIVE",
+    "KIND_DRAIN",
+    "KIND_QUEUED",
     "PER_SERVER",
+    "REC_TOPK",
+    "DecisionRing",
     "HistSpec",
     "MetricFrame",
+    "RecCtx",
+    "RecState",
     "SpanLog",
     "add_server",
     "count",
@@ -59,6 +84,7 @@ __all__ = [
     "disable_tracing",
     "enable_tracing",
     "gauge_max",
+    "gauge_set",
     "gauge_value",
     "hist_counts",
     "merge",

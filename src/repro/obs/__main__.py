@@ -1,13 +1,25 @@
-"""CLI: run reports and the metrics-plane selfcheck.
+"""CLI: run reports, regret attribution, and the obs-plane selfcheck.
 
   python -m repro.obs              render a run report from a small canned
                                    adaptive run (2 servers, metrics on)
   python -m repro.obs --json       same, as a JSON snapshot
+  python -m repro.obs --explain    record a canned stationary adaptive run
+                                   with the decision flight recorder, replay
+                                   it against the true dynamics, and render
+                                   the per-decision timeline + per-segment
+                                   regret attribution + worst-decisions
+                                   tables (``obs.explain``); exit 1 if the
+                                   ring fails to reconstruct the run or the
+                                   attribution does not sum to the regret
   python -m repro.obs --selfcheck  verify the histogram/percentile math, the
                                    chunk-invariant merge, counter exactness
-                                   against a host-visible engine result, and
-                                   the report render; exit 1 on any failure
-                                   (CI runs this in the static-analysis job)
+                                   against a host-visible engine result, the
+                                   report render, decision-ring provenance
+                                   (record=True leaves decisions bit-
+                                   identical and the ring reconstructs every
+                                   placement), and attribution exactness;
+                                   exit 1 on any failure (CI runs this in
+                                   the static-analysis job)
 """
 from __future__ import annotations
 
@@ -114,11 +126,120 @@ def _check_engine_counters(failures: "list[str]") -> None:
             failures.append(f"render_report output missing {needle!r}")
 
 
+#: gap between the canned stationary segments (each segment restarts from an
+#: empty cluster, so this only keeps the trace clock readable)
+_SEG_GAP = 60.0
+
+
+def _canned_adaptive(segments: int = 3, per_seg: int = 10):
+    """A stationary adaptive run with the flight recorder on: the same
+    heavy LLC-resident workload mixture replayed per segment (the
+    benchmarks/adaptive_regret.py recipe at small scale, near-simultaneous
+    arrivals so co-run pressure is real), scheduler learning from a cold
+    optimistic prior. Returns (engine, result, per-segment chunks in the
+    trace order the recorded arrival ids index)."""
+    from ..core.engine import AdaptiveEngine
+    from ..core.server import M1, M2
+    from ..core.workload import FS_GRID, RS_GRID, Workload, snap_to_grid
+
+    rng = np.random.default_rng(3)
+    seg, t = [], 0.0
+    for _ in range(per_seg):
+        fs = float(rng.choice(FS_GRID[10:15]))
+        w = snap_to_grid(Workload(fs=fs, rs=float(rng.choice(RS_GRID[5:8])),
+                                  data_total=fs * 8))
+        t += float(rng.exponential(2e-5))
+        seg.append((t, w))
+    arrivals = [(t + k * _SEG_GAP, w) for k in range(segments)
+                for t, w in seg]
+    eng = AdaptiveEngine([M1, M2], prior=0.0, decay=0.997)
+    res = eng.run(arrivals, segments=segments, record=True)
+    ordered = sorted(arrivals, key=lambda tw: tw[0])
+    bounds = np.linspace(0, len(ordered), segments + 1).astype(int)
+    chunks = [ordered[bounds[k]:bounds[k + 1]] for k in range(segments)]
+    return eng, res, chunks
+
+
+def _attribute(eng, res, chunks):
+    """Run obs.explain over a recorded adaptive run; returns
+    (attributions, reconstruction failures)."""
+    from ..core.contention import profile_pairwise_fast
+    from . import explain
+
+    cache = {}
+    for s in eng.servers:
+        if s not in cache:
+            cache[s] = profile_pairwise_fast(s)
+    true_D = [cache[s] for s in eng.servers]
+    atts = explain.attribute_run(
+        res.decisions, chunks, lambda k: eng.servers, lambda k: true_D,
+        alpha=eng.alpha, objective=eng.objective, durations=res.durations)
+    recon = explain.check_reconstruction(
+        res.decisions, [r.placements for r in res.segments])
+    return atts, recon
+
+
+def _check_recorder(failures: "list[str]") -> None:
+    """record=True must not change one decision, and the ring must be a
+    faithful record: one commit row per placement, queue rows for queued
+    arrivals, nothing else."""
+    from ..core.engine import ConsolidationEngine
+    from ..core.server import M1, M2
+    from ..core.workload import FS_GRID, RS_GRID, Workload, snap_to_grid
+    from . import explain
+    from .recorder import DecisionRing
+
+    arrivals = []
+    for i in range(12):
+        w = snap_to_grid(Workload(
+            fs=FS_GRID[(5 * i) % len(FS_GRID)], rs=RS_GRID[i % len(RS_GRID)],
+            data_total=48e6))
+        arrivals.append((0.5 * i, w))
+    engine = ConsolidationEngine([M1, M2], backend="jax")
+    base = engine.run(arrivals)
+    rec = engine.run(arrivals, record=True)
+    if list(base.placements) != list(rec.placements):
+        failures.append("recorder: record=True changed placements "
+                        f"({base.placements} vs {rec.placements})")
+    if list(base.was_queued) != list(rec.was_queued):
+        failures.append("recorder: record=True changed queueing behaviour")
+    if rec.decisions is None:
+        failures.append("recorder: record=True returned no decision ring")
+        return
+    ring = DecisionRing(int(rec.decisions.block.ints.shape[0]))
+    ring.adopt(rec.decisions)
+    for f in explain.check_reconstruction(ring, [rec.placements]):
+        failures.append(f"recorder: {f}")
+    queued_rows = {int(a) for a, kind in zip(ring.columns()["arrival"],
+                                             ring.columns()["kind"])
+                   if int(kind) == 2}
+    want_queued = {a for a, q in enumerate(rec.was_queued) if q}
+    if queued_rows != want_queued:
+        failures.append(f"recorder: queue rows {sorted(queued_rows)} != "
+                        f"queued arrivals {sorted(want_queued)}")
+
+
+def _check_attribution(failures: "list[str]") -> None:
+    """The telescoping-replay gate: per-decision deltas sum to each
+    segment's regret within 1e-5 and the ring reconstructs the run."""
+    from . import explain
+
+    eng, res, chunks = _canned_adaptive(segments=2, per_seg=8)
+    atts, recon = _attribute(eng, res, chunks)
+    if len(atts) != 2:
+        failures.append(
+            f"attribution: expected 2 attributed segments, got {len(atts)}")
+    failures.extend(f"attribution: {f}" for f in explain.check_exactness(atts))
+    failures.extend(f"attribution: {f}" for f in recon)
+
+
 def selfcheck() -> int:
     failures: list[str] = []
     for name, check in (("percentiles-vs-numpy", _check_percentiles),
                         ("merge-chunk-invariance", _check_merge),
-                        ("engine-counter-exactness", _check_engine_counters)):
+                        ("engine-counter-exactness", _check_engine_counters),
+                        ("recorder-ring-provenance", _check_recorder),
+                        ("attribution-exactness", _check_attribution)):
         before = len(failures)
         check(failures)
         status = "ok" if len(failures) == before else "FAIL"
@@ -133,18 +254,64 @@ def main(argv: "list[str] | None" = None) -> int:
         prog="python -m repro.obs",
         description="metrics-plane run reports and selfcheck")
     parser.add_argument("--selfcheck", action="store_true",
-                        help="verify histogram/merge/counter invariants")
+                        help="verify histogram/merge/counter/recorder/"
+                             "attribution invariants")
+    parser.add_argument("--explain", action="store_true",
+                        help="record a canned stationary adaptive run and "
+                             "render its regret attribution")
     parser.add_argument("--json", action="store_true",
                         help="print the metric snapshot as JSON")
     args = parser.parse_args(argv)
     if args.selfcheck:
         return selfcheck()
+    if args.explain:
+        return explain_main(json_out=args.json)
     res = _canned_run()
     if args.json:
         print(json.dumps(M.snapshot(res.metrics), indent=2))
     else:
         print(report.render_report(res, title="canned consolidation run"))
     return 0
+
+
+def explain_main(json_out: bool = False) -> int:
+    """``--explain``: the flight-recorder post-mortem, end to end."""
+    from . import explain
+
+    eng, res, chunks = _canned_adaptive()
+    atts, recon = _attribute(eng, res, chunks)
+    exact = explain.check_exactness(atts)
+    if json_out:
+        print(json.dumps({
+            "segments": [{
+                "segment": a.segment,
+                "duration_oracle": a.duration_oracle,
+                "duration_forced": a.duration_forced,
+                "regret": a.regret,
+                "replay_gap": a.replay_gap,
+                "by_bucket": a.by_bucket,
+                "decisions": [vars(d) for d in a.decisions],
+            } for a in atts],
+            "reconstruction_failures": recon,
+            "exactness_failures": exact,
+        }, indent=2))
+    else:
+        n_dec = sum(len(a.decisions) for a in atts)
+        print("== decision flight recorder: regret attribution "
+              "(canned stationary adaptive run) ==\n")
+        print(f"segments: {len(atts)}   recorded decisions: "
+              f"{len(res.decisions)}   attributed: {n_dec}\n")
+        print("per-decision timeline:")
+        print(explain.render_timeline(atts))
+        print("\nper-segment attribution (deltas telescope to the regret):")
+        print(explain.render_attribution(atts))
+        print("\nworst 10 decisions (by attributed regret):")
+        print(report.worst_decisions_table(atts))
+        status = "ok" if not recon else "FAIL"
+        print(f"\nring reconstructs every placement of the run: {status}")
+    for f in recon + exact:
+        print(f"  FAIL: {f}", file=sys.stderr)
+    return 1 if (recon or exact) else 0
 
 
 if __name__ == "__main__":

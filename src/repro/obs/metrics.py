@@ -137,10 +137,17 @@ class MetricFrame(NamedTuple):
 
 
 def zeros(m: int) -> MetricFrame:
-    """An empty frame for an m-server fleet."""
+    """An empty frame for an m-server fleet.
+
+    Gauges start at ``-inf``, not 0: a high-water mark of 0 is a legitimate
+    reading (e.g. requeue_peak on a run with no evictions), and the
+    sentinel keeps "never set" distinguishable from "peak was zero"
+    (``gauge_set``). ``-inf`` is the identity of max, so ``gauge_max`` and
+    ``merge`` need no special cases.
+    """
     return MetricFrame(
         counters=jnp.zeros((len(COUNTERS),), jnp.int32),
-        gauges=jnp.zeros((len(GAUGES),), jnp.float32),
+        gauges=jnp.full((len(GAUGES),), -jnp.inf, jnp.float32),
         hist=jnp.zeros((len(HISTOGRAMS), HIST_BINS), jnp.float32),
         per_server=jnp.zeros((m, len(PER_SERVER)), jnp.float32),
     )
@@ -223,7 +230,15 @@ def counter_value(frame: MetricFrame, name: str) -> int:
 
 
 def gauge_value(frame: MetricFrame, name: str) -> float:
-    return float(np.asarray(frame.gauges)[_G_IDX[name]])
+    """The gauge's peak; 0.0 when it was never set (see ``gauge_set``)."""
+    v = float(np.asarray(frame.gauges)[_G_IDX[name]])
+    return v if np.isfinite(v) else 0.0
+
+
+def gauge_set(frame: MetricFrame, name: str) -> bool:
+    """Whether the gauge recorded at least one value (its ``-inf``
+    never-set sentinel has been displaced)."""
+    return bool(np.isfinite(np.asarray(frame.gauges)[_G_IDX[name]]))
 
 
 def hist_counts(frame: MetricFrame, name: str) -> np.ndarray:
@@ -279,7 +294,10 @@ def snapshot(frame: MetricFrame) -> dict:
         hists[spec.name] = entry
     return {
         "counters": {n: int(counters[i]) for i, n in enumerate(COUNTERS)},
-        "gauges": {n: float(gauges[i]) for i, n in enumerate(GAUGES)},
+        "gauges": {n: (float(gauges[i]) if np.isfinite(gauges[i]) else 0.0)
+                   for i, n in enumerate(GAUGES)},
+        "gauges_set": {n: bool(np.isfinite(gauges[i]))
+                       for i, n in enumerate(GAUGES)},
         "histograms": hists,
         "per_server": {
             n: [float(x) for x in server_values(frame, n)]

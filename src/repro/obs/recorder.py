@@ -1,0 +1,281 @@
+"""Decision flight recorder: device-resident placement provenance.
+
+The metrics plane (PR 8) aggregates -- counters, histograms, high-water
+gauges -- and can say *that* a floor violation or a regret spike happened,
+never *why decision k chose server s*. This module records the decision
+itself: one packed row per placement commit (and per queue-at-arrival
+decision), written as pure array ops inside ``engine_jax``'s event loop at
+the single point every placement flows through (``place_if``), and carried
+through ``run_closed_loop``'s scan exactly like the ObservationRing before
+it. The off switch is the PR 8 pattern: a static ``record=`` flag plus a
+None-defaulted carry field, so recorder-off programs keep the byte-identical
+structure, and recorder-on runs are *decision-identical* -- nothing here
+feeds back into scoring.
+
+Row layout (``REC_TOPK = K`` candidate slots; DESIGN.md section 16):
+
+  ints   i32[cap, 6 + K]
+    0 arrival   trace-local arrival index (requeued work first, then chunk)
+    1 segment   closed-loop segment counter (``LoopCarry.seen`` at entry)
+    2 server    committed global server id, or -1 when queued
+    3 kind      0 = placed at arrival, 1 = drain commit, 2 = queued
+    4 qdepth    queued arrivals at commit (drain rows count the drained one)
+    5 pool_row  the estimator read row the scheduler consulted (-1 queued)
+    6: cand     the K lowest-score candidate global server ids (-1 = none
+                feasible / past the fleet edge)
+  floats f32[cap, 5 + K]
+    0 time      commit time, chunk-relative (the trace clock)
+    1 headroom  Eqn-4 budget left on the committed server, post-commit
+    2 margin    runner-up score minus winner score (argmin tie margin)
+    3 n_pair    min pair-confidence exposure over the newly co-located
+                pairs (-1 = no co-residents, or no estimator context)
+    4 cusum     the committed server's CUSUM level (max of the S+/S- pair)
+    5: score    the K candidate scores (inf = infeasible)
+
+Sharded runs keep every recorded field replicated: per-decision scalars are
+owner-computed and ``pmin``-broadcast (the ``place_if`` metrics idiom), and
+the candidate row is ``all_gather``-ed before the top-K cut, so the ring is
+bitwise identical on every shard and rides the scan carry under
+``axis.rep_tree`` specs -- the epilogue adopts any one shard's copy.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: candidate slots recorded per decision (winner first)
+REC_TOPK = 4
+
+#: row kinds (the ints[:, 3] column)
+KIND_ARRIVE, KIND_DRAIN, KIND_QUEUED = 0, 1, 2
+
+_INT_COLS = 6 + REC_TOPK
+_FLOAT_COLS = 5 + REC_TOPK
+
+
+class DecisionBlock(NamedTuple):
+    """The packed decision rows (two arrays, like ``RingBlock``)."""
+
+    ints: jax.Array  # i32[cap, 6 + K]
+    floats: jax.Array  # f32[cap, 5 + K]
+
+    arrival = property(lambda s: s.ints[:, 0])
+    segment = property(lambda s: s.ints[:, 1])
+    server = property(lambda s: s.ints[:, 2])
+    kind = property(lambda s: s.ints[:, 3])
+    qdepth = property(lambda s: s.ints[:, 4])
+    pool_row = property(lambda s: s.ints[:, 5])
+    cand = property(lambda s: s.ints[:, 6:])
+    time = property(lambda s: s.floats[:, 0])
+    headroom = property(lambda s: s.floats[:, 1])
+    margin = property(lambda s: s.floats[:, 2])
+    n_pair_min = property(lambda s: s.floats[:, 3])
+    cusum = property(lambda s: s.floats[:, 4])
+    score = property(lambda s: s.floats[:, 5:])
+
+
+class RecState(NamedTuple):
+    """The recorder's carry: ring block + cursor, one pytree."""
+
+    block: DecisionBlock
+    ptr: jax.Array  # i32 next write slot (kept modulo capacity)
+    total: jax.Array  # i32 rows ever recorded
+
+
+class RecCtx(NamedTuple):
+    """Estimator/detector context the recorder samples at each commit.
+
+    Built once per segment (host: from the live fleet objects; device loop:
+    from the scan carry) -- the state the scheduler *consulted*, not the
+    post-segment state.
+
+    ``n_pair``/``row_of``/``cusum`` are shard-local under a sharded axis
+    (bank rows and detector state shard by server row); ``pool_row`` stays
+    global/replicated so the recorded row is meaningful fleet-wide.
+    """
+
+    n_pair: "jax.Array | None"  # f32[rows, T, T] pair-exposure bank rows
+    row_of: jax.Array  # i32[m_local] local server -> local bank row
+    cusum: jax.Array  # f32[m_local] per-server CUSUM level (max S+/S-)
+    pool_row: jax.Array  # i32[m_global] recorded read row per server
+    segment: jax.Array  # i32 segment counter at entry
+
+
+def init(capacity: int) -> RecState:
+    """Fresh all-sentinel recorder state (``ints`` -1, ``floats`` 0)."""
+    if capacity <= 0:
+        raise ValueError(f"capacity must be positive (got {capacity})")
+    return RecState(
+        block=DecisionBlock(
+            ints=jnp.full((capacity, _INT_COLS), -1, jnp.int32),
+            floats=jnp.zeros((capacity, _FLOAT_COLS), jnp.float32)),
+        ptr=jnp.int32(0), total=jnp.int32(0))
+
+
+def default_ctx(m_local: int, m_global: "int | None" = None) -> RecCtx:
+    """Context for engines without an estimator in the loop: identity pool
+    routing, zero CUSUM, no pair-exposure table (n_pair records -1)."""
+    m_global = m_local if m_global is None else m_global
+    return RecCtx(
+        n_pair=None,
+        row_of=jnp.arange(m_local, dtype=jnp.int32),
+        cusum=jnp.zeros((m_local,), jnp.float32),
+        pool_row=jnp.arange(m_global, dtype=jnp.int32),
+        segment=jnp.int32(0))
+
+
+def rec_specs(axis) -> RecState:
+    """All-replicated PartitionSpec tree matching a ``RecState`` (the ring
+    is bitwise identical on every shard; any copy is the ring)."""
+    rep = axis.rep()
+    return RecState(block=DecisionBlock(ints=rep, floats=rep),
+                    ptr=rep, total=rep)
+
+
+def ctx_specs(axis, ctx: RecCtx) -> RecCtx:
+    """PartitionSpec tree for a globally-shaped ``RecCtx``: per-server state
+    shards by leading row, the global pool map and clock replicate."""
+    return RecCtx(
+        n_pair=None if ctx.n_pair is None else axis.spec(),
+        row_of=axis.spec(), cusum=axis.spec(),
+        pool_row=axis.rep(), segment=axis.rep())
+
+
+def top_candidates(score_row: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(cand i32[K], score f32[K]): the K lowest-score global candidates.
+
+    ``score_row`` is the feasibility-masked score over all *global* servers
+    (infeasible = inf). Stable argsort reproduces the scheduler's
+    lowest-index tie-break; infeasible slots keep their inf score but null
+    their candidate id. Fleets smaller than K pad with (-1, inf).
+    """
+    m = int(score_row.shape[0])
+    idx = jnp.arange(m, dtype=jnp.int32)
+    if m < REC_TOPK:
+        pad = REC_TOPK - m
+        score_row = jnp.concatenate(
+            [score_row, jnp.full((pad,), jnp.inf, score_row.dtype)])
+        idx = jnp.concatenate([idx, jnp.full((pad,), -1, jnp.int32)])
+    order = jnp.argsort(score_row)[:REC_TOPK]  # stable: index breaks ties
+    sc = score_row[order]
+    cand = jnp.where(jnp.isfinite(sc), idx[order], -1)
+    return cand, sc
+
+
+def tie_margin(scores: jax.Array) -> jax.Array:
+    """Runner-up minus winner from a sorted top-K score row (inf when there
+    is no finite runner-up -- a one-horse race has no tie to break)."""
+    return jnp.where(jnp.isfinite(scores[1]) & jnp.isfinite(scores[0]),
+                     scores[1] - scores[0], jnp.inf)
+
+
+def pair_exposure_min(n_pair_row: jax.Array, counts_row: jax.Array,
+                      wtype: jax.Array) -> jax.Array:
+    """Min pair-confidence exposure over the newly co-located pairs.
+
+    ``n_pair_row`` is one estimator row's decayed per-pair exposure table
+    [T, T] (orientation-insensitive here: both orientations are min-ed, so
+    the estimator's target-major transpose does not matter);
+    ``counts_row`` the committed server's *post-commit* type counts. Returns
+    -1 when the placement co-locates with nothing.
+    """
+    T = int(counts_row.shape[0])
+    t = jnp.clip(wtype, 0, T - 1)
+    co = counts_row - jax.nn.one_hot(t, T, dtype=counts_row.dtype)
+    present = co > 0
+    both = jnp.minimum(n_pair_row[t, :], n_pair_row[:, t])  # [T]
+    val = jnp.min(jnp.where(present, both, jnp.inf))
+    return jnp.where(jnp.any(present), val, jnp.float32(-1.0))
+
+
+def record_row(rec: RecState, *, on, arrival, segment, server, kind, qdepth,
+               pool_row, cand, scores, t, headroom, margin, n_pair_min,
+               cusum) -> RecState:
+    """Write one decision row when ``on``; a dropped (out-of-bounds) scatter
+    otherwise -- the ``place_if`` conditional-write idiom, so the recorder
+    adds no branches to the event loop."""
+    cap = int(rec.block.ints.shape[0])
+    slot = jnp.where(on, rec.ptr % cap, cap)  # OOB -> dropped under jit
+    i32 = jnp.int32
+    ints_row = jnp.concatenate([
+        jnp.stack([i32(arrival), i32(segment), i32(server), i32(kind),
+                   i32(qdepth), i32(pool_row)]),
+        cand.astype(jnp.int32)])
+    f32 = jnp.float32
+    floats_row = jnp.concatenate([
+        jnp.stack([f32(t), f32(headroom), f32(margin), f32(n_pair_min),
+                   f32(cusum)]),
+        scores.astype(jnp.float32)])
+    one = jnp.asarray(on).astype(jnp.int32)
+    return RecState(
+        block=DecisionBlock(
+            ints=rec.block.ints.at[slot].set(ints_row),
+            floats=rec.block.floats.at[slot].set(floats_row)),
+        ptr=(rec.ptr + one) % cap,
+        total=rec.total + one)
+
+
+class DecisionRing:
+    """Host mirror of the device-resident decision ring.
+
+    Like :class:`~repro.telemetry.log.ObservationRing`: a host object
+    holding the device ``RecState``, adopted wholesale after each recorded
+    run (host-alternating per segment, device loop once per dispatch).
+    Capacity is spent in decisions; once full, the oldest are overwritten --
+    flight-recorder semantics.
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._state = init(capacity)
+
+    @property
+    def state(self) -> RecState:
+        return self._state
+
+    @property
+    def ptr(self) -> int:
+        return int(self._state.ptr)
+
+    @property
+    def total(self) -> int:
+        return int(self._state.total)
+
+    def __len__(self) -> int:
+        return min(self.total, self.capacity)
+
+    def adopt(self, state: RecState) -> None:
+        """Adopt a post-run device state (the host mirror of the carry)."""
+        if int(state.block.ints.shape[0]) != self.capacity:
+            raise ValueError(
+                f"adopting a ring of capacity {int(state.block.ints.shape[0])}"
+                f" into one of {self.capacity}")
+        self._state = state
+
+    def columns(self) -> dict[str, np.ndarray]:
+        """Decoded rows, oldest-first, as named numpy columns.
+
+        Never-written slots are dropped; wrapped rings unwrap so row 0 is
+        the oldest surviving decision.
+        """
+        ints = np.asarray(self._state.block.ints)
+        floats = np.asarray(self._state.block.floats, np.float64)
+        n = len(self)
+        if self.total > self.capacity:  # wrapped: oldest row sits at ptr
+            p = self.ptr
+            sel = np.concatenate([np.arange(p, self.capacity), np.arange(p)])
+        else:
+            sel = np.arange(n)
+        ints, floats = ints[sel], floats[sel]
+        return {
+            "arrival": ints[:, 0], "segment": ints[:, 1],
+            "server": ints[:, 2], "kind": ints[:, 3],
+            "qdepth": ints[:, 4], "pool_row": ints[:, 5],
+            "cand": ints[:, 6:],
+            "time": floats[:, 0], "headroom": floats[:, 1],
+            "margin": floats[:, 2], "n_pair_min": floats[:, 3],
+            "cusum": floats[:, 4], "score": floats[:, 5:],
+        }

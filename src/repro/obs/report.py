@@ -16,8 +16,10 @@ from . import metrics as M
 
 
 def _fmt(v: float) -> str:
-    if not np.isfinite(v):
+    if np.isnan(v):
         return "nan"
+    if np.isinf(v):
+        return "inf" if v > 0 else "-inf"
     if v == 0:
         return "0"
     if abs(v) >= 1e5 or abs(v) < 1e-3:
@@ -117,11 +119,65 @@ def health_timeline(health) -> str:
     return "\n".join(lines) if lines else "  (no health events)"
 
 
+def phase_tree(log) -> str:
+    """Render a ``trace.SpanLog`` as an indented host-phase tree: children
+    nest under the span that was open when they started, in open order."""
+    spans = sorted(log.spans, key=lambda s: s.id)
+    if not spans:
+        return "  (no spans)"
+    by_id = {s.id: s for s in spans}
+    children: dict = {}
+    roots = []
+    for s in spans:
+        if s.parent is None or s.parent not in by_id:
+            roots.append(s)
+        else:
+            children.setdefault(s.parent, []).append(s)
+    width = max(2 * s.depth + len(s.name) for s in spans)
+    lines = []
+
+    def walk(s, indent):
+        label = "  " * indent + s.name
+        attrs = " ".join(f"{k}={v}" for k, v in s.attrs.items())
+        lines.append(f"  {label:<{width}}  {s.duration_s * 1e3:>10.3f} ms"
+                     + (f"  {attrs}" if attrs else ""))
+        for c in children.get(s.id, ()):
+            walk(c, indent + 1)
+
+    for r in roots:
+        walk(r, 0)
+    return "\n".join(lines)
+
+
+def worst_decisions_table(attributions, k: int = 10) -> str:
+    """The k costliest recorded decisions by attributed makespan delta
+    (``obs.explain`` output): the rows an operator triages first."""
+    decs = sorted((d for att in attributions for d in att.decisions),
+                  key=lambda d: -d.delta)[:k]
+    if not decs:
+        return "  (no recorded decisions)"
+    lines = ["  seg  arr  kind   srv  shadow   delta(s)  bucket     "
+             "    margin   headroom    cusum"]
+    kind_name = {0: "place", 1: "drain", 2: "queue"}
+    for d in decs:
+        shadow = "-" if d.shadow_server is None else str(d.shadow_server)
+        lines.append(
+            f"  {d.segment:>3} {d.arrival:>4}  {kind_name.get(d.kind, '?'):<5}"
+            f" {d.server:>4}  {shadow:>6} {d.delta:>10.4g}  {d.bucket:<10}"
+            f" {_fmt(d.margin):>9} {_fmt(d.headroom):>10} {_fmt(d.cusum):>8}")
+    return "\n".join(lines)
+
+
 def render_report(result=None, frame: "M.MetricFrame | None" = None,
-                  title: str = "run report") -> str:
+                  title: str = "run report", attribution=None,
+                  spans=None) -> str:
     """The full text report. ``result`` may be an ``EngineResult`` or an
     ``AdaptiveResult`` (its ``metrics`` supplies the frame unless ``frame``
-    is given explicitly); a bare frame renders without the run header."""
+    is given explicitly); a bare frame renders without the run header.
+    ``attribution`` (a list of ``obs.explain.SegmentAttribution``) appends
+    the worst-decisions section; ``spans`` (a ``trace.SpanLog``, defaulting
+    to the active one when tracing is enabled) appends the host-phase
+    tree."""
     if frame is None:
         frame = getattr(result, "metrics", None)
     if frame is None:
@@ -146,23 +202,35 @@ def render_report(result=None, frame: "M.MetricFrame | None" = None,
     health = getattr(result, "health", None)
     if health:
         lines += ["", "health-event timeline:", health_timeline(health)]
+    if attribution is not None:
+        lines += ["", "worst 10 decisions (by attributed regret):",
+                  worst_decisions_table(attribution)]
+    if spans is None:
+        from . import trace
+        spans = trace.active_log()
+    if spans is not None and spans.spans:
+        lines += ["", "host phases:", phase_tree(spans)]
     return "\n".join(lines)
 
 
 def snapshot_records(frame: M.MetricFrame, prefix: str = "obs"):
     """Flatten a frame into (name, value, unit) rows for BENCH_*.json.
 
-    Counters all land; histograms contribute count/p50/p99 when non-empty;
-    gauges land when set. Keeps benchmark records scalar and greppable.
+    Counters all land; histograms contribute count/p50/p99 when non-empty.
+    Every gauge lands with an explicit ``_set`` companion (1 = recorded at
+    least once): a peak of 0 is a legitimate reading (requeue_peak on a run
+    with no evictions), so presence in the record set must not encode
+    set-ness -- ``--compare`` needs the set stable across runs.
     """
     records = []
     for n in M.COUNTERS:
         records.append((f"{prefix}/counter_{n}", float(M.counter_value(frame, n)),
                         "count"))
     for n in M.GAUGES:
-        v = M.gauge_value(frame, n)
-        if v > 0:
-            records.append((f"{prefix}/gauge_{n}", float(v), "peak"))
+        records.append((f"{prefix}/gauge_{n}", float(M.gauge_value(frame, n)),
+                        "peak"))
+        records.append((f"{prefix}/gauge_{n}_set",
+                        1.0 if M.gauge_set(frame, n) else 0.0, "bool"))
     for spec in M.HISTOGRAMS:
         total = float(M.hist_counts(frame, spec.name).sum())
         if total <= 0:

@@ -59,15 +59,32 @@ class Span:
     t_start: float
     duration_s: float
     attrs: dict
+    #: stable per-log id, assigned at span *open* so parents number before
+    #: their children even though children close (and append) first
+    id: int = 0
+    #: id of the enclosing open span, None for top-level phases
+    parent: "int | None" = None
+    #: nesting depth (0 = top level); redundant with the parent chain but
+    #: kept on the row so JSONL consumers can indent without a join
+    depth: int = 0
 
 
 class SpanLog:
-    """Collects spans and metric snapshots; optionally appends JSONL rows."""
+    """Collects spans and metric snapshots; optionally appends JSONL rows.
+
+    Nested :meth:`span` calls are linked: each span records the ``id`` of
+    the span that was open when it started (``parent``) and its nesting
+    ``depth``, so a dispatch phase that packs, compiles, and adopts inside
+    an outer segment span renders as a tree rather than a flat list
+    (:func:`repro.obs.report.phase_tree`).
+    """
 
     def __init__(self, path: "str | pathlib.Path | None" = None):
         self.path = pathlib.Path(path) if path is not None else None
         self.spans: "list[Span]" = []
         self._t0 = time.time()
+        self._next_id = 0
+        self._open: "list[int]" = []  # ids of currently open spans
 
     def _write(self, row: dict) -> None:
         if self.path is None:
@@ -78,14 +95,24 @@ class SpanLog:
 
     @contextlib.contextmanager
     def span(self, name: str, **attrs):
+        sid = self._next_id
+        self._next_id += 1
+        parent = self._open[-1] if self._open else None
+        depth = len(self._open)
+        self._open.append(sid)
         t0 = time.time()
         p0 = time.perf_counter()
-        with jax.profiler.TraceAnnotation(name):
-            yield
+        try:
+            with jax.profiler.TraceAnnotation(name):
+                yield
+        finally:
+            self._open.pop()
         dt = time.perf_counter() - p0
-        self.spans.append(Span(name, t0, dt, attrs))
+        self.spans.append(Span(name, t0, dt, attrs, id=sid, parent=parent,
+                               depth=depth))
         self._write({"kind": "span", "name": name, "t_start": t0,
-                     "duration_s": dt, "attrs": attrs})
+                     "duration_s": dt, "attrs": attrs, "id": sid,
+                     "parent": parent, "depth": depth})
 
     def snapshot(self, name: str, payload: dict) -> None:
         """Record a point-in-time payload (e.g. ``metrics.snapshot(frame)``)."""

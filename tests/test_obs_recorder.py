@@ -1,0 +1,190 @@
+"""Decision flight recorder: ring provenance, identity, and attribution.
+
+The contracts the ``repro.obs.recorder`` / ``repro.obs.explain`` pair make
+(DESIGN.md §16): the fixed-capacity ring keeps exactly the last
+``min(capacity, rows-ever-written)`` on-rows oldest-first regardless of
+wrap or off-rows interleaved between them; ``record=True`` changes no
+decision (the conditional scatter adds no branch to the event loop); the
+host-alternating and fused device-loop paths write bit-identical rings;
+and the telescoping forced replay reconstructs every recorded placement
+and sums per-decision deltas exactly to each segment's regret.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.configs.base import MeshConfig
+from repro.core import AdaptiveEngine, ConsolidationEngine, M1, M2
+from repro.core.workload import FS_GRID, RS_GRID, Workload, snap_to_grid
+from repro.fleet import FleetController
+from repro.obs import explain
+from repro.obs import recorder as R
+
+SEG_GAP = 10.0
+
+
+def _segment(seed: int, n: int, gap: float = 2e-5):
+    rng = np.random.default_rng(seed)
+    out, t = [], 0.0
+    for _ in range(n):
+        fs = float(rng.choice(FS_GRID[10:14]))
+        w = snap_to_grid(Workload(fs=fs, rs=float(rng.choice(RS_GRID[5:8])),
+                                  data_total=fs * 6))
+        t += float(rng.exponential(gap))
+        out.append((t, w))
+    return out
+
+
+def _replay(seg, segments):
+    return [(t + k * SEG_GAP, w) for k in range(segments) for t, w in seg]
+
+
+def _dense_arrivals(n=12):
+    out = []
+    for i in range(n):
+        w = snap_to_grid(Workload(
+            fs=FS_GRID[(5 * i) % len(FS_GRID)], rs=RS_GRID[i % len(RS_GRID)],
+            data_total=48e6))
+        out.append((0.5 * i, w))
+    return out
+
+
+# -- ring semantics ------------------------------------------------------------
+
+def _write(rec, i: int, on: bool, segment: int):
+    import jax.numpy as jnp
+    k = R.REC_TOPK
+    return R.record_row(
+        rec, on=jnp.asarray(on), arrival=i, segment=segment,
+        server=i % 3, kind=i % 2, qdepth=i % 4, pool_row=i % 3,
+        cand=jnp.arange(k, dtype=jnp.int32) + i,
+        scores=jnp.arange(k, dtype=jnp.float32) + 0.5 * i,
+        t=0.25 * i, headroom=0.125 * i, margin=float(i), n_pair_min=-1.0,
+        cusum=0.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(cap=st.integers(1, 8),
+       ons=st.lists(st.booleans(), min_size=0, max_size=24))
+def test_ring_keeps_last_on_rows_oldest_first(cap, ons):
+    """Wrap invariance: whatever mixture of on/off writes crosses the
+    capacity boundary, the decoded ring is the last min(cap, n_on) on-rows
+    in write order, and off-rows leave no trace."""
+    rec = R.init(cap)
+    expect = []
+    for i, on in enumerate(ons):
+        rec = _write(rec, i, on, segment=i // 3)
+        if on:
+            expect.append(i)
+    expect = expect[-cap:]
+    ring = R.DecisionRing(cap)
+    ring.adopt(rec)
+    assert len(ring) == len(expect)
+    cols = ring.columns()
+    np.testing.assert_array_equal(cols["arrival"], expect)
+    np.testing.assert_array_equal(cols["segment"], [i // 3 for i in expect])
+    np.testing.assert_array_equal(cols["server"], [i % 3 for i in expect])
+    np.testing.assert_array_equal(cols["kind"], [i % 2 for i in expect])
+    np.testing.assert_allclose(cols["time"], [0.25 * i for i in expect])
+    np.testing.assert_allclose(cols["margin"], [float(i) for i in expect])
+    for i, row in zip(expect, cols["cand"]):
+        np.testing.assert_array_equal(row, np.arange(R.REC_TOPK) + i)
+
+
+def test_ring_adopt_rejects_capacity_mismatch():
+    ring = R.DecisionRing(4)
+    with pytest.raises(ValueError, match="capacity"):
+        ring.adopt(R.init(8))
+
+
+def test_record_requires_jax_backend():
+    engine = ConsolidationEngine([M1, M2], backend="numpy")
+    with pytest.raises(ValueError, match="jax"):
+        engine.run(_dense_arrivals(2), record=True)
+
+
+# -- decision identity and provenance ------------------------------------------
+
+def test_record_on_off_decision_identity():
+    """record=True must be bitwise decision-invariant: same placements,
+    same queueing, same finish times, same makespan."""
+    engine = ConsolidationEngine([M1, M2], backend="jax")
+    arrivals = _dense_arrivals()
+    base = engine.run(arrivals)
+    rec = engine.run(arrivals, record=True)
+    assert list(base.placements) == list(rec.placements)
+    assert list(base.was_queued) == list(rec.was_queued)
+    np.testing.assert_array_equal(np.asarray(base.finish_times),
+                                  np.asarray(rec.finish_times))
+    assert base.makespan == rec.makespan
+    assert base.decisions is None and rec.decisions is not None
+
+
+def test_ring_reconstructs_every_placement():
+    engine = ConsolidationEngine([M1, M2], backend="jax")
+    res = engine.run(_dense_arrivals(), record=True)
+    ring = R.DecisionRing(int(res.decisions.block.ints.shape[0]))
+    ring.adopt(res.decisions)
+    assert explain.check_reconstruction(ring, [res.placements]) == []
+    cols = ring.columns()
+    queued_rows = {int(a) for a, k in zip(cols["arrival"], cols["kind"])
+                   if int(k) == R.KIND_QUEUED}
+    assert queued_rows == {a for a, q in enumerate(res.was_queued) if q}
+
+
+def test_adaptive_record_off_returns_none():
+    arrivals = _replay(_segment(3, 4), 2)
+    eng = AdaptiveEngine([M1] * 2, prior=0.0, stream=True)
+    assert eng.run(arrivals, segments=2).decisions is None
+    assert eng.run(arrivals, segments=2, device_loop=True).decisions is None
+
+
+def test_host_device_record_parity():
+    """The host-alternating path and the fused device loop write the same
+    ring bit-for-bit: same rows, same order, same sampled context."""
+    segments, n_seg = 4, 10
+    arrivals = _replay(_segment(11, n_seg), segments)
+    rings = []
+    for device_loop in (False, True):
+        eng = AdaptiveEngine([M1] * 3, prior=0.0, decay=1.0, stream=True,
+                             fleet=FleetController(mesh=MeshConfig()),
+                             ring_capacity=256)
+        res = eng.run(arrivals, segments=segments, device_loop=device_loop,
+                      record=True)
+        assert res.decisions is not None
+        rings.append(res.decisions.columns())
+    host, dev = rings
+    assert set(host) == set(dev)
+    for name in ("arrival", "segment", "server", "kind", "qdepth",
+                 "pool_row", "cand"):
+        np.testing.assert_array_equal(host[name], dev[name], err_msg=name)
+    for name in ("time", "headroom", "margin", "n_pair_min", "cusum",
+                 "score"):
+        np.testing.assert_allclose(host[name], dev[name], rtol=1e-5,
+                                   atol=1e-6, err_msg=name)
+
+
+# -- regret attribution --------------------------------------------------------
+
+def test_attribution_sums_to_regret_and_reconstructs():
+    """The telescoping-replay gate: per-decision deltas sum to each
+    segment's regret within 1e-5 and the forced replay reconstructs every
+    recorded placement."""
+    from repro.obs.__main__ import _attribute, _canned_adaptive
+
+    eng, res, chunks = _canned_adaptive(segments=2, per_seg=8)
+    atts, recon = _attribute(eng, res, chunks)
+    assert len(atts) == 2
+    assert recon == []
+    assert explain.check_exactness(atts) == []
+    for att in atts:
+        assert len(att.decisions) > 0
+        total = sum(d.delta for d in att.decisions)
+        assert abs(total - att.regret) <= 1e-5
+        assert set(att.by_bucket) <= {"aligned", "estimation", "queueing",
+                                      "detection"}
+        for d in att.decisions:
+            assert d.bucket in ("aligned", "estimation", "queueing",
+                                "detection")

@@ -133,6 +133,7 @@ PROBE = textwrap.dedent("""
     from repro.telemetry.log import RingBlock
     from repro.distributed.server_axis import ServerAxis
     import repro.obs.metrics as OM
+    import repro.obs.recorder as OR
 
     T = 23
     m, n_seg, S_cap, cap = 8, 4, 4, 256
@@ -160,18 +161,23 @@ PROBE = textwrap.dedent("""
     arr_type = jnp.asarray(rng.integers(0, T, n).astype(np.int32))
     arr_bytes = jnp.asarray(rng.uniform(2e5, 2e6, n).astype(np.float32))
     ref = run_trace(cluster, dyn, arr_time, arr_type, arr_bytes,
-                    telemetry=True, metrics=True)
+                    telemetry=True, metrics=True, record=True)
     ref = jax.tree_util.tree_map(np.asarray, ref)
     for shards in (1, 2, 4):
         ax = ServerAxis.over_host_devices(shards)
         out = run_trace(cluster, dyn, arr_time, arr_type, arr_bytes,
-                        telemetry=True, metrics=True, axis=ax)
+                        telemetry=True, metrics=True, record=True, axis=ax)
         out = jax.tree_util.tree_map(np.asarray, out)
         assert np.array_equal(ref.placement, out.placement), (shards,)
         np.testing.assert_allclose(ref.finish_time, out.finish_time, rtol=1e-5)
         np.testing.assert_allclose(ref.obs_logr, out.obs_logr,
                                    rtol=1e-5, atol=1e-6)
         assert np.array_equal(ref.metrics.counters, out.metrics.counters)
+        # decision ring: every shard holds the identical record
+        assert int(ref.rec.total) == int(out.rec.total), (shards,)
+        assert np.array_equal(ref.rec.block.ints, out.rec.block.ints), (shards,)
+        np.testing.assert_allclose(ref.rec.block.floats, out.rec.block.floats,
+                                   rtol=1e-5, atol=1e-6)
         print(f"run_trace shards={shards}: OK")
 
     # --- closed loop: fleet controller + metrics, dense vs 1/2/4 shards ------
@@ -191,7 +197,7 @@ PROBE = textwrap.dedent("""
         req_type=jnp.zeros((R,), jnp.int32),
         req_bytes=jnp.ones((R,), jnp.float32), req_n=jnp.int32(0),
         ring=ring, ring_ptr=jnp.int32(0), ring_total=jnp.int32(0),
-        metrics=OM.zeros(m))
+        metrics=OM.zeros(m), rec=OR.init(64))
     xs = SegmentIn(
         arr_time=jnp.asarray(
             np.sort(rng.uniform(0, 2, (S_cap, n_seg)), axis=1)
@@ -206,8 +212,8 @@ PROBE = textwrap.dedent("""
     Lp_t = jnp.full((m, T, T), float(np.log1p(-0.05)), jnp.float32)
     logb = jnp.asarray(np.log(rng.uniform(5e5, 2e6, (m, T))).astype(np.float32))
 
-    cfg = ClosedLoopConfig(fleet=True, metrics=True, warmup_segments=1,
-                           cusum_h=0.5)
+    cfg = ClosedLoopConfig(fleet=True, metrics=True, record=True,
+                           warmup_segments=1, cusum_h=0.5)
     ref_c, ref_y = run_closed_loop(cluster, dyn_stack, Lp_t, logb, carry0,
                                    xs, cfg)
     ref_c = jax.tree_util.tree_map(np.asarray, ref_c)
@@ -232,6 +238,12 @@ PROBE = textwrap.dedent("""
         np.testing.assert_allclose(ref_c.det.level, out_c.det.level,
                                    rtol=1e-5, atol=1e-6)
         assert np.array_equal(ref_c.ring.ints, out_c.ring.ints), (shards,)
+        assert int(ref_c.rec.total) == int(out_c.rec.total), (shards,)
+        assert np.array_equal(ref_c.rec.block.ints,
+                              out_c.rec.block.ints), (shards,)
+        np.testing.assert_allclose(ref_c.rec.block.floats,
+                                   out_c.rec.block.floats,
+                                   rtol=1e-5, atol=1e-6)
         assert np.array_equal(ref_c.metrics.counters,
                               out_c.metrics.counters), (shards,)
         np.testing.assert_allclose(ref_c.metrics.per_server,
